@@ -1,0 +1,143 @@
+"""Shared harness for the paper-figure benchmarks (Figs. 2-4).
+
+Each figure benchmark trains the same model under several aggregation
+strategies over identical data/τ randomness and reports final losses and
+accuracies.  Models: ``resnet20`` (paper-faithful, slow on CPU) or ``mlp``
+(CIFAR-shaped data flattened; fast, same protocol behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as creg
+from repro.core import connectivity, opt_alpha, topology
+from repro.core.aggregation import ServerOpt
+from repro.data.loader import FederatedLoader
+from repro.data.partition import iid_partition, sort_and_partition
+from repro.data.synthetic import cifar_like
+from repro.fl.simulator import FLSimulator
+from repro.models import registry as mreg
+from repro.optim.sgd import ClientOpt
+
+
+@dataclasses.dataclass
+class FigureResult:
+    strategy: str
+    losses: list
+    accs: list
+    seconds: float
+
+
+def make_mlp(dim=3072, width=256, n_classes=10):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (dim, width)) * dim**-0.5,
+            "b1": jnp.zeros((width,)),
+            "w2": jax.random.normal(k2, (width, n_classes)) * width**-0.5,
+            "b2": jnp.zeros((n_classes,)),
+        }
+
+    def logits(params, images):
+        x = images.reshape(images.shape[0], -1)
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def loss(params, batch):
+        lg = logits(params, batch["images"]).astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, batch["labels"][:, None], 1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    return init, logits, loss
+
+
+def run_figure(
+    *,
+    p: np.ndarray,
+    adj: np.ndarray,
+    strategies: dict,
+    non_iid: bool = False,
+    server_momentum: float = 0.0,
+    model: str = "mlp",
+    rounds: int = 30,
+    local_steps: int = 8,
+    local_batch: int = 64,
+    lr: float = 0.1,
+    n_train: int = 4000,
+    seed: int = 0,
+    eval_every: int = 2,
+) -> dict[str, FigureResult]:
+    n = len(p)
+    ds = cifar_like(n_train, snr=0.5, seed=seed)
+    test = cifar_like(1000, snr=0.5, seed=seed + 99)
+    parts = (sort_and_partition(ds, n, shards_per_client=1, seed=seed)
+             if non_iid else iid_partition(ds, n, seed=seed))
+
+    if model == "resnet20":
+        cfg = creg.get_config("resnet20-cifar")
+        md = mreg.get_model(cfg)
+        init, loss = md.init, md.loss
+        from repro.models.resnet import resnet20_logits
+
+        def logits_fn(params, images):
+            return resnet20_logits(params, cfg, images)
+    else:
+        init, logits_fn, loss = make_mlp()
+
+    test_x, test_y = jnp.asarray(test.inputs), jnp.asarray(test.labels)
+
+    @jax.jit
+    def accuracy(params):
+        return (jnp.argmax(logits_fn(params, test_x), -1) == test_y).mean()
+
+    results = {}
+    for name, (strategy, A) in strategies.items():
+        loader = FederatedLoader(ds, parts, seed=seed)  # same data order per strategy
+        sim = FLSimulator(
+            loss, n_clients=n, strategy=strategy, A=A, p=p,
+            local_steps=local_steps,
+            client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+            server_opt=ServerOpt(momentum=server_momentum),
+        )
+        params = init(jax.random.key(seed))
+        ss = sim.init_server_state(params)
+        key = jax.random.key(seed + 1)  # same τ stream per strategy
+        losses, accs = [], []
+        t0 = time.time()
+        for r in range(rounds):
+            key, sub = jax.random.split(key)
+            batch = loader.round_batch(local_steps, local_batch)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, ss, m = sim.run_round(sub, params, ss, batch, lr)
+            losses.append(float(m["loss"]))
+            if r % eval_every == 0 or r == rounds - 1:
+                accs.append((r, float(accuracy(params))))
+        results[name] = FigureResult(name, losses, accs, time.time() - t0)
+    return results
+
+
+def rounds_to(res: FigureResult, threshold: float):
+    for r, a in res.accs:
+        if a >= threshold:
+            return r
+    return None
+
+
+def print_figure_csv(figure: str, results: dict[str, FigureResult]):
+    """The paper's Figs. 2-4 are accuracy-vs-round curves; the derived column
+    carries the curve summary (early accuracy, rounds-to-90%, final loss —
+    convergence *rate* is the claim under test)."""
+    for name, res in results.items():
+        final_acc = res.accs[-1][1]
+        early = res.accs[1][1] if len(res.accs) > 1 else res.accs[0][1]
+        r90 = rounds_to(res, 0.90)
+        us = 1e6 * res.seconds / max(1, len(res.losses))
+        print(f"{figure}/{name},{us:.0f},acc_early={early:.3f};"
+              f"rounds_to_90pct={r90};final_acc={final_acc:.3f};"
+              f"final_loss={res.losses[-1]:.4f}")

@@ -1,0 +1,37 @@
+"""Paper Fig. 3: heterogeneous p = [.1,.2,.3,.1,.1,.5,.8,.1,.2,.9], ring
+topology.  Optimized vs unoptimized relay weights are distinguished (the
+paper's point: with heterogeneous connectivity, Alg. 3 matters)."""
+from __future__ import annotations
+
+from benchmarks.common import print_figure_csv, run_figure
+from repro.core import connectivity, opt_alpha, topology
+
+
+def run(rounds: int = 30, model: str = "mlp"):
+    p = connectivity.paper_heterogeneous().p
+    adj = topology.ring(10, k=1)
+    opt = opt_alpha.optimize(p, adj, sweeps=60)
+    A0 = opt_alpha.initial_weights(p, adj)
+    s0, s1 = opt_alpha.variance_proxy(p, A0), opt.S_history[-1]
+    print(f"# fig3 S(p,A): init={s0:.3f} optimized={s1:.3f}")
+    strategies = {
+        "no_dropout": ("no_dropout", None),
+        "fedavg_dropout_blind": ("fedavg_blind", None),
+        "fedavg_dropout_nonblind": ("fedavg_nonblind", None),
+        "colrel_unoptimized": ("colrel_fused", A0),
+        "colrel_optimized": ("colrel_fused", opt.A),
+    }
+    results = run_figure(p=p, adj=adj, strategies=strategies, rounds=rounds,
+                         model=model)
+    print_figure_csv("fig3", results)
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--model", default="mlp", choices=["mlp", "resnet20"])
+    a = ap.parse_args()
+    run(rounds=a.rounds, model=a.model)

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (deliverable (g)).
+
+Reads benchmarks/artifacts/dryrun/<mesh>/*.json and prints, per
+(arch × shape × mesh): the three roofline terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO ratio, and peak per-device bytes vs the 16 GB
+v5e HBM.  This is the §Roofline source of record; EXPERIMENTS.md embeds its
+output."""
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(mesh: str) -> list[dict]:
+    d = os.path.join(ARTIFACT_DIR, mesh)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def table(mesh: str = "pod16x16", *, csv: bool = True) -> list[str]:
+    lines = []
+    for rec in load(mesh):
+        name = f"roofline/{mesh}/{rec['arch']}/{rec['shape']}"
+        if rec.get("relay_mode", "faithful") != "faithful":
+            name += f"/{rec['relay_mode']}"
+        if rec["status"] == "skipped":
+            lines.append(f"{name},0,SKIP:{rec['skip_reason']}")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"{name},0,ERROR:{rec['error'][:80]}")
+            continue
+        r = rec["roofline_seconds"]
+        dom = rec["bottleneck"]
+        step_us = 1e6 * max(r.values())
+        peak = rec["per_device"]["peak_bytes"]
+        fits = "fits" if peak <= HBM_PER_CHIP else f"OVER_HBM_x{peak / HBM_PER_CHIP:.1f}"
+        ratio = rec.get("useful_flops_ratio")
+        lines.append(
+            f"{name},{step_us:.0f},"
+            f"compute={r['compute']:.3e};memory={r['memory']:.3e};"
+            f"collective={r['collective']:.3e};bottleneck={dom};"
+            f"useful_ratio={ratio if ratio is None else round(ratio, 3)};"
+            f"peak_gb={peak / 1e9:.2f};{fits}"
+        )
+    if csv:
+        for line in lines:
+            print(line)
+    return lines
+
+
+def run():
+    out = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        out += table(mesh)
+    return out
+
+
+if __name__ == "__main__":
+    run()

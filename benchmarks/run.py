@@ -1,0 +1,41 @@
+"""Benchmark orchestrator — one function per paper figure/table plus the
+framework benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default budgets are CPU-friendly (single core); ``--full`` uses paper-scale
+round counts.  The roofline rows are read from the dry-run artifacts (run
+``python -m repro.launch.dryrun --all [--multi-pod]`` first to refresh).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds (slow on CPU)")
+    ap.add_argument("--model", default="mlp", choices=["mlp", "resnet20"])
+    ap.add_argument("--skip-figures", action="store_true")
+    args = ap.parse_args()
+
+    rounds = 100 if args.full else 25
+    print("name,us_per_call,derived")
+
+    if not args.skip_figures:
+        from benchmarks import fig2_homogeneous, fig3_ring, fig4_noniid
+
+        fig2_homogeneous.run(rounds=rounds, model=args.model)
+        fig3_ring.run(rounds=rounds, model=args.model)
+        fig4_noniid.run(rounds=rounds, model=args.model)
+
+    from benchmarks import bench_opt_alpha, bench_relay_kernel, roofline
+
+    bench_opt_alpha.run()
+    bench_relay_kernel.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

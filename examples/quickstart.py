@@ -1,0 +1,66 @@
+"""Quickstart: the ColRel protocol in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Ten clients with intermittent uplinks (the paper's heterogeneous p-vector),
+a ring D2D graph, OPT-α relay weights, and 30 federated rounds of a linear
+classifier — ColRel vs blind FedAvg-with-dropout vs the no-dropout upper
+bound."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import connectivity, opt_alpha, topology
+from repro.data.loader import FederatedLoader
+from repro.data.partition import iid_partition
+from repro.data.synthetic import gaussian_classification
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+N_CLIENTS, DIM, CLASSES, ROUNDS = 10, 64, 10, 12
+
+# 1. Connectivity model + D2D topology (paper Fig. 3 setting)
+conn = connectivity.paper_heterogeneous()
+adj = topology.ring(N_CLIENTS, k=1)
+
+# 2. OPT-α: minimize the variance proxy S(p, A) s.t. unbiasedness (Alg. 3)
+res = opt_alpha.optimize(conn.p, adj, sweeps=50)
+print(f"OPT-α: S {res.S_history[0]:.2f} -> {res.S_history[-1]:.2f} "
+      f"in {res.sweeps} Gauss-Seidel sweeps")
+
+# 3. Data: IID synthetic classification, partitioned over clients
+ds = gaussian_classification(4000, dim=DIM, n_classes=CLASSES, snr=0.8, seed=0)
+test = gaussian_classification(1000, dim=DIM, n_classes=CLASSES, snr=0.8, seed=1)
+
+
+def loss_fn(params, batch):
+    logits = batch["inputs"] @ params["w"] + params["b"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(params):
+    logits = jnp.asarray(test.inputs) @ params["w"] + params["b"]
+    return float((jnp.argmax(logits, -1) == jnp.asarray(test.labels)).mean())
+
+
+# 4. Run the protocol under three aggregation strategies
+for strategy, A in [("no_dropout", None), ("fedavg_blind", None),
+                    ("colrel", res.A)]:
+    sim = FLSimulator(loss_fn, n_clients=N_CLIENTS, strategy=strategy, A=A,
+                      p=conn.p, local_steps=4,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=1e-4))
+    loader = FederatedLoader(ds, iid_partition(ds, N_CLIENTS, seed=0), seed=0)
+    params = {"w": jnp.zeros((DIM, CLASSES)), "b": jnp.zeros((CLASSES,))}
+    state = sim.init_server_state(params)
+    key = jax.random.key(42)
+    acc5 = None
+    for r in range(ROUNDS):
+        key, sub = jax.random.split(key)
+        batch = loader.round_batch(4, 16)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, m = sim.run_round(sub, params, state, batch, lr=0.5)
+        if r == 4:
+            acc5 = accuracy(params)
+    print(f"{strategy:14s} acc@5={acc5:.3f} acc@{ROUNDS}={accuracy(params):.3f} "
+          f"final_train_loss={float(m['loss']):.4f}")

@@ -1,0 +1,2 @@
+"""repro — ColRel (semi-decentralized FL with collaborative relaying) in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,78 @@
+"""Checkpointing: pytree <-> npz with '/'-joined key paths + JSON metadata.
+
+Saves the PS global model, server-optimizer state and round counter so FL
+training is resumable; restore round-trips exact dtypes/shapes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+_BF16_PREFIX = "__bf16__:"  # npz cannot store ml_dtypes.bfloat16 natively
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":
+            key = _BF16_PREFIX + key
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, *, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)  # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes validated)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path_keys
+        )
+        if _BF16_PREFIX + key in flat:
+            import ml_dtypes
+
+            arr = flat[_BF16_PREFIX + key].view(ml_dtypes.bfloat16)
+        elif key in flat:
+            arr = flat[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+
+
+def load_metadata(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,122 @@
+"""PS aggregation strategies (paper §II-D, Alg. 2, and the Fig. 2-4 baselines).
+
+All strategies consume a stacked pytree of per-client quantities (leading dim
+n) plus the round's τ mask, and produce the *global model increment* that the
+server optimizer (plain step or global momentum, paper Fig. 4) applies.
+
+Strategies
+----------
+  colrel           w=1/n blind masked sum of *relayed* updates (eq. 2)
+  colrel_fused     same update computed via the fused coefficients (optimized)
+  fedavg_blind     w=1/n blind masked sum of *raw* updates (missing ⇒ zero)
+  fedavg_nonblind  masked mean over the successful clients (PS knows ids)
+  no_dropout       plain 1/n average, perfect connectivity upper bound
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import relay as relay_lib
+from repro.utils import tree_axpy, tree_scale, tree_zeros_like
+
+
+def colrel_increment(A, tau, stacked_updates, *, n: int, fused: bool = True):
+    """ColRel PS increment.  ``fused=True`` is the optimized path (identical
+    math); ``fused=False`` materializes Δx̃ per relay (paper-faithful)."""
+    w = 1.0 / n
+    if fused:
+        return relay_lib.fused_aggregate(A, tau, stacked_updates, w=w)
+    relayed = relay_lib.relay(A, stacked_updates)
+    return relay_lib.masked_aggregate(tau, relayed, w=w)
+
+
+def fedavg_blind_increment(tau, stacked_updates, *, n: int):
+    return relay_lib.masked_aggregate(tau, stacked_updates, w=1.0 / n)
+
+
+def fedavg_nonblind_increment(tau, stacked_updates):
+    tau = jnp.asarray(tau, dtype=jnp.float32)
+    denom = jnp.maximum(tau.sum(), 1.0)
+
+    def reduce(leaf):
+        return jnp.tensordot(tau / denom, leaf.astype(jnp.float32), axes=(0, 0))
+
+    return jax.tree.map(reduce, stacked_updates)
+
+
+def no_dropout_increment(stacked_updates, *, n: int):
+    return jax.tree.map(
+        lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0), stacked_updates
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """Bundles a strategy name with its increment function."""
+
+    name: str
+    fn: Callable  # (tau, stacked_updates) -> increment pytree
+
+
+def make_aggregator(
+    strategy: str,
+    *,
+    n: int,
+    A=None,
+) -> Aggregator:
+    if strategy == "colrel":
+        if A is None:
+            raise ValueError("colrel aggregation needs a relay matrix A")
+        return Aggregator(
+            "colrel", lambda tau, upd: colrel_increment(A, tau, upd, n=n, fused=False)
+        )
+    if strategy == "colrel_fused":
+        if A is None:
+            raise ValueError("colrel aggregation needs a relay matrix A")
+        return Aggregator(
+            "colrel_fused",
+            lambda tau, upd: colrel_increment(A, tau, upd, n=n, fused=True),
+        )
+    if strategy == "fedavg_blind":
+        return Aggregator(
+            "fedavg_blind", lambda tau, upd: fedavg_blind_increment(tau, upd, n=n)
+        )
+    if strategy == "fedavg_nonblind":
+        return Aggregator(
+            "fedavg_nonblind", lambda tau, upd: fedavg_nonblind_increment(tau, upd)
+        )
+    if strategy == "no_dropout":
+        return Aggregator("no_dropout", lambda tau, upd: no_dropout_increment(upd, n=n))
+    raise ValueError(f"unknown aggregation strategy: {strategy!r}")
+
+
+# --------------------------------------------------------------------------
+# Server optimizer (paper Fig. 4 uses global momentum at the PS)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOpt:
+    """x ← x + lr · (m ← γ m + increment).  γ=0, lr=1 is plain Alg. 2."""
+
+    momentum: float = 0.0
+    lr: float = 1.0
+
+    def init(self, params):
+        if self.momentum == 0.0:
+            return None
+        return tree_zeros_like(params)
+
+    def apply(self, params, state, increment):
+        def upd(p, inc):
+            return (p.astype(jnp.float32) + self.lr * inc).astype(p.dtype)
+
+        if self.momentum == 0.0:
+            return jax.tree.map(upd, params, increment), None
+        new_state = tree_axpy(1.0, increment, tree_scale(self.momentum, state))
+        new_params = jax.tree.map(upd, params, new_state)
+        return new_params, new_state

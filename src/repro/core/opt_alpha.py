@@ -1,0 +1,272 @@
+"""OPT-α (paper Alg. 3): optimize the relay weight matrix A.
+
+Conventions
+-----------
+``A[j, i] = α_ji`` is the weight **relay** client ``j`` assigns to **origin**
+client ``i``'s update while forming its local consensus
+``Δx̃_j = Σ_i α_ji Δx_i``.  The unbiasedness condition (Lemma 1) is then the
+per-origin (column) constraint
+
+    Σ_{j ∈ N_i ∪ {i}} p_j · α_ji = 1,      α_ji ≥ 0,
+    α_ji = 0 whenever j ∉ N_i ∪ {i}.
+
+The variance proxy being minimized (paper eq. 4) is
+
+    S(p, A) = Σ_{i,l} Σ_{j ∈ N_il} p_j (1 − p_j) α_ji α_jl.
+
+Because α is supported on the closed neighborhoods, the double sum collapses
+to row sums:  S(p, A) = Σ_j p_j (1 − p_j) · (Σ_i α_ji)²  — the total mass a
+relay forwards is what multiplies its own Bernoulli uplink noise.  We use the
+collapsed form for O(n²) evaluation and keep the O(n³) literal form as a
+cross-check in the tests.
+
+The Gauss–Seidel sweep (paper eq. 7-9) updates one column at a time; each
+column subproblem is solved in closed form through its Lagrange multiplier
+λ_i, located by bisection (paper-faithful) or by an exact piecewise-linear
+solve (equivalent, used as a fast path / cross-check).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import topology
+
+
+@dataclasses.dataclass(frozen=True)
+class OptAlphaResult:
+    A: np.ndarray                 # (n, n) relay weight matrix, A[j, i] = α_ji
+    S_history: np.ndarray         # S(p, A) after each Gauss-Seidel sweep
+    feasible_columns: np.ndarray  # bool (n,): column constraint satisfiable
+    sweeps: int
+    bisection_iters_total: int
+
+
+def variance_proxy(p: np.ndarray, A: np.ndarray) -> float:
+    """S(p, A) via the collapsed row-sum form (see module docstring)."""
+    p = np.asarray(p, dtype=np.float64)
+    row_mass = A.sum(axis=1)
+    return float(np.sum(p * (1.0 - p) * row_mass**2))
+
+
+def variance_proxy_literal(p: np.ndarray, A: np.ndarray, adj: np.ndarray) -> float:
+    """S(p, A) exactly as written in paper eq. (4) — O(n³), test oracle."""
+    p = np.asarray(p, dtype=np.float64)
+    m = topology.closed_mask(adj)  # m[j, i] = j ∈ N_i ∪ {i}
+    n = p.shape[0]
+    w = p * (1.0 - p)
+    s = 0.0
+    for i in range(n):
+        for l in range(n):
+            for j in range(n):
+                if m[j, i] and m[j, l]:
+                    s += w[j] * A[j, i] * A[j, l]
+    return float(s)
+
+
+def unbiasedness_residual(p: np.ndarray, A: np.ndarray) -> np.ndarray:
+    """Per-column residual of Lemma 1: (p @ A) − 1.  Zero ⇒ unbiased."""
+    return np.asarray(p, dtype=np.float64) @ A - 1.0
+
+
+def initial_weights(p: np.ndarray, adj: np.ndarray) -> np.ndarray:
+    """Paper Alg. 3 line 1:  α_ji^(0) = 1 / ((|N_i|+1) · p_j)  on the support.
+
+    When some closed-neighborhood members have p_j = 0 the literal formula
+    leaves the column constraint violated (those terms are dropped); we then
+    renormalize the column so the unbiasedness constraint holds at init —
+    a documented deviation that only triggers with hard-disconnected clients.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    m = topology.closed_mask(adj)  # [j, i]
+    n = p.shape[0]
+    A = np.zeros((n, n), dtype=np.float64)
+    deg_plus_1 = m.sum(axis=0)  # |N_i| + 1 per column i
+    for i in range(n):
+        sup = np.nonzero(m[:, i] & (p > 0))[0]
+        if sup.size == 0:
+            continue  # infeasible column: no relay can reach the PS
+        A[sup, i] = 1.0 / (deg_plus_1[i] * p[sup])
+        col = float(p[sup] @ A[sup, i])
+        if col > 0 and not np.isclose(col, 1.0):
+            A[sup, i] /= col
+    return A
+
+
+def _solve_column_waterfill(
+    p_sup: np.ndarray,
+    beta: np.ndarray,
+    *,
+    tol: float = 1e-12,
+    max_iters: int = 200,
+) -> tuple[np.ndarray, int]:
+    """Solve  min Σ w_j (α_j + β_j)²  s.t.  Σ p_j α_j = 1, α ≥ 0  over the
+    support (0 < p_j < 1), via eq. (9):
+
+        α_j(λ) = ( −β_j + λ / (2 (1 − p_j)) )⁺ ,
+        g(λ)   = Σ_j p_j α_j(λ)  is nondecreasing;  find g(λ) = 1 by bisection.
+
+    Returns (α, bisection_iterations).
+    """
+    one_minus = 1.0 - p_sup
+
+    def alpha_of(lam: float) -> np.ndarray:
+        return np.maximum(0.0, -beta + lam / (2.0 * one_minus))
+
+    def g(lam: float) -> float:
+        return float(p_sup @ alpha_of(lam))
+
+    lo, hi = 0.0, 1.0
+    iters = 0
+    while g(hi) < 1.0:
+        hi *= 2.0
+        iters += 1
+        if hi > 1e18:
+            raise FloatingPointError("bisection bracket blew up (infeasible column?)")
+    while hi - lo > tol * max(1.0, hi) and iters < max_iters:
+        mid = 0.5 * (lo + hi)
+        if g(mid) < 1.0:
+            lo = mid
+        else:
+            hi = mid
+        iters += 1
+    alpha = alpha_of(hi)
+    # Exactly satisfy the equality constraint by rescaling the active set
+    # (removes the residual bisection tolerance; active set is unchanged).
+    s = float(p_sup @ alpha)
+    if s > 0:
+        alpha = alpha / s
+    return alpha, iters
+
+
+def solve_column(
+    p: np.ndarray,
+    closed_col: np.ndarray,
+    beta_full: np.ndarray,
+) -> tuple[np.ndarray, bool, int]:
+    """Paper eq. (9) for one origin column i.
+
+    p          : (n,) connectivity probabilities
+    closed_col : (n,) bool, j ∈ N_i ∪ {i}
+    beta_full  : (n,) β_ji = Σ_{l ∈ L_ji} α_jl  (row mass excluding column i)
+
+    Returns (column, feasible, bisection_iters).
+    """
+    n = p.shape[0]
+    col = np.zeros((n,), dtype=np.float64)
+    ones = np.nonzero(closed_col & (p >= 1.0))[0]
+    if ones.size > 0:
+        # Zero-variance relays exist: put all mass uniformly on them (eq. 9 case 2).
+        col[ones] = 1.0 / ones.size
+        return col, True, 0
+    sup = np.nonzero(closed_col & (p > 0.0))[0]
+    if sup.size == 0:
+        return col, False, 0  # nobody in N_i ∪ {i} can ever reach the PS
+    alpha, iters = _solve_column_waterfill(p[sup], beta_full[sup])
+    col[sup] = alpha
+    return col, True, iters
+
+
+def optimize(
+    p: np.ndarray,
+    adj: np.ndarray,
+    *,
+    sweeps: int = 50,
+    tol: float = 1e-10,
+    A0: np.ndarray | None = None,
+) -> OptAlphaResult:
+    """Run OPT-α Gauss–Seidel sweeps until S(p, A) stalls or `sweeps` is hit.
+
+    One sweep = n column updates (paper Alg. 3 runs L single-column
+    iterations; `sweeps` here counts full passes, i.e. L = sweeps·n).
+    """
+    p = np.asarray(p, dtype=np.float64)
+    adj = np.asarray(adj, dtype=bool)
+    n = p.shape[0]
+    m = topology.closed_mask(adj)
+    A = initial_weights(p, adj) if A0 is None else np.array(A0, dtype=np.float64)
+    feasible = np.ones((n,), dtype=bool)
+    history = [variance_proxy(p, A)]
+    bis_total = 0
+    for _ in range(sweeps):
+        for i in range(n):
+            row_mass = A.sum(axis=1)
+            beta = row_mass - A[:, i]  # β_ji = Σ_{l≠i} α_jl  (support-collapsed)
+            col, ok, iters = solve_column(p, m[:, i], beta)
+            A[:, i] = col
+            feasible[i] = ok
+            bis_total += iters
+        history.append(variance_proxy(p, A))
+        if abs(history[-2] - history[-1]) <= tol * max(1.0, history[-2]):
+            break
+    return OptAlphaResult(
+        A=A,
+        S_history=np.asarray(history),
+        feasible_columns=feasible,
+        sweeps=len(history) - 1,
+        bisection_iters_total=bis_total,
+    )
+
+
+def optimize_distributed(
+    p: np.ndarray,
+    adj: np.ndarray,
+    *,
+    sweeps: int = 50,
+    tol: float = 1e-10,
+) -> OptAlphaResult:
+    """Distributed OPT-α (paper Remark 2): every column update at client i
+    uses only quantities observable within i's 2-hop neighborhood.
+
+    β_ji = Σ_{l ∈ L_ji} α_jl involves exactly the clients l ≠ i that share
+    relay j with i — i.e. 2-hop neighbors. Here each client i keeps its own
+    column and, per sweep, reconstructs the β it needs from the columns of
+    its 2-hop neighborhood only (enforced by masking); the result must match
+    the centralized Gauss-Seidel solve column-for-column (tested).
+    """
+    p = np.asarray(p, dtype=np.float64)
+    adj = np.asarray(adj, dtype=bool)
+    n = p.shape[0]
+    m = topology.closed_mask(adj)
+    # two_hop[i, l] = l visible from i through some shared relay j
+    two_hop = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        relays = np.nonzero(m[:, i])[0]
+        two_hop[i] = m[relays].any(axis=0)
+    A = initial_weights(p, adj)
+    feasible = np.ones((n,), dtype=bool)
+    history = [variance_proxy(p, A)]
+    bis_total = 0
+    for _ in range(sweeps):
+        for i in range(n):
+            # client i only reads columns of its 2-hop neighborhood
+            visible = np.where(two_hop[i][None, :], A, 0.0)
+            beta = visible.sum(axis=1) - visible[:, i]
+            col, ok, iters = solve_column(p, m[:, i], beta)
+            A[:, i] = col
+            feasible[i] = ok
+            bis_total += iters
+        history.append(variance_proxy(p, A))
+        if abs(history[-2] - history[-1]) <= tol * max(1.0, history[-2]):
+            break
+    return OptAlphaResult(
+        A=A, S_history=np.asarray(history), feasible_columns=feasible,
+        sweeps=len(history) - 1, bisection_iters_total=bis_total,
+    )
+
+
+def fedavg_weights(n: int) -> np.ndarray:
+    """No collaboration: A = I (paper's 'standard FL' special case)."""
+    return np.eye(n, dtype=np.float64)
+
+
+def colrel_expected_coverage(p: np.ndarray, adj: np.ndarray) -> np.ndarray:
+    """P[origin i's update reaches the PS through ≥1 relay] = 1 − Π_j (1 − p_j)
+    over j ∈ N_i ∪ {i}.  Diagnostic used in EXPERIMENTS.md."""
+    p = np.asarray(p, dtype=np.float64)
+    m = topology.closed_mask(adj)
+    cov = np.empty_like(p)
+    for i in range(p.shape[0]):
+        cov[i] = 1.0 - np.prod(1.0 - p[m[:, i]])
+    return cov

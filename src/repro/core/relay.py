@@ -1,0 +1,96 @@
+"""Collaborative relaying of local updates (paper §II-C, Alg. 1 lines 6-9).
+
+Every function operates on a *stacked* pytree of client updates: each leaf has
+a leading client dimension of size n.  Three execution paths compute the same
+math:
+
+  * ``relay`` — the paper-faithful local consensus  Δx̃ = A · Δx  (an einsum
+    over the client dim; under GSPMD with the client dim sharded over the
+    ``data`` axis this lowers to an all-gather of every neighbor's update —
+    exactly the D2D exchange of Alg. 1 lines 6-7).
+  * ``fused_coefficients`` / ``fused_aggregate`` — the beyond-paper fusion of
+    relay + PS aggregation:  w Σ_r τ_r Δx̃_r = w Σ_o c_o Δx_o  with
+    c = τᵀA.  One weighted reduce instead of an n-way gather; bit-identical
+    result in simulation (linearity), recorded separately in EXPERIMENTS.md.
+  * the Pallas kernel path (``repro.kernels.ops.relay_mix``) — used by the
+    single-host simulator for flat parameter blocks.
+
+The relay matrix A is always host-side numpy from ``core.opt_alpha``; it is a
+constant folded into the compiled step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _check_square(A) -> jnp.ndarray:
+    A = jnp.asarray(A)
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"relay matrix must be square, got {A.shape}")
+    return A
+
+
+def relay(A, stacked_updates, *, precision=jax.lax.Precision.HIGHEST):
+    """Local consensus Δx̃_r = Σ_o A[r, o] Δx_o for every relay r.
+
+    ``stacked_updates``: pytree whose leaves are (n, ...) arrays.
+    Returns a pytree of identical structure/shape.
+    """
+    A = _check_square(A)
+
+    def mix(leaf):
+        if leaf.shape[0] != A.shape[0]:
+            raise ValueError(
+                f"leading client dim {leaf.shape[0]} != n = {A.shape[0]}"
+            )
+        out = jnp.einsum(
+            "ro,o...->r...", A.astype(jnp.float32), leaf.astype(jnp.float32),
+            precision=precision,
+        )
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(mix, stacked_updates)
+
+
+def fused_coefficients(A, tau) -> jnp.ndarray:
+    """c_o = Σ_r τ_r α_ro — the per-origin coefficient of the fused
+    relay+aggregate path (c = τᵀ A)."""
+    A = _check_square(A)
+    tau = jnp.asarray(tau, dtype=jnp.float32)
+    return tau @ A.astype(jnp.float32)
+
+
+def fused_aggregate(A, tau, stacked_updates, *, w: float):
+    """w · Σ_r τ_r Δx̃_r computed without materializing Δx̃ (the optimized
+    path).  Returns the PS model increment pytree (no client dim)."""
+    c = w * fused_coefficients(A, tau)
+
+    def reduce(leaf):
+        out = jnp.tensordot(c, leaf.astype(jnp.float32), axes=(0, 0))
+        return out.astype(jnp.float32)
+
+    return jax.tree.map(reduce, stacked_updates)
+
+
+def masked_aggregate(tau, stacked_relayed, *, w: float):
+    """Paper-faithful PS reduction  w · Σ_r τ_r Δx̃_r  over already-relayed
+    updates (eq. 2).  Blind: uses only the mask, never client identities."""
+    tau = jnp.asarray(tau, dtype=jnp.float32)
+
+    def reduce(leaf):
+        out = jnp.tensordot(w * tau, leaf.astype(jnp.float32), axes=(0, 0))
+        return out.astype(jnp.float32)
+
+    return jax.tree.map(reduce, stacked_relayed)
+
+
+def neighbor_support(A, adj) -> bool:
+    """True iff A is supported on the closed neighborhoods of ``adj`` —
+    i.e. no client uses an update it could never have received over D2D."""
+    from repro.core import topology
+
+    m = topology.closed_mask(np.asarray(adj))
+    A = np.asarray(A)
+    return bool(np.all(A[~m] == 0.0))

@@ -1,0 +1,95 @@
+"""Client connectivity graphs G = (V, E) for the D2D relay network.
+
+The graph is undirected and need not be connected (paper §II-B).  We represent
+it by a dense boolean adjacency matrix with a zero diagonal; the neighborhood
+closure ``N_i ∪ {i}`` used throughout the ColRel algebra is ``adj | I``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _validate(adj: np.ndarray) -> np.ndarray:
+    adj = np.asarray(adj, dtype=bool)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if not np.array_equal(adj, adj.T):
+        raise ValueError("adjacency must be symmetric (graph is undirected)")
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def fully_connected(n: int) -> np.ndarray:
+    """FCT of paper Fig. 2: every client sees every other client."""
+    adj = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def ring(n: int, k: int = 1) -> np.ndarray:
+    """Ring topology of paper Fig. 3 (k=1) / Fig. 4 (k=2: 4 nearest neighbors).
+
+    Client i is connected to clients (i ± d) mod n for d in 1..k.
+    """
+    if k < 0:
+        raise ValueError("k must be >= 0")
+    adj = np.zeros((n, n), dtype=bool)
+    for d in range(1, k + 1):
+        for i in range(n):
+            adj[i, (i + d) % n] = True
+            adj[i, (i - d) % n] = True
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def disconnected(n: int) -> np.ndarray:
+    """No D2D links: ColRel degenerates to plain FedAvg-with-dropout."""
+    return np.zeros((n, n), dtype=bool)
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0) -> np.ndarray:
+    """Random G(n, p) graph (symmetrized upper triangle)."""
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < p
+    adj = np.triu(upper, 1)
+    adj = adj | adj.T
+    return _validate(adj)
+
+
+def clusters(n: int, n_clusters: int) -> np.ndarray:
+    """Disjoint fully-connected clusters (the paper allows disconnected G)."""
+    if n_clusters < 1:
+        raise ValueError("need at least one cluster")
+    adj = np.zeros((n, n), dtype=bool)
+    bounds = np.linspace(0, n, n_clusters + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        adj[lo:hi, lo:hi] = True
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def from_edges(n: int, edges) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=bool)
+    for i, j in edges:
+        if i == j:
+            continue
+        adj[i, j] = adj[j, i] = True
+    return adj
+
+
+def neighborhoods(adj: np.ndarray) -> list[np.ndarray]:
+    """N_i for each client (indices, excluding self)."""
+    adj = _validate(adj.copy())
+    return [np.nonzero(adj[i])[0] for i in range(adj.shape[0])]
+
+
+def closed_mask(adj: np.ndarray) -> np.ndarray:
+    """Boolean mask of N_i ∪ {i}: entry [j, i] = can j's update reach relay i."""
+    adj = _validate(adj.copy())
+    return adj | np.eye(adj.shape[0], dtype=bool)
+
+
+def common_neighborhood_sets(adj: np.ndarray) -> np.ndarray:
+    """mask[j, i, l] = j ∈ N_il = (N_i ∪ {i}) ∩ (N_l ∪ {l}) (paper eq. 4)."""
+    m = closed_mask(adj)  # [j, i]
+    return m[:, :, None] & m[:, None, :]

@@ -1,0 +1,38 @@
+"""Federated batch sampling: stacked per-client batches for the FL engine.
+
+A round batch has leaves shaped (n_clients, T, local_batch, ...) — T local
+steps per round, one minibatch each — matching ``fl.simulator`` /
+``fl.distributed`` expectations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import ArrayDataset
+
+
+class FederatedLoader:
+    def __init__(self, ds: ArrayDataset, parts: list[np.ndarray], *, seed: int = 0):
+        self.ds = ds
+        self.parts = parts
+        self.rng = np.random.default_rng(seed)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.parts)
+
+    def round_batch(self, local_steps: int, local_batch: int, *, lm: bool = False):
+        """Sample (n, T, b, ...) input/label arrays for one round."""
+        n = self.n_clients
+        xs, ys = [], []
+        for part in self.parts:
+            idx = self.rng.choice(part, size=(local_steps, local_batch), replace=True)
+            xs.append(self.ds.inputs[idx])
+            ys.append(self.ds.labels[idx])
+        x = np.stack(xs)  # (n, T, b, ...)
+        y = np.stack(ys)
+        if lm:
+            # inputs are (.., seq+1) token arrays: split into tokens/labels
+            return {"tokens": x[..., :-1], "labels": x[..., 1:]}
+        key = "images" if x.ndim >= 5 else "inputs"
+        return {key: x, "labels": y}

@@ -1,0 +1,97 @@
+"""Ring-schedule D2D relay: the paper's physical exchange as a manual
+collective (`shard_map` + `lax.ppermute`).
+
+Each device owns one client's update shard.  The updates rotate around the
+client axis; at step s device r holds Δx_{(r−s) mod n} and accumulates
+α_{r,(r−s)} · Δx_{(r−s)} — after n−1 rotations every relay has its local
+consensus Δx̃_r with **O(1) live buffers** instead of the O(n·|Δ|) gather of
+the einsum formulation (the §Perf iteration-4/5 memory wall).  The blind PS
+reduction is then a τ-weighted psum over the same axis.
+
+This is the reference implementation of the *faithful* protocol at scales
+where per-client Δ gathers exceed HBM; `tests/test_ring_relay.py` proves it
+equal to the einsum relay on a real mesh.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_axpy, tree_scale
+
+
+def _combined_index(axis_names):
+    idx = jax.lax.axis_index(axis_names[0])
+    for a in axis_names[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def ring_relay_local(A, delta_local, axis_names: tuple):
+    """Inside shard_map: delta_local = this client's Δx (no client dim).
+    Returns Δx̃_r for the local relay r.  A: (n, n) host constant."""
+    A = jnp.asarray(A, jnp.float32)
+    n = A.shape[0]
+    r = _combined_index(axis_names)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    acc = tree_scale(A[r, r], delta_local)
+
+    def step(s, carry):
+        buf, acc = carry
+        buf = jax.tree.map(
+            lambda x: jax.lax.ppermute(x, axis_names, perm), buf
+        )
+        origin = (r - s) % n
+        acc = tree_axpy(A[r, origin], buf, acc)
+        return buf, acc
+
+    _, acc = jax.lax.fori_loop(1, n, step, (delta_local, acc))
+    return acc
+
+
+def ring_colrel_increment(A, tau, delta_local, *, w: float, axis_names: tuple):
+    """Full blind round reduction inside shard_map:
+    w · Σ_r τ_r Δx̃_r, replicated over the client axes."""
+    relayed = ring_relay_local(A, delta_local, axis_names)
+    r = _combined_index(axis_names)
+    tau_r = jnp.asarray(tau, jnp.float32)[r]
+    weighted = tree_scale(w * tau_r, relayed)
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_names), weighted)
+
+
+def make_ring_round_mixer(A, *, w: float, mesh, client_axes: tuple):
+    """shard_map wrapper: stacked deltas (n, ...) sharded over `client_axes`
+    → PS increment pytree (replicated).  Other dims must be unsharded within
+    the client shard (use the einsum/fused paths for model-sharded deltas)."""
+    from jax.sharding import PartitionSpec as P
+
+    def local(tau, deltas_stacked):
+        delta_local = jax.tree.map(lambda x: x[0], deltas_stacked)
+        return ring_colrel_increment(
+            A, tau, delta_local, w=w, axis_names=client_axes
+        )
+
+    def in_specs(deltas):
+        return (
+            P(),
+            jax.tree.map(
+                lambda x: P(client_axes, *([None] * (x.ndim - 1))), deltas
+            ),
+        )
+
+    def mixer(tau, deltas_stacked):
+        spec_tau, spec_d = in_specs(deltas_stacked)
+        out_spec = jax.tree.map(
+            lambda x: P(*([None] * (x.ndim - 1))), deltas_stacked
+        )
+        return jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(spec_tau, spec_d),
+            out_specs=out_spec,
+            check_vma=False,
+        )(jnp.asarray(tau, jnp.float32), deltas_stacked)
+
+    return mixer

@@ -1,0 +1,53 @@
+"""Jitted public wrappers: relay mixing over parameter *pytrees* backed by the
+Pallas kernels.  Leaves are flattened to (n, leaf_size) tiles, streamed
+through the kernel, and restored — so the single-host simulator can run the
+whole D2D consensus as one fused kernel pass per leaf.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+``interpret=False`` (the default flips on TPU backends).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import relay_mix as _k
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def relay_mix(A, stacked, *, block_d: int = _k.DEFAULT_BLOCK_D, interpret=None):
+    """Δ̃ = A·Δ over a stacked pytree (leaves (n, ...))."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n = jnp.asarray(A).shape[0]
+
+    def mix(leaf):
+        flat = leaf.reshape(n, -1)
+        out = _k.relay_mix_2d(
+            jnp.asarray(A), flat, block_d=min(block_d, max(128, flat.shape[1])),
+            interpret=interpret,
+        )
+        return out.reshape(leaf.shape)
+
+    return jax.tree.map(mix, stacked)
+
+
+def fused_aggregate(A, tau, stacked, *, w: float, block_d: int = _k.DEFAULT_BLOCK_D,
+                    interpret=None):
+    """w · Σ_r τ_r (A·Δ)_r without materializing the relayed updates."""
+    interpret = _default_interpret() if interpret is None else interpret
+    A = jnp.asarray(A)
+    n = A.shape[0]
+    coeffs = w * (jnp.asarray(tau, jnp.float32) @ A.astype(jnp.float32))
+
+    def reduce(leaf):
+        flat = leaf.reshape(n, -1)
+        out = _k.fused_aggregate_2d(
+            coeffs, flat, block_d=min(block_d, max(128, flat.shape[1])),
+            interpret=interpret,
+        )
+        return out.reshape(leaf.shape[1:])
+
+    return jax.tree.map(reduce, stacked)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the relay kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def relay_mix_2d(A, delta):
+    return jnp.einsum(
+        "ro,od->rd",
+        A.astype(jnp.float32),
+        delta.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    ).astype(delta.dtype)
+
+
+def fused_aggregate_2d(coeffs, delta):
+    return jnp.einsum(
+        "o,od->d",
+        coeffs.astype(jnp.float32),
+        delta.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    ).astype(delta.dtype)
+
+
+def relay_mix_pytree(A, stacked):
+    return jax.tree.map(
+        lambda leaf: jnp.einsum(
+            "ro,o...->r...", A.astype(jnp.float32), leaf.astype(jnp.float32)
+        ).astype(leaf.dtype),
+        stacked,
+    )

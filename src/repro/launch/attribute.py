@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DOC = """Attribute per-device collective bytes to jax source operations.
+
+The §Perf workflow's diagnosis step: compiles one (arch × shape) combo and
+groups loop-corrected collective bytes by HLO ``op_name`` metadata (which
+carries the jax trace path, e.g. ``.../bqkgh,bskh->bkgqs/dot_general``), so
+a collective-permute storm can be pinned to the exact einsum that caused it.
+
+  PYTHONPATH=src python -m repro.launch.attribute --arch grok-1-314b \
+      --shape prefill_32k [--multi-pod] [--relay-mode fused] [--top 15]
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import dryrun as dr
+from repro.launch import hlo_cost
+
+_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+def attribute(hlo_text: str) -> dict:
+    """(collective kind, op_name prefix) -> loop-corrected bytes/device."""
+    comp_text: dict[str, str] = {}
+    comps = hlo_cost.parse_computations(hlo_text, comp_text)
+
+    mult: dict[str, float] = defaultdict(float)
+
+    def walk(name, m, stack=()):
+        if name in stack or name not in comps:
+            return
+        mult[name] += m
+        for op in comps[name]:
+            if op.kind == "while":
+                t = hlo_cost._while_trip_count(op, comp_text)
+                for c in op.called:
+                    walk(c, m * t, stack + (name,))
+            elif op.called:
+                for c in op.called:
+                    walk(c, m, stack + (name,))
+
+    walk("__entry__", 1.0)
+    out: dict = defaultdict(float)
+    for name, ops in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for op in ops:
+            if op.kind in hlo_cost.COLLECTIVES:
+                head = op.line.split(f" {op.kind}(")[0]
+                b = hlo_cost._bytes_of(hlo_cost._shapes(head)) * m
+                mm = _OPNAME.search(op.line)
+                out[(op.kind, mm.group(1)[:120] if mm else "?")] += b
+    return dict(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--relay-mode", default="faithful")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    mesh = dr.make_production_mesh(multi_pod=args.multi_pod)
+    if INPUT_SHAPES[args.shape].kind == "train":
+        lowered, _, _ = dr.build_train_lowering(
+            args.arch, args.shape, mesh, args.relay_mode)
+    else:
+        lowered, _, _ = dr.build_serve_lowering(args.arch, args.shape, mesh)
+    attr = attribute(lowered.compile().as_text())
+    for (kind, src), b in sorted(attr.items(), key=lambda kv: -kv[1])[: args.top]:
+        print(f"{b / 1e9:10.1f} GB  {kind:20s} {src}")
+
+
+if __name__ == "__main__":
+    main()

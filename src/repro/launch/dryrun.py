@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination on placeholder devices and record the roofline inputs.
+
+For train shapes the lowered computation is the full ColRel round
+(T local SGD steps per client → D2D relay → blind τ-masked PS aggregation);
+for prefill/decode shapes it is the serving step.  Nothing is ever executed —
+inputs are ShapeDtypeStructs — but a successful ``.lower().compile()`` proves
+the sharding config is coherent (no mismatched collectives, divisibility
+failures, or unpartitionable ops) and yields ``cost_analysis()`` /
+``memory_analysis()`` / the compiled HLO collective schedule.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod]   # every pair, cached
+Artifacts: benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as creg
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+from repro.core import connectivity, opt_alpha, topology
+from repro.core.aggregation import ServerOpt
+from repro.fl.distributed import build_round_step
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as mreg
+from repro.optim.sgd import ClientOpt
+from repro.sharding import rules
+from repro.sharding import hints
+
+ARTIFACT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "artifacts", "dryrun"
+)
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+# archs whose parameters exceed single-chip-slice HBM at 1-D TP → 2-D sharding.
+# qwen3-14b moved to 1-D TP in §Perf iteration 4: FSDP weight all-gathers were
+# re-issued per client slice (×16) under the vmap; at 1.75 GB/device the
+# weights fit replicated and the gathers vanish.
+FSDP_ARCHS = {
+    "grok-1-314b", "mixtral-8x22b", "qwen2.5-32b", "qwen1.5-32b",
+}
+# serving re-reads weights every step: pay FSDP all-gathers only when bf16
+# params genuinely exceed a 16-way TP slice (§Perf iteration 2) —
+# grok 314B: 39 GB/dev, mixtral 141B: 17.6 GB/dev; qwen-32Bs fit at ~4 GB/dev
+SERVE_FSDP_ARCHS = {"grok-1-314b", "mixtral-8x22b"}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\b"
+)
+SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes by collective kind, from the partitioned HLO."""
+    out: dict[str, float] = {}
+    for shapes, kind in COLLECTIVE_RE.findall(hlo_text):
+        out[kind] = out.get(kind, 0) + _shape_bytes(shapes)
+    out["total"] = sum(out.values())
+    return out
+
+
+def _dryrun_cfg(arch: str, shape_name: str) -> ModelConfig:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = creg.get_config(arch)
+    cfg = creg.for_shape(cfg, shape)
+    return dataclasses.replace(cfg, param_dtype="bfloat16", compute_dtype="bfloat16")
+
+
+def _n_clients(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def build_train_lowering(arch: str, shape_name: str, mesh, relay_mode: str = "faithful"):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = _dryrun_cfg(arch, shape_name)
+    md = mreg.get_model(cfg)
+    n = _n_clients(mesh)
+
+    # protocol inputs (host-side, constants folded into the step)
+    p = connectivity.heterogeneous_profile(n).p
+    adj = topology.ring(n, k=2)
+    A = opt_alpha.optimize(p, adj, sweeps=20).A.astype(np.float32)
+
+    round_step = build_round_step(
+        md.loss, n_clients=n, local_steps=1, A=A, relay_mode=relay_mode,
+        client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+        server_opt=ServerOpt(),
+    )
+
+    # abstract params via eval_shape — no allocation
+    params = jax.eval_shape(md.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = mreg.input_specs(cfg, shape)
+    per_client = shape.global_batch // n
+    batch = {
+        k: jax.ShapeDtypeStruct((n, 1, per_client) + v.shape[1:], v.dtype)
+        for k, v in specs.items()
+    }
+    tau = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    mode = "fsdp_tp" if arch in FSDP_ARCHS else "tp"
+    pspecs = rules.param_specs(params, mesh, mode)
+    bspecs = rules.train_batch_specs(batch, mesh)
+    ca = rules.client_axes(mesh)
+
+    # stable blockwise-attention layout: q-chunks sequence-parallel over
+    # "model" (batch/client dims are already pinned by in_shardings)
+    with mesh, hints.axis_rules(mesh, {"qchunk": "model"}):
+        jitted = jax.jit(
+            round_step,
+            in_shardings=(
+                rules.to_shardings(pspecs, mesh),
+                None,
+                rules.to_shardings(bspecs, mesh),
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                None,
+            ),
+            out_shardings=(
+                rules.to_shardings(pspecs, mesh),
+                None,
+                None,
+            ),
+        )
+        lowered = jitted.lower(params, None, batch, tau, lr)
+    return lowered, cfg, shape
+
+
+def build_serve_lowering(arch: str, shape_name: str, mesh):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = _dryrun_cfg(arch, shape_name)
+    md = mreg.get_model(cfg)
+    mode = "fsdp_tp" if arch in SERVE_FSDP_ARCHS else "tp"
+
+    params = jax.eval_shape(md.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = rules.param_specs(params, mesh, mode)
+
+    ca = rules.client_axes(mesh)
+    with mesh, hints.axis_rules(mesh, {"batch": ca, "qchunk": "model"}):
+        if shape.kind == "prefill":
+            batch = mreg.input_specs(cfg, shape)
+            bspecs = rules.serve_batch_specs(batch, mesh)
+            jitted = jax.jit(
+                md.prefill,
+                in_shardings=(
+                    rules.to_shardings(pspecs, mesh),
+                    rules.to_shardings(bspecs, mesh),
+                ),
+            )
+            lowered = jitted.lower(params, batch)
+        else:  # decode: one token against a cache of seq_len
+            cache = jax.eval_shape(
+                lambda: md.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = rules.cache_specs(cache, mesh, shape.global_batch)
+            tokens = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)}
+            tspecs = rules.serve_batch_specs(tokens, mesh)
+            jitted = jax.jit(
+                md.decode,
+                in_shardings=(
+                    rules.to_shardings(pspecs, mesh),
+                    rules.to_shardings(cspecs, mesh),
+                    rules.to_shardings(tspecs, mesh)["tokens"],
+                ),
+                out_shardings=(None, rules.to_shardings(cspecs, mesh)),
+            )
+            lowered = jitted.lower(params, cache, tokens["tokens"])
+    return lowered, cfg, shape
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """Analytic MODEL_FLOPS per step: 6·N·D train, 2·N_active·D inference."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    return (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, relay_mode: str = "faithful",
+            out_dir: str | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    skip = creg.is_skipped(arch, shape_name)
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "relay_mode": relay_mode, "status": "skipped", "skip_reason": skip,
+    }
+    if skip is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shape = INPUT_SHAPES[shape_name]
+        t0 = time.time()
+        try:
+            if shape.kind == "train":
+                lowered, cfg, shape = build_train_lowering(
+                    arch, shape_name, mesh, relay_mode)
+            else:
+                lowered, cfg, shape = build_serve_lowering(arch, shape_name, mesh)
+            compiled = lowered.compile()
+            t1 = time.time()
+            ca = compiled.cost_analysis() or {}
+            ma = compiled.memory_analysis()
+            hlo = compiled.as_text()
+            # loop-aware corrected costs (XLA counts while bodies once —
+            # scans over layers/chunks would be undercounted by trip count)
+            corrected = hlo_cost.analyze(hlo)
+            coll = {k: v for k, v in corrected["collectives"].items()}
+            chips = int(np.prod(list(mesh.shape.values())))
+            flops_dev = float(corrected["flops"])
+            bytes_dev = float(corrected["hbm_bytes"])
+            mem = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", 0),
+            }
+            mem["peak_bytes"] = (
+                mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+                - mem["alias_bytes"]
+            )
+            mf = model_flops(cfg, shape)
+            record.update({
+                "status": "ok",
+                "compile_seconds": round(t1 - t0, 1),
+                "chips": chips,
+                "xla_cost_analysis_raw": {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                },
+                "per_device": {"flops": flops_dev, "bytes": bytes_dev, **mem},
+                "collective_bytes_per_device": coll,
+                "roofline_seconds": {
+                    "compute": flops_dev / PEAK_FLOPS,
+                    "memory": bytes_dev / HBM_BW,
+                    "collective": coll.get("total", 0.0) / ICI_BW,
+                },
+                "model_flops_global": mf,
+                "useful_flops_ratio": mf / (flops_dev * chips) if flops_dev else None,
+                "n_params": cfg.param_count(),
+                "n_params_active": cfg.active_param_count(),
+            })
+            r = record["roofline_seconds"]
+            record["bottleneck"] = max(r, key=r.get)
+        except Exception as e:  # noqa: BLE001 — record the failure, don't die
+            record.update({
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(limit=8),
+            })
+    out_dir = out_dir or os.path.join(ARTIFACT_DIR, mesh_name)
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if relay_mode == "faithful" else f"__{relay_mode}"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(creg.ASSIGNED))
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--relay-mode", default="faithful", choices=["faithful", "fused"])
+    ap.add_argument("--force", action="store_true", help="recompute cached artifacts")
+    args = ap.parse_args()
+
+    pairs = (
+        [(a, s) for a in creg.ASSIGNED for s in INPUT_SHAPES]
+        if args.all else [(args.arch, args.shape)]
+    )
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    for arch, shape_name in pairs:
+        suffix = "" if args.relay_mode == "faithful" else f"__{args.relay_mode}"
+        path = os.path.join(ARTIFACT_DIR, mesh_name, f"{arch}__{shape_name}{suffix}.json")
+        if not args.force and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[cached] {arch} {shape_name} {mesh_name}")
+                    continue
+        rec = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                      relay_mode=args.relay_mode)
+        if rec["status"] == "ok":
+            r = rec["roofline_seconds"]
+            print(f"[ok] {arch} {shape_name} {mesh_name} "
+                  f"compile={rec['compile_seconds']}s "
+                  f"compute={r['compute']:.3e}s memory={r['memory']:.3e}s "
+                  f"coll={r['collective']:.3e}s bottleneck={rec['bottleneck']}")
+            print(f"     memory_analysis: {rec['per_device']}")
+            print(f"     cost_analysis: flops/dev={rec['per_device']['flops']:.3e} "
+                  f"useful_ratio={rec['useful_flops_ratio']}")
+        elif rec["status"] == "skipped":
+            print(f"[skip] {arch} {shape_name}: {rec['skip_reason']}")
+        else:
+            print(f"[ERROR] {arch} {shape_name} {mesh_name}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Loop-aware cost model over compiled (partitioned) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**, so any
+``lax.scan`` (layer stacks, CE chunks, blockwise attention) under-reports
+FLOPs / bytes / collective traffic by its trip count.  This module re-derives
+per-device costs from ``compiled.as_text()`` with loop multiplicity:
+
+  * computations are parsed into top-level op lines (fusion bodies stay
+    internal — their operands/results are the HBM-visible traffic);
+  * ``while`` trip counts are inferred from the loop-carried tuple: scanned
+    inputs/outputs are stacked arrays whose leading dim is the trip count
+    (the most common leading dim ≥ 2 across rank-≥2 tuple elements);
+  * costs roll up recursively: while bodies × trip, call/conditional × 1.
+
+FLOPs are counted for dot/convolution ops (2 · |out| · K); HBM bytes as
+operand + result bytes of top-level non-trivial ops; collective bytes by kind
+from the op result size.  All numbers are per-device (the partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE = re.compile(r"\b(\w+)\[([0-9,]*)\]")
+_OPLINE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$")
+_CALLED_SINGLE = re.compile(r"(?:body|condition|to_apply)=%?([\w.\-]+)")
+_CALLED_LIST = re.compile(r"(?:branch_computations|called_computations|calls)=\{([^}]*)\}")
+_KIND = re.compile(r"^(?:\([^)]*\)|\w+\[[^\]]*\]\S*)\s+([\w\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# ops whose result/operands we exclude from HBM traffic accounting
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "copy-start", "copy-done", "iota",
+}
+
+
+def _shapes(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt in DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    kind: str
+    line: str
+    called: list[str]
+
+
+def parse_computations(text: str, comp_text: dict[str, str] | None = None
+                       ) -> dict[str, list[OpInfo]]:
+    """name -> top-level op lines.  Computations start at column 0 with
+    ``%name (...`` or ``ENTRY``; ops are indented lines containing ``=``.
+    If ``comp_text`` is given it is filled with name -> raw body text."""
+    comps: dict[str, list[OpInfo]] = {}
+    current = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                if comp_text is not None:
+                    comp_text[current] = ""
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[current]
+            continue
+        if current is None:
+            continue
+        if comp_text is not None:
+            comp_text[current] = comp_text[current] + line + "\n"
+        if "=" not in line:
+            continue
+        m = _OPLINE.match(line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        km = _KIND.match(rhs)
+        if not km:
+            continue
+        kind = km.group(1)
+        called = [c for c in _CALLED_SINGLE.findall(rhs)]
+        for cm in _CALLED_LIST.finditer(rhs):
+            called += [c.strip().lstrip("%") for c in cm.group(1).split(",") if c.strip()]
+        comps[current].append(OpInfo(kind, rhs, called))
+    return comps
+
+
+_CONST_INT = re.compile(r"%?([\w.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_COMPARE = re.compile(r"compare\(([^)]*)\).*direction=(LT|LE|GT|GE)")
+
+
+def _trip_from_condition(cond_name: str, comp_text: dict[str, str]) -> int | None:
+    """Trip count from the condition cluster (the compare may be fused): the
+    loop bound is the largest s32[] constant in the condition computation or
+    the computations it calls (jax scans: compare(i, constant(trip), LT))."""
+    text = comp_text.get(cond_name)
+    if text is None:
+        return None
+    cluster = [text]
+    for m in _CALLED_LIST.finditer(text):
+        for c in m.group(1).split(","):
+            c = c.strip().lstrip("%")
+            if c in comp_text:
+                cluster.append(comp_text[c])
+    for m in _CALLED_SINGLE.finditer(text):
+        if m.group(1) in comp_text:
+            cluster.append(comp_text[m.group(1)])
+    consts = [int(m.group(2)) for t in cluster for m in _CONST_INT.finditer(t)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else None
+
+
+def _while_trip_count(op: OpInfo, comp_text: dict[str, str] | None = None) -> int:
+    """Trip count: prefer the condition's compare constant; fall back to the
+    most common stacked-operand leading dim in the loop tuple."""
+    if comp_text is not None:
+        for c in op.called:
+            t = _trip_from_condition(c, comp_text)
+            if t is not None and t > 0:
+                return t
+    head = op.line.split(" while(")[0]
+    lead = Counter()
+    for _, dims in _shapes(head):
+        if len(dims) >= 2 and dims[0] > 1:
+            lead[dims[0]] += 1
+    if not lead:
+        return 1
+    return lead.most_common(1)[0][0]
+
+
+_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\w+\[[0-9,]*\])")
+
+
+def build_def_shapes(text: str) -> dict[str, list]:
+    """Global map op-name -> (dtype, dims) from every definition line."""
+    defs: dict[str, list] = {}
+    for line in text.splitlines():
+        m = _DEF.match(line)
+        if m:
+            s = _shapes(m.group(2))
+            if s:
+                defs[m.group(1)] = s[0]
+    return defs
+
+
+def _dot_flops(op: OpInfo, defs: dict) -> float:
+    out_b = _shapes(op.line.split(" dot(")[0])
+    if not out_b:
+        return 0.0
+    out_elems = 1
+    for d in out_b[0][1]:
+        out_elems *= d
+    inner = op.line.split(" dot(", 1)[1]
+    m = _OPERANDS.match("(" + inner)
+    lhs_dims = None
+    if m:
+        names = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+        if names and names[0] in defs:
+            lhs_dims = defs[names[0]][1]
+    cdims = _CONTRACT.search(op.line)
+    k = 1
+    if cdims and lhs_dims is not None:
+        for i in cdims.group(1).split(","):
+            if i and int(i) < len(lhs_dims):
+                k *= lhs_dims[int(i)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: OpInfo) -> float:
+    # approximate: 2 * |out| * (kernel spatial * in_channels)
+    parts = op.line.split(" convolution(", 1)
+    out_s = _shapes(parts[0])
+    ops = _shapes(parts[1].split("),")[0]) if len(parts) > 1 else []
+    if not out_s or len(ops) < 2:
+        return 0.0
+    out_elems = 1
+    for d in out_s[0][1]:
+        out_elems *= d
+    kdims = ops[1][1]
+    k = 1
+    for d in kdims[:-1]:  # all but output-feature dim (HWIO heuristic)
+        k *= d
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + mult * v
+
+
+def analyze(text: str) -> dict:
+    comp_text: dict[str, str] = {}
+    comps = parse_computations(text, comp_text)
+    defs = build_def_shapes(text)
+    memo: dict[str, Cost] = {}
+
+    def cost_of(name: str, stack=()) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Cost()
+        total = Cost()
+        for op in comps[name]:
+            own = Cost()
+            if op.kind == "dot":
+                own.flops = _dot_flops(op, defs)
+            elif op.kind == "convolution":
+                own.flops = _conv_flops(op)
+            if op.kind in COLLECTIVES:
+                head = op.line.split(f" {op.kind}(")[0]
+                own.collectives[op.kind] = float(_bytes_of(_shapes(head)))
+            if op.kind not in _SKIP_BYTES:
+                own.hbm_bytes = float(_bytes_of(_shapes(op.line)))
+            mult = 1.0
+            sub = Cost()
+            if op.kind == "while":
+                mult = float(_while_trip_count(op, comp_text))
+                for c in op.called:
+                    sub.add(cost_of(c, stack + (name,)))
+            elif op.called:
+                for c in op.called:
+                    sub.add(cost_of(c, stack + (name,)))
+            total.add(own)
+            total.add(sub, mult)
+        memo[name] = total
+        return total
+
+    entry = cost_of("__entry__")
+    coll_total = float(sum(entry.collectives.values()))
+    return {
+        "flops": entry.flops,
+        "hbm_bytes": entry.hbm_bytes,
+        "collectives": {**entry.collectives, "total": coll_total},
+    }

@@ -1,0 +1,37 @@
+"""Production meshes.  Functions, not module constants — importing this module
+never touches jax device state (the dry-run must set XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (16 data, 16 model).  Multi-pod: 2 × 256 as
+    (2 pod, 16 data, 16 model); the client axes are ("pod","data")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)"
+        )
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_local_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
+    """Small mesh over however many local devices exist (tests)."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    import numpy as np
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)

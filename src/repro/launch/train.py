@@ -1,0 +1,120 @@
+"""FL training launcher (runs on the local devices; reduced configs on CPU).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --reduced \
+        --rounds 50 --strategy colrel --topology ring --p-profile heterogeneous
+
+Drives the ColRel protocol end-to-end: OPT-α weight optimization → federated
+rounds over the assigned architecture (LM-token synthetic data) → checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import registry as creg
+from repro.core import connectivity, opt_alpha, topology
+from repro.core.aggregation import ServerOpt
+from repro.data.loader import FederatedLoader
+from repro.data.partition import iid_partition, sort_and_partition
+from repro.data.synthetic import lm_tokens
+from repro.fl.simulator import FLSimulator
+from repro.models import registry as mreg
+from repro.optim.sgd import ClientOpt
+
+
+def build_topology(name: str, n: int, k: int):
+    if name == "ring":
+        return topology.ring(n, k)
+    if name == "fct":
+        return topology.fully_connected(n)
+    if name == "disconnected":
+        return topology.disconnected(n)
+    if name == "clusters":
+        return topology.clusters(n, max(1, n // 4))
+    raise ValueError(name)
+
+
+def build_connectivity(profile: str, n: int, p_hom: float):
+    if profile == "homogeneous":
+        return connectivity.homogeneous(n, p_hom)
+    if profile == "paper" and n == 10:
+        return connectivity.paper_heterogeneous()
+    return connectivity.heterogeneous_profile(n)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", choices=sorted(creg.ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--clients", type=int, default=10)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--local-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.1)
+    ap.add_argument("--strategy", default="colrel",
+                    choices=["colrel", "colrel_fused", "fedavg_blind",
+                             "fedavg_nonblind", "no_dropout"])
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology-k", type=int, default=1)
+    ap.add_argument("--p-profile", default="heterogeneous",
+                    choices=["homogeneous", "heterogeneous", "paper"])
+    ap.add_argument("--p", type=float, default=0.2, help="homogeneous p")
+    ap.add_argument("--non-iid", action="store_true")
+    ap.add_argument("--server-momentum", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    n = args.clients
+    cfg = creg.get_config(args.arch, reduced=args.reduced)
+    if cfg.family == "resnet":
+        raise SystemExit("use benchmarks/fig*.py for the resnet paper runs")
+    md = mreg.get_model(cfg)
+
+    conn = build_connectivity(args.p_profile, n, args.p)
+    adj = build_topology(args.topology, n, args.topology_k)
+    res = opt_alpha.optimize(conn.p, adj, sweeps=50)
+    print(f"OPT-α: S {res.S_history[0]:.3f} -> {res.S_history[-1]:.3f} "
+          f"({res.sweeps} sweeps, feasible={res.feasible_columns.all()})")
+
+    ds = lm_tokens(4096, args.seq_len, vocab=cfg.vocab, seed=args.seed)
+    parts = (sort_and_partition(ds, n, seed=args.seed) if args.non_iid
+             else iid_partition(ds, n, seed=args.seed))
+    loader = FederatedLoader(ds, parts, seed=args.seed)
+
+    sim = FLSimulator(
+        md.loss, n_clients=n, strategy=args.strategy, A=res.A, p=conn.p,
+        local_steps=args.local_steps,
+        client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+        server_opt=ServerOpt(momentum=args.server_momentum),
+    )
+    params = md.init(jax.random.key(args.seed))
+    state = sim.init_server_state(params)
+    key = jax.random.key(args.seed + 1)
+    t0 = time.time()
+    for r in range(args.rounds):
+        key, sub = jax.random.split(key)
+        batch = loader.round_batch(args.local_steps, args.local_batch, lm=True)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, m = sim.run_round(sub, params, state, batch, args.lr)
+        if r % args.log_every == 0 or r == args.rounds - 1:
+            print(f"round {r:4d} loss={float(m['loss']):.4f} "
+                  f"tau={np.asarray(m['tau']).astype(int)} "
+                  f"|Δ|={float(m['delta_norm']):.3f} "
+                  f"({time.time()-t0:.1f}s)")
+    if args.checkpoint:
+        checkpoint.save(args.checkpoint, params,
+                        metadata={"arch": args.arch, "rounds": args.rounds,
+                                  "strategy": args.strategy})
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: pure-pytree functional architectures (dense GQA, MoE, Mamba-1,
+RG-LRU hybrid, encoder-decoder audio, VLM cross-attention, ResNet-20)."""
+from repro.models.registry import ModelDef, get_model, input_specs
+
+__all__ = ["ModelDef", "get_model", "input_specs"]

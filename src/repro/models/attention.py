@@ -1,0 +1,339 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, QKV-bias, sliding-window and
+cross-attention variants, plus KV-cache prefill/decode paths.
+
+Sharding notes (see DESIGN.md §4): activations are never sharded on the head
+dim — projections shard their fused ``n_heads·head_dim`` output columns over
+the ``model`` mesh axis, and decode KV caches shard the *sequence* dim, so no
+head-count divisibility constraint ever arises.
+
+Sliding-window training/prefill uses the chunked two-block scheme (each
+window-sized chunk attends to itself causally and to the previous chunk with
+a distance mask) giving O(S·2W) score memory instead of O(S²).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "q": common.init_dense(ks[0], d, cfg.n_heads * hd, cfg.pdtype, bias=cfg.qkv_bias),
+        "k": common.init_dense(ks[1], d, cfg.n_kv * hd, cfg.pdtype, bias=cfg.qkv_bias),
+        "v": common.init_dense(ks[2], d, cfg.n_kv * hd, cfg.pdtype, bias=cfg.qkv_bias),
+        "o": common.init_dense(ks[3], cfg.n_heads * hd, d, cfg.pdtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["qn"] = common.init_rmsnorm(hd, cfg.pdtype)
+        p["kn"] = common.init_rmsnorm(hd, cfg.pdtype)
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig):
+    B, S = x.shape[:2]
+    q = common.dense(p["q"], x, cdtype=cfg.cdtype).reshape(B, S, cfg.n_heads, cfg.hd)
+    if "qn" in p:
+        q = common.rmsnorm(p["qn"], q, eps=cfg.norm_eps)
+    return q
+
+
+def _project_kv(p, x, cfg: ModelConfig):
+    B, S = x.shape[:2]
+    k = common.dense(p["k"], x, cdtype=cfg.cdtype).reshape(B, S, cfg.n_kv, cfg.hd)
+    v = common.dense(p["v"], x, cdtype=cfg.cdtype).reshape(B, S, cfg.n_kv, cfg.hd)
+    if "kn" in p:
+        k = common.rmsnorm(p["kn"], k, eps=cfg.norm_eps)
+    return k, v
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q (B,Sq,H,hd), k (B,Sk,Kv,hd) -> scores (B,Kv,G,Sq,Sk) with G=H/Kv."""
+    B, Sq, H, hd = q.shape
+    G = H // cfg.n_kv
+    qg = q.reshape(B, Sq, cfg.n_kv, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k) * (hd**-0.5)
+    return s.astype(jnp.float32)
+
+
+def _gqa_out(scores, v, p, cfg: ModelConfig):
+    """scores (B,Kv,G,Sq,Sk) f32 post-softmax, v (B,Sk,Kv,hd) -> (B,Sq,D)."""
+    B, Kv, G, Sq, _ = scores.shape
+    o = jnp.einsum("bkgqs,bskh->bqkgh", scores.astype(cfg.cdtype), v)
+    o = o.reshape(B, Sq, cfg.n_heads * cfg.hd)
+    return common.dense(p["o"], o, cdtype=cfg.cdtype)
+
+
+# Above this sequence length the quadratic score tensor is replaced by the
+# blockwise online-softmax path (flash-attention recurrence in pure JAX).
+BLOCKWISE_THRESHOLD = 2048
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def blockwise_gqa(q, k, v, *, pos_q, pos_k, causal: bool, window: int,
+                  cfg: ModelConfig, q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK):
+    """Flash-style attention: nested scans over (q chunks × kv blocks) with the
+    online-softmax recurrence — peak score buffer is (B, Kv, G, qc, kc) instead
+    of (B, H, S, S).  Supports causal and sliding-window masks; this is the
+    TPU-idiomatic replacement for the CUDA fused kernels the source models use.
+
+    q (B,Sq,H,hd) / k,v (B,Sk,Kv,hd) post-RoPE.  Returns (B, Sq, H·hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    Kv = cfg.n_kv
+    G = H // Kv
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    assert Sq % qc == 0 and Sk % kc == 0, (Sq, qc, Sk, kc)
+    nq, nk = Sq // qc, Sk // kc
+    scale = hd**-0.5
+
+    from repro.sharding.hints import hint
+
+    # Pin a stable layout for the whole nested scan (see sharding/hints.py):
+    # batch → client axes; the q-chunk dim → "model" (sequence-parallel
+    # attention); K/V blocks replicated over "model".  Without this GSPMD
+    # re-shards every (layer × q-chunk × kv-block) iteration.
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, Kv, G, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, Kv, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, Kv, hd), 1, 0)
+    pq = jnp.moveaxis(pos_q.reshape(B, nq, qc), 1, 0)
+    pk = jnp.moveaxis(pos_k.reshape(B, nk, kc), 1, 0)
+    qr = hint(qr, None, "batch", "qchunk", None, None, None)
+    kr = hint(kr, None, "batch", None, None, None)
+    vr = hint(vr, None, "batch", None, None, None)
+    pq = hint(pq, None, "batch", "qchunk")
+
+    def q_chunk_body(_, q_in):
+        q_blk, pq_blk = q_in  # (B,qc,Kv,G,hd), (B,qc)
+        m0 = hint(jnp.full((B, Kv, G, qc), -1e30, jnp.float32),
+                  "batch", None, None, "qchunk")
+        l0 = hint(jnp.zeros((B, Kv, G, qc), jnp.float32),
+                  "batch", None, None, "qchunk")
+        a0 = hint(jnp.zeros((B, Kv, G, qc, hd), jnp.float32),
+                  "batch", None, None, "qchunk", None)
+
+        def kv_body(carry, kv_in):
+            m, l, acc = carry
+            k_blk, v_blk, pk_blk = kv_in
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk).astype(jnp.float32) * scale
+            valid = jnp.ones((B, 1, 1, qc, kc), bool)
+            if causal:
+                valid &= pk_blk[:, None, None, None, :] <= pq_blk[:, None, None, :, None]
+            if window:
+                valid &= pk_blk[:, None, None, None, :] > (
+                    pq_blk[:, None, None, :, None] - window
+                )
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            corr = jnp.exp(m - m_new)
+            p_ = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p_.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p_.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), (kr, vr, pk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)  # (B,Kv,G,qc,hd)
+
+    _, chunks = jax.lax.scan(q_chunk_body, None, (qr, pq))  # (nq,B,Kv,G,qc,hd)
+    out = jnp.moveaxis(chunks, 0, 1)  # (B,nq,Kv,G,qc,hd)
+    out = jnp.moveaxis(out, 4, 2)     # (B,nq,qc,Kv,G,hd)
+    return out.reshape(B, Sq, H * hd)
+
+
+def full_attention(p, x, positions, cfg: ModelConfig, *, causal: bool = True):
+    """Training / prefill path.  Quadratic for short sequences, blockwise
+    online-softmax beyond BLOCKWISE_THRESHOLD.  Returns (out, (k, v))."""
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    q = common.apply_rope(q, positions, cfg)
+    k = common.apply_rope(k, positions, cfg)
+    if x.shape[1] > BLOCKWISE_THRESHOLD:
+        o = blockwise_gqa(
+            q, k, v, pos_q=positions, pos_k=positions, causal=causal, window=0,
+            cfg=cfg,
+        )
+        return common.dense(p["o"], o, cdtype=cfg.cdtype), (k, v)
+    scores = _gqa_scores(q, k, cfg)
+    if causal:
+        mask = positions[:, None, None, :, None] >= positions[:, None, None, None, :]
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(w, v, p, cfg), (k, v)
+
+
+def sliding_window_attention(p, x, positions, cfg: ModelConfig, *, window: int):
+    """Chunked SWA (train/prefill): chunks of size W attend to (prev, self).
+
+    Requires S % W == 0 (launchers pad); exact for row-contiguous positions.
+    Returns (out, (k, v)) where k, v cover the full sequence.
+    """
+    B, S, _ = x.shape
+    W = window
+    if S <= W:
+        out, kv = full_attention(p, x, positions, cfg, causal=True)
+        return out, kv
+    if S > BLOCKWISE_THRESHOLD:
+        # long-sequence path: blockwise online softmax with the window mask
+        q = _project_q(p, x, cfg)
+        k, v = _project_kv(p, x, cfg)
+        q = common.apply_rope(q, positions, cfg)
+        k = common.apply_rope(k, positions, cfg)
+        o = blockwise_gqa(
+            q, k, v, pos_q=positions, pos_k=positions, causal=True, window=W,
+            cfg=cfg,
+        )
+        return common.dense(p["o"], o, cdtype=cfg.cdtype), (k, v)
+    if S % W:
+        # end-pad to a multiple of W: padded keys sit at later positions than
+        # every real query, so the causal chunk mask already excludes them.
+        pad = W - S % W
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        # pad value irrelevant: the iota chunk mask already excludes padded
+        # keys (they follow every real query within their chunk)
+        pp = jnp.pad(positions, ((0, 0), (0, pad)))
+        out, (k, v) = sliding_window_attention(p, xp, pp, cfg, window=W)
+        return out[:, :S], (k[:, :S], v[:, :S])
+    nc = S // W
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    q = common.apply_rope(q, positions, cfg)
+    k = common.apply_rope(k, positions, cfg)
+
+    hd, Kv = cfg.hd, cfg.n_kv
+    G = cfg.n_heads // Kv
+    qc = q.reshape(B, nc, W, cfg.n_heads, hd)
+    kc = k.reshape(B, nc, W, Kv, hd)
+    vc = v.reshape(B, nc, W, Kv, hd)
+    # previous chunk (chunk 0's "previous" is masked out entirely)
+    kp = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kp, kc], axis=2)  # (B, nc, 2W, Kv, hd)
+    v2 = jnp.concatenate([vp, vc], axis=2)
+    qg = qc.reshape(B, nc, W, Kv, G, hd)
+    scores = jnp.einsum("bcqkgh,bcskh->bckgqs", qg, k2).astype(jnp.float32) * (
+        hd**-0.5
+    )
+    i = jax.lax.broadcasted_iota(jnp.int32, (W, 2 * W), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (W, 2 * W), 1)
+    # prev half (j < W): valid iff j > i (distance < W); own half: causal j-W <= i
+    mask = jnp.where(j < W, j > i, (j - W) <= i)
+    first = jax.lax.broadcasted_iota(jnp.int32, (nc, 1, 1), 0) == 0
+    mask = mask[None] & (~first | (j[None] >= W))  # chunk 0 has no prev
+    scores = jnp.where(mask[None, :, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bckgqs,bcskh->bcqkgh", w.astype(cfg.cdtype), v2)
+    o = o.reshape(B, S, cfg.n_heads * hd)
+    return common.dense(p["o"], o, cdtype=cfg.cdtype), (k, v)
+
+
+def cross_attention(p, x, kv_src_k, kv_src_v, cfg: ModelConfig):
+    """Decoder attends to a fixed encoder/vision memory (no mask, no rope)."""
+    q = _project_q(p, x, cfg)
+    Sq, Sk = x.shape[1], kv_src_k.shape[1]
+    if Sq > BLOCKWISE_THRESHOLD and Sq * Sk > BLOCKWISE_THRESHOLD**2:
+        B = x.shape[0]
+        pos_q = jnp.zeros((B, Sq), jnp.int32)
+        # memory length rarely divides KV_CHUNK: pad keys, mask via pos_k = -1
+        kc = min(KV_CHUNK, Sk)
+        pad = (-Sk) % kc
+        kp = jnp.pad(kv_src_k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(kv_src_v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_k = jnp.pad(
+            jnp.zeros((B, Sk), jnp.int32), ((0, 0), (0, pad)), constant_values=1
+        )
+        o = blockwise_gqa(
+            q, kp, vp, pos_q=pos_q, pos_k=pos_k, causal=True, window=0, cfg=cfg
+        )  # "causal" here means: mask pos_k(=1 on pads) > pos_q(=0) — pads only
+        return common.dense(p["o"], o, cdtype=cfg.cdtype)
+    scores = _gqa_scores(q, kv_src_k, cfg)
+    w = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(w, kv_src_v, p, cfg)
+
+
+def project_memory(p, mem, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder/vision memory."""
+    return _project_kv(p, mem, cfg)
+
+
+# --------------------------------------------------------------------------
+# KV cache (ring buffer; capacity = min(seq_len, window) for SWA archs)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv, cfg.hd), cfg.cdtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv, cfg.hd), cfg.cdtype),
+        "pos": jnp.full((capacity,), -(2**30), jnp.int32),
+    }
+
+
+def fill_cache_from_prefill(cache, k, v, prefill_len: int):
+    """Write the last `capacity` positions of a prefill into the ring.
+
+    The slot layout is statically known and contiguous modulo one wrap, so
+    this is at most two ``dynamic_update_slice`` block writes — never an
+    index scatter.  (A permutation scatter into the model-axis-sharded cache
+    dim lowered to a collective-permute storm: ~46 TB/device on the 32k
+    prefill dry-runs.  EXPERIMENTS.md §Perf iteration 1.)
+    """
+    cap = cache["k"].shape[1]
+    take = min(cap, prefill_len)
+    start_pos = prefill_len - take
+    start_slot = start_pos % cap
+    first = min(take, cap - start_slot)  # length before the ring wraps
+
+    def write(buf, vals, slot, *, seq_axis):
+        idx = [0] * buf.ndim
+        idx[seq_axis] = slot
+        return jax.lax.dynamic_update_slice(buf, vals.astype(buf.dtype), tuple(idx))
+
+    kk, vv = k[:, -take:], v[:, -take:]
+    pos_vals = jnp.arange(start_pos, prefill_len, dtype=jnp.int32)
+    ck, cv, cp = cache["k"], cache["v"], cache["pos"]
+    ck = write(ck, kk[:, :first], start_slot, seq_axis=1)
+    cv = write(cv, vv[:, :first], start_slot, seq_axis=1)
+    cp = write(cp, pos_vals[:first], start_slot, seq_axis=0)
+    if first < take:  # wrapped tail goes to slot 0
+        ck = write(ck, kk[:, first:], 0, seq_axis=1)
+        cv = write(cv, vv[:, first:], 0, seq_axis=1)
+        cp = write(cp, pos_vals[first:], 0, seq_axis=0)
+    return {"k": ck, "v": cv, "pos": cp}
+
+
+def decode_attention(p, x1, cache, pos, cfg: ModelConfig, *, window: int = 0):
+    """One-token decode.  x1 (B,1,D); pos scalar int32 (next position index).
+
+    Returns (out (B,1,D), new cache).
+    """
+    B = x1.shape[0]
+    cap = cache["k"].shape[1]
+    q = _project_q(p, x1, cfg)
+    k1, v1 = _project_kv(p, x1, cfg)
+    pos_arr = jnp.full((B, 1), pos, jnp.int32)
+    q = common.apply_rope(q, pos_arr, cfg)
+    k1 = common.apply_rope(k1, pos_arr, cfg)
+    slot = pos % cap
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None].astype(jnp.int32), (slot,))
+    scores = _gqa_scores(q, ck, cfg)  # (B,Kv,G,1,cap)
+    valid = (cpos >= 0) & (cpos <= pos)  # empty slots hold -2**30
+    if window:
+        valid &= cpos > pos - window
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(w, cv, p, cfg)
+    return out, {"k": ck, "v": cv, "pos": cpos}

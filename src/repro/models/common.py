@@ -1,0 +1,134 @@
+"""Shared building blocks for the model zoo: norms, MLPs, RoPE, embeddings.
+
+All models are pure-pytree functional: ``init_*`` builds nested dicts of
+arrays, ``*_fwd`` applies them.  Layer stacks are stored stacked along a
+leading layer dim and driven by ``lax.scan`` so compile time is O(1) in depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def init_dense(key, d_in, d_out, dtype, *, bias=False, scale=None):
+    scale = scale if scale is not None else d_in**-0.5
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, *, cdtype):
+    y = jnp.einsum("...i,io->...o", x.astype(cdtype), p["w"].astype(cdtype))
+    if "b" in p:
+        y = y + p["b"].astype(cdtype)
+    return y
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, *, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": init_dense(ks[0], d, f, cfg.pdtype),
+        "down": init_dense(ks[1], f, d, cfg.pdtype, scale=f**-0.5),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = init_dense(ks[2], d, f, cfg.pdtype)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    act = activation(cfg.act)
+    up = dense(p["up"], x, cdtype=cfg.cdtype)
+    h = act(dense(p["gate"], x, cdtype=cfg.cdtype)) * up if "gate" in p else act(up)
+    return dense(p["down"], h, cdtype=cfg.cdtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (with partial-rotary support for glm4)
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig):
+    hd = cfg.hd
+    rot = int(hd * cfg.rotary_pct) // 2 * 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    inv, rot = rope_freqs(cfg)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    y = jnp.stack([out1, out2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([y, xp], axis=-1).astype(x.dtype)
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": _normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embed(p, tokens, *, cdtype):
+    return p["table"].astype(cdtype)[tokens]
+
+
+def unembed(p, x, *, cdtype):
+    return jnp.einsum("...d,vd->...v", x.astype(cdtype), p["table"].astype(cdtype))
+
+
+def cross_entropy(logits, labels):
+    """Mean token-level CE.  logits (..., V) f32-cast; labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def stack_layers(init_one, key, n_layers: int):
+    """Initialize n layers and stack each leaf along a leading layer dim."""
+    keys = jax.random.split(key, n_layers)
+    layers = [init_one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *layers)

@@ -1,0 +1,148 @@
+"""Mamba-1 (selective SSM) backbone — falcon-mamba-7b family.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced by a
+*chunked associative scan*: the sequence is split into chunks; within a chunk
+the linear recurrence h_t = a_t ⊙ h_{t-1} + b_t runs as
+``lax.associative_scan`` (parallel, MXU/VPU friendly), and a ``lax.scan``
+carries the boundary state across chunks.  This bounds the materialized state
+to (B, chunk, d_inner, d_state) instead of (B, S, d_inner, d_state), which is
+the same blocking trade-off the original "hardware-aware" kernel makes for
+SRAM — re-derived here for VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+CHUNK = 256
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, dtr, ds, dc = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": common.init_dense(ks[0], d, 2 * di, cfg.pdtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (dc, di), jnp.float32)).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((di,), cfg.pdtype),
+        "x_proj": common.init_dense(ks[2], di, dtr + 2 * ds, cfg.pdtype),
+        "dt_proj": common.init_dense(ks[3], dtr, di, cfg.pdtype, bias=True),
+        "A_log": jnp.log(A).astype(cfg.pdtype),
+        "D": jnp.ones((di,), cfg.pdtype),
+        "out_proj": common.init_dense(ks[4], di, d, cfg.pdtype, scale=di**-0.5),
+        "norm": common.init_rmsnorm(d, cfg.pdtype),
+    }
+
+
+def _ssm_inputs(p, xz, cfg: ModelConfig):
+    """Project conv output to (delta, B, C) and the decay a = exp(Δ·A)."""
+    di, dtr, ds, _ = _dims(cfg)
+    proj = common.dense(p["x_proj"], xz, cdtype=cfg.cdtype)
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    delta = jax.nn.softplus(common.dense(p["dt_proj"], dt, cdtype=cfg.cdtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, ds), negative
+    # a: (..., di, ds); b: (..., di, ds) = Δ ⊙ x (outer with B)
+    a = jnp.exp(delta.astype(jnp.float32)[..., :, None] * A)
+    b = (delta * xz).astype(jnp.float32)[..., :, None] * Bm.astype(jnp.float32)[..., None, :]
+    return a, b, Cm.astype(jnp.float32)
+
+
+def _chunked_scan(a, b, C, h0):
+    """Linear recurrence via chunked associative scan.
+
+    a, b: (B, S, di, ds); C: (B, S, ds); h0: (B, di, ds).
+    Returns (y (B, S, di) f32, h_final).
+    """
+    Bsz, S, di, ds = a.shape
+    q = min(CHUNK, S)
+    assert S % q == 0, f"seq {S} not a multiple of chunk {q}"
+    nc = S // q
+    ar = a.reshape(Bsz, nc, q, di, ds).swapaxes(0, 1)
+    br = b.reshape(Bsz, nc, q, di, ds).swapaxes(0, 1)
+    Cr = C.reshape(Bsz, nc, q, ds).swapaxes(0, 1)
+
+    def combine(l, r):
+        al, bl = l
+        ar_, br_ = r
+        return al * ar_, bl * ar_ + br_
+
+    def chunk_step(h, inp):
+        ac, bc, cc = inp
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_t = acc_a * h[:, None] + acc_b  # (B, q, di, ds)
+        y = jnp.einsum("bqds,bqs->bqd", h_t, cc)
+        return h_t[:, -1], y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (ar, br, Cr))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, di)
+    return y, h_fin
+
+
+def _causal_conv(p, x, cfg: ModelConfig):
+    """Depthwise causal conv over seq: x (B,S,di)."""
+    dc = p["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1]] * p["conv_w"][i].astype(cfg.cdtype)
+        for i in range(dc)
+    )
+    return out + p["conv_b"].astype(cfg.cdtype)
+
+
+def mamba_layer(p, x, cfg: ModelConfig, h0=None):
+    """Full-sequence path. x (B,S,D). Returns (out, h_final)."""
+    di, *_ = _dims(cfg)
+    ds = cfg.ssm.d_state
+    B = x.shape[0]
+    resid = x
+    x = common.rmsnorm(p["norm"], x, eps=cfg.norm_eps)
+    xz = common.dense(p["in_proj"], x, cdtype=cfg.cdtype)
+    xpart, z = jnp.split(xz, 2, axis=-1)
+    xpart = jax.nn.silu(_causal_conv(p, xpart, cfg))
+    a, b, C = _ssm_inputs(p, xpart, cfg)
+    h0 = jnp.zeros((B, di, ds), jnp.float32) if h0 is None else h0
+    y, h_fin = _chunked_scan(a, b, C, h0)
+    y = y.astype(cfg.cdtype) + p["D"].astype(cfg.cdtype) * xpart
+    y = y * jax.nn.silu(z)
+    out = common.dense(p["out_proj"], y, cdtype=cfg.cdtype)
+    return resid + out, h_fin
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    di, _, ds, dc = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, di), cfg.cdtype),
+    }
+
+
+def mamba_decode_layer(p, x1, state, cfg: ModelConfig):
+    """One-token step. x1 (B,1,D). Returns (out (B,1,D), new state)."""
+    resid = x1
+    x = common.rmsnorm(p["norm"], x1, eps=cfg.norm_eps)
+    xz = common.dense(p["in_proj"], x, cdtype=cfg.cdtype)
+    xpart, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    window = jnp.concatenate([state["conv"], xpart], axis=1)  # (B,dc,di)
+    conv = jnp.einsum("bti,ti->bi", window.astype(cfg.cdtype), p["conv_w"].astype(cfg.cdtype))
+    xc = jax.nn.silu(conv + p["conv_b"].astype(cfg.cdtype))[:, None]
+    a, b, C = _ssm_inputs(p, xc, cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None]
+    y = y.astype(cfg.cdtype) + p["D"].astype(cfg.cdtype) * xc
+    y = y * jax.nn.silu(z)
+    out = common.dense(p["out_proj"], y, cdtype=cfg.cdtype)
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return resid + out, new_state

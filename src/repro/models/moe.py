@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN (Mixtral / Grok-1 style: softmax router, top-2).
+
+Dispatch is scatter/gather-based rather than one-hot-einsum-based: slot
+assignment is computed with a cumsum over router one-hots (cheap, int32) and
+tokens are moved with ``.at[slots].set`` / ``take``.  This keeps
+``cost_analysis`` FLOPs equal to the *active* expert compute (2·E·C·d·f per
+matmul) instead of polluting the roofline with fake dispatch-matmul FLOPs —
+and maps to all-to-alls rather than broadcast-gathers once sharded.
+
+Capacity-overflow tokens are dropped (standard practice; overflow slot E·C
+is a write-off buffer row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+
+    def ew(k, din, dout, scale):
+        return (scale * jax.random.normal(k, (E, din, dout), jnp.float32)).astype(
+            cfg.pdtype
+        )
+
+    p = {
+        "router": common.init_dense(ks[0], d, E, cfg.pdtype),
+        "up": ew(ks[1], d, f, d**-0.5),
+        "down": ew(ks[2], f, d, f**-0.5),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = ew(ks[3], d, f, d**-0.5)
+    return p
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar).
+
+    Dispatch is *group-wise*: each batch row routes independently (vmap over
+    B), so with the batch dim sharded over the data axis every scatter/gather
+    stays device-local — no cross-shard collective-permute storm (§Perf
+    iteration 3; the flat-token variant cost grok-1 ~29 TB/device of
+    collective-permute per 32k prefill).  Capacity is per group.
+    """
+    out, aux = jax.vmap(
+        lambda row: _moe_ffn_group(p, row, cfg), in_axes=0, out_axes=(0, 0)
+    )(x)
+    return out, jnp.mean(aux)
+
+
+def _moe_ffn_group(p, x, cfg: ModelConfig):
+    """x (S, D) — one routing group."""
+    mcfg = cfg.moe
+    S, D = x.shape
+    T = S
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = max(1, int(mcfg.capacity_factor * T * K / E))
+
+    xt = x.reshape(T, D)
+    logits = common.dense(p["router"], xt, cdtype=jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)  # (T,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    top1 = expert_ids[:, 0]
+    f_e = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    P_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * P_e) * mcfg.aux_loss_weight
+
+    # Slot assignment: flatten the K choices, count position within expert.
+    flat_e = expert_ids.reshape(T * K)  # choice-major per token
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (TK,E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot  # exclusive count
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]  # (TK,)
+    overflow = pos >= C
+    slots = jnp.where(overflow, E * C, flat_e * C + pos)  # E*C = dump row
+
+    buf = jnp.zeros((E * C + 1, D), cfg.cdtype)
+    xt_rep = jnp.repeat(xt.astype(cfg.cdtype), K, axis=0)  # token t appears K times
+    buf = buf.at[slots].set(xt_rep)
+    eb = buf[: E * C].reshape(E, C, D)
+
+    # Expert FFN: batched over experts — FLOPs = active compute only.
+    act = common.activation(cfg.act)
+    up = jnp.einsum("ecd,edf->ecf", eb, p["up"].astype(cfg.cdtype))
+    if "gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", eb, p["gate"].astype(cfg.cdtype))
+        h = act(g) * up
+    else:
+        h = act(up)
+    y = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(cfg.cdtype))
+
+    yflat = jnp.concatenate([y.reshape(E * C, D), jnp.zeros((1, D), cfg.cdtype)])
+    gathered = yflat[slots]  # (TK, D); dropped tokens read zeros
+    gathered = gathered * jnp.where(overflow, 0.0, gate_vals.reshape(T * K)).astype(
+        cfg.cdtype
+    )[:, None]
+    out = gathered.reshape(T, K, D).sum(axis=1).reshape(S, D)
+    return out, aux

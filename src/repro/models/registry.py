@@ -1,0 +1,134 @@
+"""Uniform model API over every architecture family.
+
+``get_model(cfg)`` returns a ``ModelDef`` with init / loss / prefill /
+decode / init_cache / input_specs closures; the FL engine, serving path and
+the multi-pod dry-run consume only this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import resnet, stacks
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    prefill: Optional[Callable[[Any, dict], tuple]] = None
+    decode: Optional[Callable[[Any, Any, jax.Array], tuple]] = None
+    init_cache: Optional[Callable[[int, int], Any]] = None
+
+    def input_specs(self, shape: ShapeConfig, *, batch_override: int = 0) -> dict:
+        """ShapeDtypeStruct stand-ins for one global batch of `shape`."""
+        return input_specs(self.cfg, shape, batch_override=batch_override)
+
+
+def _specs_train(cfg: ModelConfig, B: int, S: int) -> dict:
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    specs = {"tokens": tok, "labels": tok}
+    if cfg.family == "audio":
+        # stub mel+conv frontend: precomputed frame embeddings; decoder text
+        # length S // 8 (audio-to-text compression; DESIGN.md §5)
+        dec = max(stacks.CE_CHUNK, S // 8)
+        specs = {
+            "frame_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((B, dec), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, dec), jnp.int32),
+        }
+    elif cfg.family == "vlm":
+        specs["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.float32
+        )
+    elif cfg.family == "resnet":
+        specs = {
+            "images": jax.ShapeDtypeStruct((B, 32, 32, 3), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    return specs
+
+
+def _specs_prefill(cfg: ModelConfig, B: int, S: int) -> dict:
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        specs = {
+            "frame_embeds": jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    elif cfg.family == "vlm":
+        specs["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), jnp.float32
+        )
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, batch_override: int = 0) -> dict:
+    B = batch_override or shape.global_batch
+    if shape.kind == "train":
+        return _specs_train(cfg, B, shape.seq_len)
+    if shape.kind == "prefill":
+        return _specs_prefill(cfg, B, shape.seq_len)
+    # decode: ONE new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def get_model(cfg: ModelConfig) -> ModelDef:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelDef(
+            cfg,
+            init=lambda key: stacks.init_lm(key, cfg),
+            loss=lambda p, b: stacks.lm_loss(p, cfg, b),
+            prefill=lambda p, b: stacks.lm_prefill(p, cfg, b),
+            decode=lambda p, c, t: stacks.lm_decode(p, cfg, c, t),
+            init_cache=lambda bs, sl: stacks.lm_init_cache(cfg, bs, sl),
+        )
+    if fam == "vlm":
+        return ModelDef(
+            cfg,
+            init=lambda key: stacks.init_vlm(key, cfg),
+            loss=lambda p, b: stacks.vlm_loss(p, cfg, b),
+            prefill=lambda p, b: stacks.vlm_prefill(p, cfg, b),
+            decode=lambda p, c, t: stacks.vlm_decode(p, cfg, c, t),
+            init_cache=lambda bs, sl: stacks.vlm_init_cache(cfg, bs, sl),
+        )
+    if fam == "audio":
+        return ModelDef(
+            cfg,
+            init=lambda key: stacks.init_encdec(key, cfg),
+            loss=lambda p, b: stacks.encdec_loss(p, cfg, b),
+            prefill=lambda p, b: stacks.encdec_prefill(p, cfg, b),
+            decode=lambda p, c, t: stacks.encdec_decode(p, cfg, c, t),
+            init_cache=lambda bs, sl: stacks.encdec_init_cache(cfg, bs, sl),
+        )
+    if fam == "ssm":
+        return ModelDef(
+            cfg,
+            init=lambda key: stacks.init_mamba_lm(key, cfg),
+            loss=lambda p, b: stacks.mamba_loss(p, cfg, b),
+            prefill=lambda p, b: stacks.mamba_prefill(p, cfg, b),
+            decode=lambda p, c, t: stacks.mamba_decode(p, cfg, c, t),
+            init_cache=lambda bs, sl: stacks.mamba_init_cache(cfg, bs, sl),
+        )
+    if fam == "hybrid":
+        return ModelDef(
+            cfg,
+            init=lambda key: stacks.init_hybrid(key, cfg),
+            loss=lambda p, b: stacks.hybrid_loss(p, cfg, b),
+            prefill=lambda p, b: stacks.hybrid_prefill(p, cfg, b),
+            decode=lambda p, c, t: stacks.hybrid_decode(p, cfg, c, t),
+            init_cache=lambda bs, sl: stacks.hybrid_init_cache(cfg, bs, sl),
+        )
+    if fam == "resnet":
+        return ModelDef(
+            cfg,
+            init=lambda key: resnet.init_resnet20(key, cfg),
+            loss=lambda p, b: resnet.resnet20_loss(p, cfg, b),
+        )
+    raise ValueError(f"unknown family: {fam!r}")

@@ -1,0 +1,104 @@
+"""ResNet-20 for CIFAR-shaped inputs — the paper's §V model.
+
+Faithful 3-stage (16/32/64 channels, 3 basic blocks each) CIFAR ResNet.
+One documented deviation (DESIGN.md §8): GroupNorm(8) replaces BatchNorm so
+the model stays purely functional — BN running statistics interact badly with
+federated parameter averaging and add mutable state for no benefit to the
+protocol under study.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (2.0 / fan_in) ** 0.5
+    return w.astype(dtype)
+
+
+def _conv(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _init_gn(c, dtype):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def _gn(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xf = x.astype(jnp.float32).reshape(B, H, W, g, C // g)
+    mu = xf.mean(axis=(1, 2, 4), keepdims=True)
+    var = xf.var(axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(B, H, W, C)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _init_block(key, cin, cout, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(ks[0], 3, 3, cin, cout, dtype),
+        "gn1": _init_gn(cout, dtype),
+        "conv2": _conv_init(ks[1], 3, 3, cout, cout, dtype),
+        "gn2": _init_gn(cout, dtype),
+    }
+    if cin != cout:
+        p["proj"] = _conv_init(ks[2], 1, 1, cin, cout, dtype)
+    return p
+
+
+def _block(p, x, stride):
+    h = jax.nn.relu(_gn(p["gn1"], _conv(p["conv1"], x, stride)))
+    h = _gn(p["gn2"], _conv(p["conv2"], h))
+    sc = _conv(p["proj"], x, stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def init_resnet20(key, cfg: ModelConfig, num_classes: int = 10):
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 12)
+    widths = [16, 32, 64]
+    params = {"stem": _conv_init(ks[0], 3, 3, 3, 16, dtype), "gn0": _init_gn(16, dtype)}
+    cin = 16
+    i = 1
+    for s, w in enumerate(widths):
+        for b in range(3):
+            params[f"s{s}b{b}"] = _init_block(ks[i], cin, w, dtype)
+            cin = w
+            i += 1
+    params["fc"] = {
+        "w": jax.random.normal(ks[i], (64, num_classes), jnp.float32).astype(dtype)
+        * 64**-0.5,
+        "b": jnp.zeros((num_classes,), dtype),
+    }
+    return params
+
+
+def resnet20_logits(params, cfg: ModelConfig, images):
+    """images (B, 32, 32, 3) -> logits (B, 10)."""
+    x = images.astype(cfg.cdtype)
+    x = jax.nn.relu(_gn(params["gn0"], _conv(params["stem"], x)))
+    for s in range(3):
+        for b in range(3):
+            stride = 2 if (s > 0 and b == 0) else 1
+            x = _block(params[f"s{s}b{b}"], x, stride)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc"]["w"].astype(cfg.cdtype) + params["fc"]["b"].astype(cfg.cdtype)
+
+
+def resnet20_loss(params, cfg: ModelConfig, batch):
+    logits = resnet20_logits(params, cfg, batch["images"]).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,135 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) — the recurrent 2/3 of
+the hybrid architecture.  Linear per-channel recurrence
+
+    r_t = σ(W_a x_t + b_a)            (recurrence gate)
+    i_t = σ(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t) (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+run with ``lax.associative_scan`` over the sequence (state is (B, S, width) —
+no d_state blow-up, so no chunking needed).  The full Griffin recurrent block
+is: linear → causal conv(4) → RG-LRU on one branch, gated by GeLU(linear) on
+the other, then an output projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+_C = 8.0
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d, w = cfg.d_model, _width(cfg)
+    dc = cfg.rglru.conv_width
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r = 1 (griffin init)
+    lam = jax.random.uniform(ks[0], (w,), minval=2.0, maxval=6.0)
+    return {
+        "in_x": common.init_dense(ks[1], d, w, cfg.pdtype),
+        "in_gate": common.init_dense(ks[2], d, w, cfg.pdtype),
+        "conv_w": (0.1 * jax.random.normal(ks[3], (dc, w), jnp.float32)).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((w,), cfg.pdtype),
+        "W_a": common.init_dense(ks[4], w, w, cfg.pdtype, bias=True),
+        "W_x": common.init_dense(ks[5], w, w, cfg.pdtype, bias=True),
+        "lam": lam.astype(cfg.pdtype),
+        "out": common.init_dense(jax.random.fold_in(key, 7), w, d, cfg.pdtype, scale=w**-0.5),
+    }
+
+
+def _gates(p, x, cfg: ModelConfig):
+    r = jax.nn.sigmoid(common.dense(p["W_a"], x, cdtype=jnp.float32))
+    i = jax.nn.sigmoid(common.dense(p["W_x"], x, cdtype=jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated_in
+
+
+def _causal_conv(p, x, cfg: ModelConfig):
+    dc = p["conv_w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1]] * p["conv_w"][i].astype(cfg.cdtype)
+        for i in range(dc)
+    )
+    return out + p["conv_b"].astype(cfg.cdtype)
+
+
+# chunk length for the linear recurrence: bounds the (B, chunk, W) f32
+# gate/state tensors the backward pass must hold (EXPERIMENTS.md §Perf it. 5)
+CHUNK = 512
+
+
+def _combine(l, r):
+    return l[0] * r[0], l[1] * r[0] + r[1]
+
+
+def _recurrence_from_xb(p, xb, cfg: ModelConfig, h0):
+    """Gates + linear recurrence, chunked over the sequence.
+
+    The W_a/W_x projections, the f32 decay/input gates and the associative
+    scan all live *inside* the per-chunk checkpoint, so the backward pass
+    holds one (B, CHUNK, W) working set instead of five (B, S, W) f32
+    tensors.  xb: (B, S, W) post-conv activations (bf16).
+    """
+    B, S, W = xb.shape
+    q = min(CHUNK, S)
+    if S % q:
+        a, b = _gates(p, xb, cfg)  # short sequences: one-shot
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0)
+        _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+        return h.astype(cfg.cdtype)
+    nc = S // q
+    xr = xb.reshape(B, nc, q, W).swapaxes(0, 1)
+    h0 = jnp.zeros((B, W), jnp.float32) if h0 is None else h0
+
+    @jax.checkpoint
+    def chunk_step(h, xc):
+        ac, bc = _gates(p, xc, cfg)
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hc = jax.lax.associative_scan(_combine, (ac, bc), axis=1)
+        return hc[:, -1], hc.astype(cfg.cdtype)
+
+    _, hs = jax.lax.scan(chunk_step, h0, xr)
+    return hs.swapaxes(0, 1).reshape(B, S, W)
+
+
+def rglru_block(p, x, cfg: ModelConfig, h0=None):
+    """Full-sequence path.  x (B,S,D) -> (out (B,S,D), h_final (B,W))."""
+    xb = common.dense(p["in_x"], x, cdtype=cfg.cdtype)
+    gate = jax.nn.gelu(common.dense(p["in_gate"], x, cdtype=cfg.cdtype))
+    xb = _causal_conv(p, xb, cfg)
+    h = _recurrence_from_xb(p, xb, cfg, h0)
+    y = h * gate
+    return common.dense(p["out"], y, cdtype=cfg.cdtype), h[:, -1].astype(jnp.float32)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    w, dc = _width(cfg), cfg.rglru.conv_width
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, w), cfg.cdtype),
+    }
+
+
+def rglru_decode_block(p, x1, state, cfg: ModelConfig):
+    """One-token step.  x1 (B,1,D) -> (out (B,1,D), new state)."""
+    xb = common.dense(p["in_x"], x1, cdtype=cfg.cdtype)  # (B,1,W)
+    gate = jax.nn.gelu(common.dense(p["in_gate"], x1, cdtype=cfg.cdtype))
+    window = jnp.concatenate([state["conv"], xb], axis=1)  # (B,dc,W)
+    conv = jnp.einsum("btw,tw->bw", window.astype(cfg.cdtype), p["conv_w"].astype(cfg.cdtype))
+    xc = (conv + p["conv_b"].astype(cfg.cdtype))[:, None]
+    a, b = _gates(p, xc, cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = h[:, None].astype(cfg.cdtype) * gate
+    out = common.dense(p["out"], y, cdtype=cfg.cdtype)
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,759 @@
+"""Model assembly: full LM stacks per architecture family.
+
+Every family exposes the same five entry points consumed by the FL engine,
+the serving path and the dry-run launcher:
+
+    init(key, cfg)                          -> params
+    loss(params, cfg, batch)                -> scalar loss
+    prefill(params, cfg, batch)             -> (last_logits, cache)
+    decode(params, cfg, cache, tokens)      -> (logits, cache)
+    (plus ``registry.input_specs`` for shapes)
+
+Layer stacks are stacked-pytree + ``lax.scan`` (compile time O(1) in depth);
+every scanned train block is wrapped in ``jax.checkpoint`` (full remat — the
+baseline activation policy; revisited in EXPERIMENTS.md §Perf).
+Cross-entropy is computed in sequence chunks so the (B, S, V) logits tensor
+is never materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mamba, moe, rglru
+
+CE_CHUNK = 256
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+
+def _positions(B, S, offset=0):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None] + offset, (B, S))
+
+
+def _init_dense_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = common.init_mlp(ks[2], cfg)
+    return p
+
+
+def _dense_block(p, x, positions, cfg: ModelConfig, *, collect_kv=False):
+    h = common.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    if cfg.sliding_window:
+        a, kv = attention.sliding_window_attention(
+            p["attn"], h, positions, cfg, window=cfg.sliding_window
+        )
+    else:
+        a, kv = attention.full_attention(p["attn"], h, positions, cfg, causal=True)
+    x = x + a
+    h = common.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe.moe_ffn(p["moe"], h, cfg)
+    else:
+        m, aux = common.mlp(p["mlp"], h, cfg), jnp.float32(0.0)
+    x = x + m
+    return x, aux, (kv if collect_kv else None)
+
+
+def _dense_block_decode(p, x1, cache, pos, cfg: ModelConfig):
+    h = common.rmsnorm(p["ln1"], x1, eps=cfg.norm_eps)
+    a, cache = attention.decode_attention(
+        p["attn"], h, cache, pos, cfg, window=cfg.sliding_window
+    )
+    x1 = x1 + a
+    h = common.rmsnorm(p["ln2"], x1, eps=cfg.norm_eps)
+    if "moe" in p:
+        m, _ = moe.moe_ffn(p["moe"], h, cfg)
+    else:
+        m = common.mlp(p["mlp"], h, cfg)
+    return x1 + m, cache
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = common.rmsnorm(params["norm"], x, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return common.unembed(params["embed"], x, cdtype=cfg.cdtype)
+    return common.dense(params["head"], x, cdtype=cfg.cdtype)
+
+
+def _chunked_ce(params, cfg: ModelConfig, x, labels):
+    """Mean CE without materializing (B, S, V).  x (B,S,D), labels (B,S)."""
+    B, S, _ = x.shape
+    c = min(CE_CHUNK, S)
+    assert S % c == 0
+    xc = x.reshape(B, S // c, c, -1).swapaxes(0, 1)
+    lc = labels.reshape(B, S // c, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xch, lch = inp
+        logits = _logits(params, cfg, xch)
+        return carry + common.cross_entropy(logits, lch) * (c / S), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (xc, lc))
+    return total
+
+
+def _cache_capacity(cfg: ModelConfig, total_len: int) -> int:
+    w = cfg.sliding_window
+    return min(total_len, w) if w else total_len
+
+
+# Ring-buffer headroom reserved by prefill so subsequent decode steps do not
+# evict live positions of full-attention caches.
+PREFILL_HEADROOM = 128
+
+
+# --------------------------------------------------------------------------
+# dense / moe LM
+# --------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    params = {
+        "embed": common.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "blocks": common.stack_layers(
+            lambda k: _init_dense_block(k, cfg), ks[1], cfg.n_layers
+        ),
+        "norm": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = common.init_dense(ks[2], cfg.d_model, cfg.vocab, cfg.pdtype)
+    return params
+
+
+def lm_backbone(params, cfg: ModelConfig, tokens):
+    B, S = tokens.shape
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    @jax.checkpoint
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a, _ = _dense_block(layer_p, x, pos, cfg)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    return x, aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch):
+    x, aux = lm_backbone(params, cfg, batch["tokens"])
+    return _chunked_ce(params, cfg, x, batch["labels"]) + aux
+
+
+def lm_prefill(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cap = _cache_capacity(cfg, S + PREFILL_HEADROOM)
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    def body(x, layer_p):
+        x, _, (k, v) = _dense_block(layer_p, x, pos, cfg, collect_kv=True)
+        cache = attention.fill_cache_from_prefill(
+            attention.init_cache(cfg, B, cap), k, v, S
+        )
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, {"layers": caches, "t": jnp.int32(S)}
+
+
+def lm_init_cache(cfg: ModelConfig, batch_size: int, seq_len: int):
+    """Cache stand-in for decode dry-runs: full cache of `seq_len` tokens."""
+    cap = _cache_capacity(cfg, seq_len)
+    one = attention.init_cache(cfg, batch_size, cap)
+    layers = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape), one
+    )
+    return {"layers": layers, "t": jnp.int32(seq_len)}
+
+
+def lm_decode(params, cfg: ModelConfig, cache, tokens):
+    """tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = cache["t"]
+
+    def body(x, inp):
+        layer_p, layer_cache = inp
+        x, new_cache = _dense_block_decode(layer_p, x, layer_cache, pos, cfg)
+        return x, new_cache
+
+    x, caches = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    return _logits(params, cfg, x), {"layers": caches, "t": pos + 1}
+
+
+# --------------------------------------------------------------------------
+# VLM: groups of (cross_attn_every - 1) self layers + 1 gated cross layer
+# --------------------------------------------------------------------------
+
+
+def _init_cross_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "xattn": attention.init_attention(ks[0], cfg, cross=True),
+        "gate_a": jnp.zeros((), cfg.pdtype),
+        "ln2": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": common.init_mlp(ks[1], cfg),
+        "gate_m": jnp.zeros((), cfg.pdtype),
+    }
+
+
+def _cross_block(p, x, mem_k, mem_v, cfg: ModelConfig):
+    h = common.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    a = attention.cross_attention(p["xattn"], h, mem_k, mem_v, cfg)
+    x = x + jnp.tanh(p["gate_a"].astype(jnp.float32)).astype(x.dtype) * a
+    h = common.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    m = common.mlp(p["mlp"], h, cfg)
+    return x + jnp.tanh(p["gate_m"].astype(jnp.float32)).astype(x.dtype) * m
+
+
+def init_vlm(key, cfg: ModelConfig):
+    every = cfg.cross_attn_every
+    n_groups = cfg.n_layers // every
+    n_self = every - 1
+    ks = jax.random.split(key, 5)
+
+    def init_group(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "selfs": common.stack_layers(lambda kk: _init_dense_block(kk, cfg), k1, n_self),
+            "cross": _init_cross_block(k2, cfg),
+        }
+
+    params = {
+        "embed": common.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "groups": common.stack_layers(init_group, ks[1], n_groups),
+        "norm": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "head": common.init_dense(ks[2], cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+    return params
+
+
+def vlm_backbone(params, cfg: ModelConfig, tokens, img_embeds):
+    B, S = tokens.shape
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+    img = img_embeds.astype(cfg.cdtype)
+
+    @jax.checkpoint
+    def group_body(x, gp):
+        def self_body(x, lp):
+            x, _, _ = _dense_block(lp, x, pos, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(self_body, x, gp["selfs"])
+        mk, mv = attention.project_memory(gp["cross"]["xattn"], img, cfg)
+        x = _cross_block(gp["cross"], x, mk, mv, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    return x
+
+
+def vlm_loss(params, cfg: ModelConfig, batch):
+    x = vlm_backbone(params, cfg, batch["tokens"], batch["img_embeds"])
+    return _chunked_ce(params, cfg, x, batch["labels"])
+
+
+def vlm_prefill(params, cfg: ModelConfig, batch):
+    tokens, img = batch["tokens"], batch["img_embeds"].astype(cfg.cdtype)
+    B, S = tokens.shape
+    cap = _cache_capacity(cfg, S + PREFILL_HEADROOM)
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    def group_body(x, gp):
+        def self_body(x, lp):
+            x, _, (k, v) = _dense_block(lp, x, pos, cfg, collect_kv=True)
+            cache = attention.fill_cache_from_prefill(
+                attention.init_cache(cfg, B, cap), k, v, S
+            )
+            return x, cache
+
+        x, self_caches = jax.lax.scan(self_body, x, gp["selfs"])
+        mk, mv = attention.project_memory(gp["cross"]["xattn"], img, cfg)
+        x = _cross_block(gp["cross"], x, mk, mv, cfg)
+        return x, (self_caches, (mk, mv))
+
+    x, (caches, mem_kv) = jax.lax.scan(group_body, x, params["groups"])
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, {"layers": caches, "mem_kv": mem_kv, "t": jnp.int32(S)}
+
+
+def vlm_init_cache(cfg: ModelConfig, batch_size: int, seq_len: int):
+    every = cfg.cross_attn_every
+    n_groups, n_self = cfg.n_layers // every, every - 1
+    cap = _cache_capacity(cfg, seq_len)
+    one = attention.init_cache(cfg, batch_size, cap)
+    layers = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_groups, n_self) + leaf.shape), one
+    )
+    mem = jnp.zeros((n_groups, batch_size, cfg.n_image_tokens, cfg.n_kv, cfg.hd), cfg.cdtype)
+    return {"layers": layers, "mem_kv": (mem, mem), "t": jnp.int32(seq_len)}
+
+
+def vlm_decode(params, cfg: ModelConfig, cache, tokens):
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = cache["t"]
+
+    def group_body(x, inp):
+        gp, self_caches, (mk, mv) = inp
+
+        def self_body(x, sinp):
+            lp, lc = sinp
+            x, nc = _dense_block_decode(lp, x, lc, pos, cfg)
+            return x, nc
+
+        x, new_caches = jax.lax.scan(self_body, x, (gp["selfs"], self_caches))
+        x = _cross_block(gp["cross"], x, mk, mv, cfg)
+        return x, new_caches
+
+    x, caches = jax.lax.scan(
+        group_body, x, (params["groups"], cache["layers"], cache["mem_kv"])
+    )
+    return _logits(params, cfg, x), {
+        "layers": caches,
+        "mem_kv": cache["mem_kv"],
+        "t": pos + 1,
+    }
+
+
+# --------------------------------------------------------------------------
+# encoder-decoder (whisper): stub frontend supplies frame embeddings
+# --------------------------------------------------------------------------
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "ln2": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": common.init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": attention.init_attention(ks[0], cfg),
+        "lnx": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "xattn": attention.init_attention(ks[1], cfg, cross=True),
+        "ln2": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": common.init_mlp(ks[2], cfg),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    return {
+        "enc_blocks": common.stack_layers(
+            lambda k: _init_enc_block(k, cfg), ks[0], cfg.n_enc_layers
+        ),
+        "enc_norm": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "embed": common.init_embedding(ks[1], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "blocks": common.stack_layers(
+            lambda k: _init_dec_block(k, cfg), ks[2], cfg.n_layers
+        ),
+        "norm": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "head": common.init_dense(ks[3], cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frame_embeds):
+    x = frame_embeds.astype(cfg.cdtype)
+    B, F, _ = x.shape
+    pos = _positions(B, F)
+
+    @jax.checkpoint
+    def body(x, lp):
+        h = common.rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+        a, _ = attention.full_attention(lp["attn"], h, pos, cfg, causal=False)
+        x = x + a
+        h = common.rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        return x + common.mlp(lp["mlp"], h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return common.rmsnorm(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def _dec_block(p, x, positions, memory, cfg: ModelConfig, *, collect_kv=False):
+    h = common.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    a, kv = attention.full_attention(p["attn"], h, positions, cfg, causal=True)
+    x = x + a
+    h = common.rmsnorm(p["lnx"], x, eps=cfg.norm_eps)
+    mk, mv = attention.project_memory(p["xattn"], memory, cfg)
+    x = x + attention.cross_attention(p["xattn"], h, mk, mv, cfg)
+    h = common.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    x = x + common.mlp(p["mlp"], h, cfg)
+    return x, (kv if collect_kv else None), (mk, mv)
+
+
+def encdec_loss(params, cfg: ModelConfig, batch):
+    memory = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    @jax.checkpoint
+    def body(x, lp):
+        x, _, _ = _dec_block(lp, x, pos, memory, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return _chunked_ce(params, cfg, x, batch["labels"])
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch):
+    memory = encode(params, cfg, batch["frame_embeds"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cap = _cache_capacity(cfg, S + PREFILL_HEADROOM)
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    def body(x, lp):
+        x, (k, v), mem_kv = _dec_block(lp, x, pos, memory, cfg, collect_kv=True)
+        cache = attention.fill_cache_from_prefill(
+            attention.init_cache(cfg, B, cap), k, v, S
+        )
+        return x, (cache, mem_kv)
+
+    x, (caches, mem_kv) = jax.lax.scan(body, x, params["blocks"])
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, {"layers": caches, "mem_kv": mem_kv, "t": jnp.int32(S)}
+
+
+def encdec_init_cache(cfg: ModelConfig, batch_size: int, seq_len: int):
+    cap = _cache_capacity(cfg, seq_len)
+    one = attention.init_cache(cfg, batch_size, cap)
+    layers = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape), one
+    )
+    mem = jnp.zeros(
+        (cfg.n_layers, batch_size, cfg.enc_frames, cfg.n_kv, cfg.hd), cfg.cdtype
+    )
+    return {"layers": layers, "mem_kv": (mem, mem), "t": jnp.int32(seq_len)}
+
+
+def encdec_decode(params, cfg: ModelConfig, cache, tokens):
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = cache["t"]
+
+    def body(x, inp):
+        lp, lc, (mk, mv) = inp
+        h = common.rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+        a, nc = attention.decode_attention(lp["attn"], h, lc, pos, cfg)
+        x = x + a
+        h = common.rmsnorm(lp["lnx"], x, eps=cfg.norm_eps)
+        x = x + attention.cross_attention(lp["xattn"], h, mk, mv, cfg)
+        h = common.rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+        x = x + common.mlp(lp["mlp"], h, cfg)
+        return x, nc
+
+    x, caches = jax.lax.scan(body, x, (params["blocks"], cache["layers"], cache["mem_kv"]))
+    return _logits(params, cfg, x), {
+        "layers": caches,
+        "mem_kv": cache["mem_kv"],
+        "t": pos + 1,
+    }
+
+
+# --------------------------------------------------------------------------
+# SSM (falcon-mamba)
+# --------------------------------------------------------------------------
+
+
+def init_mamba_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": common.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "blocks": common.stack_layers(
+            lambda k: mamba.init_mamba_layer(k, cfg), ks[1], cfg.n_layers
+        ),
+        "norm": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "head": common.init_dense(ks[2], cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+
+
+def mamba_loss(params, cfg: ModelConfig, batch):
+    x = common.embed(params["embed"], batch["tokens"], cdtype=cfg.cdtype)
+
+    @jax.checkpoint
+    def body(x, lp):
+        x, _ = mamba.mamba_layer(lp, x, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return _chunked_ce(params, cfg, x, batch["labels"])
+
+
+def mamba_prefill(params, cfg: ModelConfig, batch):
+    x = common.embed(params["embed"], batch["tokens"], cdtype=cfg.cdtype)
+    B = x.shape[0]
+
+    def body(x, lp):
+        # conv tail (last d_conv-1 *pre-conv* activations) must come from the
+        # layer input, so recompute the in_proj tail before running the layer.
+        xn = common.rmsnorm(lp["norm"], x, eps=cfg.norm_eps)
+        tail = common.dense(
+            lp["in_proj"], xn[:, -(cfg.ssm.d_conv - 1) :], cdtype=cfg.cdtype
+        )
+        conv_tail = jnp.split(tail, 2, axis=-1)[0]
+        x, h = mamba.mamba_layer(lp, x, cfg)
+        return x, {"h": h, "conv": conv_tail}
+
+    x, states = jax.lax.scan(body, x, params["blocks"])
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, {"layers": states, "t": jnp.int32(batch["tokens"].shape[1])}
+
+
+def mamba_init_cache(cfg: ModelConfig, batch_size: int, seq_len: int):
+    one = mamba.init_mamba_state(cfg, batch_size)
+    layers = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (cfg.n_layers,) + leaf.shape), one
+    )
+    return {"layers": layers, "t": jnp.int32(seq_len)}
+
+
+def mamba_decode(params, cfg: ModelConfig, cache, tokens):
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+
+    def body(x, inp):
+        lp, st = inp
+        x, st = mamba.mamba_decode_layer(lp, x, st, cfg)
+        return x, st
+
+    x, states = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    return _logits(params, cfg, x), {"layers": states, "t": cache["t"] + 1}
+
+
+# --------------------------------------------------------------------------
+# hybrid (recurrentgemma): (rec, rec, attn) groups + remainder rec layers
+# --------------------------------------------------------------------------
+
+
+def _hybrid_counts(cfg: ModelConfig):
+    pat = len(cfg.rglru.block_pattern)  # 3
+    return cfg.n_layers // pat, cfg.n_layers % pat
+
+
+def _init_temporal_unit(key, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    unit = {
+        "ln1": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "ln2": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": common.init_mlp(k2, cfg),
+    }
+    if kind == "recurrent":
+        unit["rec"] = rglru.init_rglru_block(k1, cfg)
+    else:
+        unit["attn"] = attention.init_attention(k1, cfg)
+    return unit
+
+
+def _temporal_unit_fwd(p, x, positions, cfg: ModelConfig, state=None):
+    """One griffin layer: temporal mixer + MLP, both residual.
+    Returns (x, new_state_or_kv)."""
+    h = common.rmsnorm(p["ln1"], x, eps=cfg.norm_eps)
+    if "rec" in p:
+        o, hfin = rglru.rglru_block(p["rec"], h, cfg)
+        out_state = hfin
+    else:
+        o, (k, v) = attention.sliding_window_attention(
+            p["attn"], h, positions, cfg, window=cfg.rglru.local_window
+        )
+        out_state = (k, v)
+    x = x + o
+    h = common.rmsnorm(p["ln2"], x, eps=cfg.norm_eps)
+    return x + common.mlp(p["mlp"], h, cfg), out_state
+
+
+def init_hybrid(key, cfg: ModelConfig):
+    n_groups, rem = _hybrid_counts(cfg)
+    ks = jax.random.split(key, 6)
+
+    def init_group(k):
+        kk = jax.random.split(k, len(cfg.rglru.block_pattern))
+        return {
+            f"u{i}": _init_temporal_unit(kk[i], cfg, kind)
+            for i, kind in enumerate(cfg.rglru.block_pattern)
+        }
+
+    params = {
+        "embed": common.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg.pdtype),
+        "groups": common.stack_layers(init_group, ks[1], n_groups),
+        "norm": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "head": common.init_dense(ks[2], cfg.d_model, cfg.vocab, cfg.pdtype),
+    }
+    if rem:
+        params["rem"] = common.stack_layers(
+            lambda k: _init_temporal_unit(k, cfg, "recurrent"), ks[3], rem
+        )
+    return params
+
+
+def hybrid_backbone(params, cfg: ModelConfig, tokens):
+    B, S = tokens.shape
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    @jax.checkpoint
+    def group_body(x, gp):
+        for i in range(len(cfg.rglru.block_pattern)):
+            x, _ = _temporal_unit_fwd(gp[f"u{i}"], x, pos, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if "rem" in params:
+
+        @jax.checkpoint
+        def rem_body(x, lp):
+            x, _ = _temporal_unit_fwd(lp, x, pos, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(rem_body, x, params["rem"])
+    return x
+
+
+def hybrid_loss(params, cfg: ModelConfig, batch):
+    x = hybrid_backbone(params, cfg, batch["tokens"])
+    return _chunked_ce(params, cfg, x, batch["labels"])
+
+
+def _hybrid_unit_state(cfg: ModelConfig, kind: str, B: int, cap: int):
+    if kind == "recurrent":
+        return rglru.init_rglru_state(cfg, B)
+    return attention.init_cache(cfg, B, cap)
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch_size: int, seq_len: int):
+    n_groups, rem = _hybrid_counts(cfg)
+    cap = min(seq_len, cfg.rglru.local_window)
+    group_state = {
+        f"u{i}": _hybrid_unit_state(cfg, kind, batch_size, cap)
+        for i, kind in enumerate(cfg.rglru.block_pattern)
+    }
+    groups = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_groups,) + leaf.shape), group_state
+    )
+    cache = {"groups": groups, "t": jnp.int32(seq_len)}
+    if rem:
+        rs = rglru.init_rglru_state(cfg, batch_size)
+        cache["rem"] = jax.tree.map(
+            lambda leaf: jnp.broadcast_to(leaf, (rem,) + leaf.shape), rs
+        )
+    return cache
+
+
+def hybrid_prefill(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cap = min(S + PREFILL_HEADROOM, cfg.rglru.local_window)
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = _positions(B, S)
+
+    def group_body2(x, gp):
+        states = {}
+        for i, kind in enumerate(cfg.rglru.block_pattern):
+            unit = gp[f"u{i}"]
+            h = common.rmsnorm(unit["ln1"], x, eps=cfg.norm_eps)
+            if kind == "recurrent":
+                xb = common.dense(unit["rec"]["in_x"], h, cdtype=cfg.cdtype)
+                dc = cfg.rglru.conv_width
+                conv_tail = xb[:, -(dc - 1) :]
+                o, hfin = rglru.rglru_block(unit["rec"], h, cfg)
+                x = x + o
+                states[f"u{i}"] = {"h": hfin, "conv": conv_tail}
+            else:
+                o, (k, v) = attention.sliding_window_attention(
+                    unit["attn"], h, pos, cfg, window=cfg.rglru.local_window
+                )
+                x = x + o
+                states[f"u{i}"] = attention.fill_cache_from_prefill(
+                    attention.init_cache(cfg, B, cap), k, v, S
+                )
+            hh = common.rmsnorm(unit["ln2"], x, eps=cfg.norm_eps)
+            x = x + common.mlp(unit["mlp"], hh, cfg)
+        return x, states
+
+    x, groups = jax.lax.scan(group_body2, x, params["groups"])
+    cache = {"groups": groups, "t": jnp.int32(S)}
+    if "rem" in params:
+
+        def rem_body(x, lp):
+            h = common.rmsnorm(lp["ln1"], x, eps=cfg.norm_eps)
+            xb = common.dense(lp["rec"]["in_x"], h, cdtype=cfg.cdtype)
+            conv_tail = xb[:, -(cfg.rglru.conv_width - 1) :]
+            o, hfin = rglru.rglru_block(lp["rec"], h, cfg)
+            x = x + o
+            hh = common.rmsnorm(lp["ln2"], x, eps=cfg.norm_eps)
+            x = x + common.mlp(lp["mlp"], hh, cfg)
+            return x, {"h": hfin, "conv": conv_tail}
+
+        x, rem_states = jax.lax.scan(rem_body, x, params["rem"])
+        cache["rem"] = rem_states
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, cache
+
+
+def _hybrid_unit_decode(unit, kind, x1, state, pos, cfg: ModelConfig):
+    h = common.rmsnorm(unit["ln1"], x1, eps=cfg.norm_eps)
+    if kind == "recurrent":
+        o, st = rglru.rglru_decode_block(unit["rec"], h, state, cfg)
+    else:
+        o, st = attention.decode_attention(
+            unit["attn"], h, state, pos, cfg, window=cfg.rglru.local_window
+        )
+    x1 = x1 + o
+    hh = common.rmsnorm(unit["ln2"], x1, eps=cfg.norm_eps)
+    return x1 + common.mlp(unit["mlp"], hh, cfg), st
+
+
+def hybrid_decode(params, cfg: ModelConfig, cache, tokens):
+    x = common.embed(params["embed"], tokens, cdtype=cfg.cdtype)
+    pos = cache["t"]
+
+    def group_body(x, inp):
+        gp, gstate = inp
+        new_states = {}
+        for i, kind in enumerate(cfg.rglru.block_pattern):
+            x, st = _hybrid_unit_decode(gp[f"u{i}"], kind, x, gstate[f"u{i}"], pos, cfg)
+            new_states[f"u{i}"] = st
+        return x, new_states
+
+    x, groups = jax.lax.scan(group_body, x, (params["groups"], cache["groups"]))
+    new_cache = {"groups": groups, "t": pos + 1}
+    if "rem" in params:
+
+        def rem_body(x, inp):
+            lp, st = inp
+            x, st = _hybrid_unit_decode(lp, "recurrent", x, st, pos, cfg)
+            return x, st
+
+        x, rem_states = jax.lax.scan(rem_body, x, (params["rem"], cache["rem"]))
+        new_cache["rem"] = rem_states
+    x = common.rmsnorm(params["norm"], x, eps=cfg.norm_eps)
+    logits = common.dense(params["head"], x, cdtype=cfg.cdtype)
+    return logits, new_cache

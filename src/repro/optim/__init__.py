@@ -1,0 +1,2 @@
+from repro.optim import schedules
+from repro.optim.sgd import ClientOpt

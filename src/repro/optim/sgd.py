@@ -1,0 +1,63 @@
+"""Client-side optimizers.  The paper trains clients with plain SGD
+(lr 0.1, ℓ2 1e-4); momentum/Adam are provided for beyond-paper runs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientOpt:
+    kind: str = "sgd"            # sgd | momentum | adam
+    momentum: float = 0.9
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+
+    def init(self, params) -> Any:
+        if self.kind == "sgd":
+            return ()
+        if self.kind == "momentum":
+            return jax.tree.map(jnp.zeros_like, params)
+        if self.kind == "adam":
+            z = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+            return {"m": z, "v": jax.tree.map(jnp.copy, z), "t": jnp.int32(0)}
+        raise ValueError(self.kind)
+
+    def step(self, params, grads, state, lr):
+        wd = self.weight_decay
+
+        def decayed(g, p):
+            return g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+
+        if self.kind == "sgd":
+            new = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr * decayed(g, p)).astype(p.dtype),
+                params, grads)
+            return new, state
+        if self.kind == "momentum":
+            vel = jax.tree.map(
+                lambda v, g, p: self.momentum * v + decayed(g, p), state, grads, params)
+            new = jax.tree.map(
+                lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+                params, vel)
+            return new, vel
+        if self.kind == "adam":
+            t = state["t"] + 1
+            m = jax.tree.map(lambda m, g, p: self.b1 * m + (1 - self.b1) * decayed(g, p),
+                             state["m"], grads, params)
+            v = jax.tree.map(lambda v, g, p: self.b2 * v + (1 - self.b2) * decayed(g, p) ** 2,
+                             state["v"], grads, params)
+            bc1 = 1 - self.b1 ** t.astype(jnp.float32)
+            bc2 = 1 - self.b2 ** t.astype(jnp.float32)
+            new = jax.tree.map(
+                lambda p, m_, v_: (
+                    p.astype(jnp.float32) - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+                ).astype(p.dtype),
+                params, m, v)
+            return new, {"m": m, "v": v, "t": t}
+        raise ValueError(self.kind)

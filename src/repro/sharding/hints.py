@@ -1,0 +1,61 @@
+"""Logical sharding hints: model code annotates tensors with *logical* axis
+names; launchers activate a mapping from logical names to mesh axes.  With no
+mapping active the hints are no-ops, so model code stays mesh-agnostic and
+single-device tests are unaffected.
+
+Motivation (EXPERIMENTS.md §Perf iteration 2): without pinned layouts, GSPMD
+resharded the blockwise-attention inner loop every iteration — a
+collective-permute storm of ~29 TB/device on grok-1 32k prefill.  Pinning
+(batch → client axes, q-chunk → "model") keeps every per-iteration tensor in
+one layout: attention parallelizes over query chunks on the model axis and
+K/V blocks stay batch-sharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_rules: contextvars.ContextVar = contextvars.ContextVar("sharding_hints", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, mapping: dict):
+    """mapping: logical name -> mesh axis (str), tuple of axes, or None."""
+    token = _rules.set((mesh, dict(mapping)))
+    try:
+        yield
+    finally:
+        _rules.reset(token)
+
+
+def hint(x, *logical):
+    """Constrain ``x`` (rank len(logical)) to the active logical mapping.
+    Unknown/None logical names mean 'no constraint on this dim'."""
+    active = _rules.get()
+    if active is None:
+        return x
+    mesh, mapping = active
+    if x.ndim != len(logical):
+        raise ValueError(f"hint rank mismatch: {x.shape} vs {logical}")
+    axes = []
+    ok = False
+    for dim, name in zip(x.shape, logical):
+        mapped = mapping.get(name) if name else None
+        if mapped is None:
+            axes.append(None)
+            continue
+        parts = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        size = 1
+        for a in parts:
+            size *= mesh.shape[a]
+        if dim % size == 0 and dim >= size:
+            axes.append(mapped)
+            ok = True
+        else:
+            axes.append(None)
+    if not ok:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*axes)))

@@ -1,0 +1,140 @@
+"""Sharding rules: map parameter/batch/cache pytrees to PartitionSpecs.
+
+Scheme (DESIGN.md §4):
+  * weights: largest divisible dim → "model"; in ``fsdp_tp`` mode a second
+    divisible dim → "data" (ZeRO-3-style storage sharding, gathered by GSPMD
+    at use).  Stacked-layer leading dims (under blocks/groups/rem/enc_blocks)
+    are never sharded.
+  * train batches (n_clients, T, b, ...): client dim → client axes
+    ("data" or ("pod","data")).
+  * serve batches (B, ...): batch dim → client axes; KV caches shard batch →
+    client axes and the cache-sequence dim → "model" (avoids every head-count
+    divisibility issue; GQA kv ∈ {1,2,8} never divides 16).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+STACK_KEYS = ("blocks", "groups", "rem", "enc_blocks", "selfs")
+
+
+def client_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _path_has_stack(path) -> bool:
+    return any(getattr(p, "key", None) in STACK_KEYS for p in path)
+
+
+def _param_spec(path, leaf, mesh, mode: str):
+    model_n = mesh.shape["model"]
+    data_n = mesh.shape["data"]
+    skip = 1 if _path_has_stack(path) else 0
+    # VLM group-stacks are two deep (groups, selfs): skip every stack dim
+    n_stack = sum(1 for p in path if getattr(p, "key", None) in STACK_KEYS)
+    skip = n_stack
+    dims = list(leaf.shape)
+    spec = [None] * len(dims)
+    # choose the model-sharded dim: largest dim (idx >= skip) divisible by model_n
+    cands = [
+        (size, i) for i, size in enumerate(dims)
+        if i >= skip and size % model_n == 0 and size >= model_n
+    ]
+    if cands:
+        _, mi = max(cands)
+        spec[mi] = "model"
+        if mode == "fsdp_tp":
+            cands2 = [
+                (size, i) for i, size in enumerate(dims)
+                if i >= skip and i != mi and size % data_n == 0 and size >= data_n
+            ]
+            if cands2:
+                _, di = max(cands2)
+                spec[di] = "data"
+    return P(*spec)
+
+
+def param_specs(params, mesh, mode: str = "tp"):
+    """PartitionSpec pytree for a parameter (or optimizer-state) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_param_spec(path, leaf, mesh, mode) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def train_batch_specs(batch, mesh):
+    """Round batches: leaves (n_clients, T, b, ...) — client dim sharded."""
+    ca = client_axes(mesh)
+    return jax.tree.map(lambda leaf: P(ca, *([None] * (leaf.ndim - 1))), batch)
+
+
+def serve_batch_specs(batch, mesh):
+    ca = client_axes(mesh)
+    ca_size = 1
+    for a in ca:
+        ca_size *= mesh.shape[a]
+
+    def spec(leaf):
+        if leaf.ndim and leaf.shape[0] % ca_size == 0 and leaf.shape[0] >= ca_size:
+            return P(ca, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))  # e.g. long_500k: global_batch = 1
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cache, mesh, batch_size: int):
+    """KV caches / SSM states with leading stacked-layer dims.
+
+    The batch dim is identified by exact size match against `batch_size`
+    (caches mix layer-stack, capacity, head and state dims — size matching is
+    the only robust rule).  Batch → client axes; then the largest remaining
+    divisible dim (cache sequence / d_inner / memory length) → "model";
+    ``pos`` ring buffers shard their capacity dim over "model" to stay
+    aligned with the k/v leaves.
+    """
+    ca = client_axes(mesh)
+    model_n = mesh.shape["model"]
+    ca_size = 1
+    for a in ca:
+        ca_size *= mesh.shape[a]
+
+    def spec(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        if leaf.ndim == 0:
+            return P()
+        s = [None] * leaf.ndim
+        if "pos" in keys:  # (L[, G], cap): no batch dim
+            if leaf.shape[-1] % model_n == 0:
+                s[-1] = "model"
+            return P(*s)
+        bi = None
+        if batch_size % ca_size == 0:
+            for i, size in enumerate(leaf.shape):
+                if size == batch_size:
+                    bi = i
+                    break
+        if bi is not None:
+            s[bi] = ca
+        cands = [
+            (size, i) for i, size in enumerate(leaf.shape)
+            if i != bi and size % model_n == 0 and size >= model_n
+            # leading layer-stack dims sit before the batch dim: never shard
+            # them (caches always carry a stacked-layer dim 0)
+            and (i > bi if bi is not None else i >= 1)
+        ]
+        if cands:
+            _, mi = max(cands)
+            s[mi] = "model"
+        return P(*s)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

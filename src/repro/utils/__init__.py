@@ -1,0 +1,23 @@
+from repro.utils.trees import (
+    tree_add,
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_size,
+    tree_cast,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_dot",
+    "tree_norm",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_size",
+    "tree_cast",
+]

@@ -1,0 +1,51 @@
+"""Pytree arithmetic helpers used across the FL engine.
+
+All model parameters, updates and optimizer states in this framework are plain
+pytrees; these helpers implement the handful of vector-space operations the
+ColRel algebra needs (weighted sums, norms, dtype casts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x, elementwise over matching pytrees."""
+    return jax.tree.map(lambda xe, ye: ye + s * xe, x, y)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters in the pytree."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

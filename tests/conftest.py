@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single local CPU device (the 512-device override is
+# strictly dry-run-only, per the launcher contract).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,60 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def _tree():
+    return {
+        "blocks": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "head": [jnp.zeros((2, 2)), jnp.int32(7)],
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, t, metadata={"round": 3, "arch": "x"})
+    like = jax.tree.map(jnp.zeros_like, t)
+    got = checkpoint.restore(path, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+    assert checkpoint.load_metadata(path) == {"round": 3, "arch": "x"}
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    t = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, t)
+    bad = jax.tree.map(lambda x: jnp.zeros(x.shape + (1,), x.dtype), t)
+    with pytest.raises(ValueError):
+        checkpoint.restore(path, bad)
+
+
+def test_missing_leaf_rejected(tmp_path):
+    t = _tree()
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, t)
+    bigger = {**t, "extra": jnp.zeros((1,))}
+    with pytest.raises(KeyError):
+        checkpoint.restore(path, bigger)
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import registry as creg
+    from repro.models import registry as mreg
+
+    cfg = creg.get_config("glm4-9b", reduced=True)
+    md = mreg.get_model(cfg)
+    params = md.init(jax.random.key(0))
+    path = str(tmp_path / "model.npz")
+    checkpoint.save(path, params)
+    got = checkpoint.restore(path, jax.tree.map(jnp.zeros_like, params))
+    batch_tokens = jnp.ones((1, 8), jnp.int32)
+    l1 = md.loss(params, {"tokens": batch_tokens, "labels": batch_tokens})
+    l2 = md.loss(got, {"tokens": batch_tokens, "labels": batch_tokens})
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)

@@ -1,0 +1,30 @@
+"""Paper Remark 2: OPT-α runs distributively on 2-hop information only."""
+import numpy as np
+import pytest
+
+from repro.core import connectivity, opt_alpha, topology
+
+
+@pytest.mark.parametrize("topo", ["ring1", "ring2", "er", "clusters"])
+def test_distributed_matches_centralized(topo):
+    n = 12
+    p = connectivity.heterogeneous_profile(n).p
+    adj = {
+        "ring1": topology.ring(n, 1),
+        "ring2": topology.ring(n, 2),
+        "er": topology.erdos_renyi(n, 0.35, seed=3),
+        "clusters": topology.clusters(n, 3),
+    }[topo]
+    central = opt_alpha.optimize(p, adj, sweeps=25)
+    dist = opt_alpha.optimize_distributed(p, adj, sweeps=25)
+    np.testing.assert_allclose(dist.A, central.A, atol=1e-10)
+    np.testing.assert_allclose(dist.S_history, central.S_history, atol=1e-10)
+
+
+def test_distributed_unbiasedness():
+    n = 10
+    p = connectivity.paper_heterogeneous().p
+    adj = topology.ring(n, 1)
+    res = opt_alpha.optimize_distributed(p, adj, sweeps=30)
+    assert res.feasible_columns.all()
+    assert np.abs(opt_alpha.unbiasedness_residual(p, res.A)).max() < 1e-8

@@ -1,0 +1,84 @@
+"""The loop-aware HLO cost model (roofline input) on known-flops programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_scan_trip_count_multiplies_flops():
+    L, B, D = 7, 8, 32
+
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    co = _compile(
+        f,
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+    )
+    res = hlo_cost.analyze(co.as_text())
+    want = L * 2 * B * D * D
+    assert abs(res["flops"] - want) / want < 0.05, (res["flops"], want)
+
+
+def test_grad_of_scan_counts_three_dots_per_layer():
+    L, B, D = 5, 4, 16
+
+    def f(w, x):
+        def body(x, wi):
+            return jnp.tanh(x @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    co = _compile(
+        jax.grad(f),
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+    )
+    res = hlo_cost.analyze(co.as_text())
+    want = L * 3 * 2 * B * D * D  # fwd + dx + dw
+    assert abs(res["flops"] - want) / want < 0.10, (res["flops"], want)
+
+
+def test_unlooped_dot_exact():
+    def f(a, b):
+        return (a @ b).sum()
+
+    co = _compile(
+        f,
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 16), jnp.float32),
+    )
+    res = hlo_cost.analyze(co.as_text())
+    assert res["flops"] == 2 * 32 * 64 * 16
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ c2), None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y.sum()
+
+    co = _compile(f, jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    res = hlo_cost.analyze(co.as_text())
+    want = 4 * 3 * 2 * 8 * 8 * 8
+    assert abs(res["flops"] - want) / want < 0.05, (res["flops"], want)
+
+
+def test_collectives_counted_with_shapes():
+    # single-device module has no collectives; the parser must return zero
+    co = _compile(lambda x: x * 2, jax.ShapeDtypeStruct((8,), jnp.float32))
+    res = hlo_cost.analyze(co.as_text())
+    assert res["collectives"]["total"] == 0.0

@@ -1,0 +1,98 @@
+"""Pallas kernel sweeps (interpret mode) against the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import relay as core_relay
+from repro.kernels import ops, ref
+from repro.kernels import relay_mix as k
+
+
+@pytest.mark.parametrize("n", [4, 10, 16, 32])
+@pytest.mark.parametrize("D", [64, 100, 4096, 5000])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_relay_mix_2d_sweep(n, D, dtype):
+    rng = np.random.default_rng(hash((n, D)) % 2**31)
+    A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((n, D)), dtype)
+    got = k.relay_mix_2d(A, d, interpret=True)
+    want = ref.relay_mix_2d(A, d)
+    tol = 1e-4 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("n", [4, 16])
+@pytest.mark.parametrize("D", [100, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_aggregate_2d_sweep(n, D, dtype):
+    rng = np.random.default_rng(hash((n, D, 1)) % 2**31)
+    A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    tau = jnp.asarray(rng.random(n) < 0.5, jnp.float32)
+    c = (1.0 / n) * tau @ A
+    d = jnp.asarray(rng.standard_normal((n, D)), dtype)
+    got = k.fused_aggregate_2d(c, d, interpret=True)
+    want = ref.fused_aggregate_2d(c, d)
+    tol = 1e-4 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("block_d", [128, 512, 4096])
+def test_block_size_invariance(block_d):
+    rng = np.random.default_rng(7)
+    A = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((8, 1000)), jnp.float32)
+    got = k.relay_mix_2d(A, d, block_d=block_d, interpret=True)
+    want = ref.relay_mix_2d(A, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_pytree_wrapper_matches_core_relay():
+    rng = np.random.default_rng(3)
+    n = 10
+    A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    upd = {
+        "w": jnp.asarray(rng.standard_normal((n, 33, 7)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((n, 257)), jnp.float32),
+    }
+    got = ops.relay_mix(A, upd, interpret=True)
+    want = core_relay.relay(A, upd)
+    for key in upd:
+        np.testing.assert_allclose(
+            np.asarray(got[key]), np.asarray(want[key]), atol=1e-4
+        )
+
+
+def test_pytree_fused_matches_core():
+    rng = np.random.default_rng(4)
+    n = 10
+    A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    tau = jnp.asarray(rng.random(n) < 0.5, jnp.float32)
+    upd = {"w": jnp.asarray(rng.standard_normal((n, 65)), jnp.float32)}
+    got = ops.fused_aggregate(A, tau, upd, w=0.1, interpret=True)
+    want = core_relay.fused_aggregate(A, tau, upd, w=0.1)
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(want["w"]), atol=1e-4)
+
+
+def test_kernel_under_jit_and_grad():
+    """The kernel wrapper composes with jit (and is linear, so its vjp must
+    reproduce Aᵀ on cotangents)."""
+    n, D = 6, 300
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+
+    def f(d):
+        return ref.relay_mix_2d(A, d).sum()
+
+    def f_kernel(d):
+        return k.relay_mix_2d(A, d, interpret=True).sum()
+
+    np.testing.assert_allclose(float(f(d)), float(f_kernel(d)), rtol=1e-5)
+    g_ref = jax.grad(f)(d)
+    g_k = jax.grad(f_kernel)(d)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_ref), atol=1e-4)

@@ -1,0 +1,99 @@
+import numpy as np
+import pytest
+
+from repro.core import connectivity, opt_alpha, relay, topology
+
+
+def _setting(n=10):
+    return connectivity.paper_heterogeneous().p, topology.ring(n, 1)
+
+
+def test_initial_weights_satisfy_unbiasedness():
+    p, adj = _setting()
+    A0 = opt_alpha.initial_weights(p, adj)
+    assert np.abs(opt_alpha.unbiasedness_residual(p, A0)).max() < 1e-9
+
+
+def test_optimize_keeps_unbiasedness_and_nonnegativity():
+    p, adj = _setting()
+    res = opt_alpha.optimize(p, adj, sweeps=60)
+    assert res.feasible_columns.all()
+    assert np.abs(opt_alpha.unbiasedness_residual(p, res.A)).max() < 1e-8
+    assert (res.A >= -1e-12).all()
+    assert relay.neighbor_support(res.A, adj)
+
+
+def test_S_monotone_nonincreasing():
+    p, adj = _setting()
+    res = opt_alpha.optimize(p, adj, sweeps=60)
+    assert np.all(np.diff(res.S_history) <= 1e-9)
+    assert res.S_history[-1] < res.S_history[0] * 0.5  # substantial gain
+
+
+def test_S_literal_equals_collapsed():
+    p, adj = _setting()
+    res = opt_alpha.optimize(p, adj, sweeps=10)
+    lit = opt_alpha.variance_proxy_literal(p, res.A, adj)
+    col = opt_alpha.variance_proxy(p, res.A)
+    assert np.isclose(lit, col, rtol=1e-10)
+
+
+def test_fct_homogeneous_init_already_optimal():
+    """Paper remark (Fig. 2): Alg. 3's init is optimal for FCT + equal p."""
+    n, pval = 10, 0.2
+    p = np.full(n, pval)
+    adj = topology.fully_connected(n)
+    A0 = opt_alpha.initial_weights(p, adj)
+    res = opt_alpha.optimize(p, adj, sweeps=40)
+    assert np.isclose(res.S_history[-1], opt_alpha.variance_proxy(p, A0), rtol=1e-6)
+
+
+def test_perfect_relay_gets_all_mass():
+    """eq. (9) case 2: a p_j = 1 neighbor carries everything (zero variance)."""
+    p = np.array([0.3, 1.0, 0.5])
+    res = opt_alpha.optimize(p, topology.fully_connected(3), sweeps=20)
+    assert np.allclose(res.A[1], 1.0)
+    assert np.isclose(res.S_history[-1], 0.0, atol=1e-12)
+
+
+def test_infeasible_column_flagged():
+    p = np.array([0.0, 0.0, 0.5])
+    adj = topology.from_edges(3, [(0, 1)])  # client 0,1 isolated from 2
+    res = opt_alpha.optimize(p, adj, sweeps=5)
+    assert not res.feasible_columns[0] and not res.feasible_columns[1]
+    assert res.feasible_columns[2]
+
+
+def test_disconnected_reduces_to_inverse_p():
+    """No D2D links: the only unbiased choice is α_ii = 1/p_i."""
+    p = np.array([0.2, 0.5, 0.8])
+    res = opt_alpha.optimize(p, topology.disconnected(3), sweeps=5)
+    assert np.allclose(np.diag(res.A), 1.0 / p)
+    assert np.allclose(res.A - np.diag(np.diag(res.A)), 0.0)
+
+
+def test_monte_carlo_unbiasedness():
+    """Lemma 1: E[Σ_j τ_j α_ji] = 1 per origin, over realized τ."""
+    import jax
+
+    p, adj = _setting()
+    res = opt_alpha.optimize(p, adj, sweeps=50)
+    cm = connectivity.ConnectivityModel(p)
+    taus = np.asarray(cm.sample_rounds(jax.random.key(0), 100_000))
+    eff = taus @ res.A
+    assert np.abs(eff.mean(0) - 1.0).max() < 0.02
+
+
+def test_optimized_beats_init_on_heterogeneous_ring():
+    p, adj = _setting()
+    A0 = opt_alpha.initial_weights(p, adj)
+    res = opt_alpha.optimize(p, adj, sweeps=60)
+    assert opt_alpha.variance_proxy(p, res.A) < opt_alpha.variance_proxy(p, A0) * 0.6
+
+
+def test_coverage_diagnostic():
+    p, adj = _setting()
+    cov = opt_alpha.colrel_expected_coverage(p, adj)
+    solo = p  # without relaying, coverage is p_i itself
+    assert (cov >= solo - 1e-12).all()
+    assert (cov > solo).any()

@@ -1,0 +1,54 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.schedules import constant, cosine, paper_lr
+from repro.optim.sgd import ClientOpt
+
+
+def _quad_loss(p, _):
+    return 0.5 * jnp.sum(p["x"] ** 2)
+
+
+@pytest.mark.parametrize("kind", ["sgd", "momentum", "adam"])
+def test_optimizers_descend(kind):
+    opt = ClientOpt(kind=kind, weight_decay=0.0)
+    params = {"x": jnp.ones((8,)) * 3.0}
+    state = opt.init(params)
+    loss0 = float(_quad_loss(params, None))
+    for _ in range(50):
+        g = jax.grad(_quad_loss)(params, None)
+        params, state = opt.step(params, g, state, 0.1)
+    assert float(_quad_loss(params, None)) < loss0 * 0.05
+
+
+def test_weight_decay_applied():
+    opt = ClientOpt(kind="sgd", weight_decay=0.5)
+    params = {"x": jnp.ones((2,))}
+    zero_g = {"x": jnp.zeros((2,))}
+    new, _ = opt.step(params, zero_g, opt.init(params), 0.1)
+    np.testing.assert_allclose(np.asarray(new["x"]), 1.0 - 0.1 * 0.5, rtol=1e-6)
+
+
+def test_paper_schedule():
+    lr = paper_lr(mu=1.0, T=8)
+    assert np.isclose(lr(0), 4.0)
+    assert np.isclose(lr(10), 4.0 / 81.0)
+    assert lr(100) < lr(10) < lr(1)
+
+
+def test_other_schedules():
+    assert constant(0.1)(99) == 0.1
+    c = cosine(1.0, 100)
+    assert c(0) == pytest.approx(1.0)
+    assert c(100) == pytest.approx(0.1)
+    assert c(50) < c(10)
+
+
+def test_bf16_params_keep_dtype():
+    opt = ClientOpt(kind="sgd", weight_decay=1e-4)
+    params = {"x": jnp.ones((4,), jnp.bfloat16)}
+    g = {"x": jnp.ones((4,), jnp.bfloat16)}
+    new, _ = opt.step(params, g, opt.init(params), 0.1)
+    assert new["x"].dtype == jnp.bfloat16

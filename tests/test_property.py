@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the ColRel invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import opt_alpha, relay, topology
+
+MAX_N = 12
+
+
+@st.composite
+def fl_setting(draw):
+    n = draw(st.integers(3, MAX_N))
+    p = np.asarray(draw(st.lists(
+        st.floats(0.05, 1.0), min_size=n, max_size=n)))
+    kind = draw(st.sampled_from(["ring", "fct", "er", "clusters"]))
+    if kind == "ring":
+        adj = topology.ring(n, draw(st.integers(1, max(1, n // 2 - 1))))
+    elif kind == "fct":
+        adj = topology.fully_connected(n)
+    elif kind == "er":
+        adj = topology.erdos_renyi(n, draw(st.floats(0.1, 0.9)), seed=draw(st.integers(0, 100)))
+    else:
+        adj = topology.clusters(n, draw(st.integers(1, 3)))
+    return p, adj
+
+
+@given(fl_setting())
+@settings(max_examples=30, deadline=None)
+def test_opt_alpha_invariants(setting):
+    p, adj = setting
+    res = opt_alpha.optimize(p, adj, sweeps=25)
+    # unbiasedness on feasible columns (Lemma 1)
+    resid = opt_alpha.unbiasedness_residual(p, res.A)
+    assert np.abs(resid[res.feasible_columns]).max() < 1e-7
+    # nonnegativity and support
+    assert (res.A >= -1e-10).all()
+    assert relay.neighbor_support(res.A, adj)
+    # Gauss-Seidel never increases the objective
+    assert np.all(np.diff(res.S_history) <= 1e-7 * max(1.0, res.S_history[0]))
+
+
+@given(fl_setting())
+@settings(max_examples=20, deadline=None)
+def test_optimized_no_worse_than_init(setting):
+    p, adj = setting
+    A0 = opt_alpha.initial_weights(p, adj)
+    res = opt_alpha.optimize(p, adj, sweeps=25)
+    s0 = opt_alpha.variance_proxy(p, A0)
+    assert opt_alpha.variance_proxy(p, res.A) <= s0 + 1e-7 * max(1.0, s0)
+
+
+@given(fl_setting())
+@settings(max_examples=15, deadline=None)
+def test_S_convexity_along_segments(setting):
+    """S(p, ·) is convex (paper §IV): check along random feasible segments."""
+    p, adj = setting
+    rng = np.random.default_rng(0)
+    A0 = opt_alpha.initial_weights(p, adj)
+    res = opt_alpha.optimize(p, adj, sweeps=5)
+    A1 = res.A
+    for lam in (0.25, 0.5, 0.75):
+        mid = lam * A0 + (1 - lam) * A1
+        s_mid = opt_alpha.variance_proxy(p, mid)
+        bound = lam * opt_alpha.variance_proxy(p, A0) + (1 - lam) * opt_alpha.variance_proxy(p, A1)
+        assert s_mid <= bound + 1e-8 * max(1.0, bound)
+
+
+@given(
+    st.integers(3, 10),
+    st.integers(0, 10_000),
+)
+@settings(max_examples=20, deadline=None)
+def test_relay_preserves_total_mass_expectation(n, seed):
+    """p @ A = 1 ⇒ Σ_o E[coeff_o] = n·w = 1 for w = 1/n."""
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.1, 1.0, n)
+    adj = topology.ring(n, 1)
+    res = opt_alpha.optimize(p, adj, sweeps=15)
+    if not res.feasible_columns.all():
+        return
+    expected_coeff = p @ res.A  # E[τ] @ A
+    np.testing.assert_allclose(expected_coeff, 1.0, atol=1e-7)

@@ -1,0 +1,104 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, connectivity, opt_alpha, relay, topology
+
+
+@pytest.fixture()
+def setting():
+    n = 10
+    p = connectivity.paper_heterogeneous().p
+    adj = topology.ring(n, 1)
+    A = opt_alpha.optimize(p, adj, sweeps=30).A
+    rng = np.random.default_rng(0)
+    upd = {
+        "w": jnp.asarray(rng.standard_normal((n, 6, 4)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((n, 3)), jnp.float32),
+    }
+    tau = jnp.asarray(rng.random(n) < p, jnp.float32)
+    return n, p, adj, A, upd, tau
+
+
+def test_relay_matches_manual_sum(setting):
+    n, p, adj, A, upd, tau = setting
+    out = relay.relay(A, upd)
+    for r in range(n):
+        want = sum(A[r, o] * np.asarray(upd["w"][o]) for o in range(n))
+        np.testing.assert_allclose(np.asarray(out["w"][r]), want, rtol=1e-5)
+
+
+def test_fused_equals_faithful(setting):
+    n, p, adj, A, upd, tau = setting
+    faithful = aggregation.colrel_increment(A, tau, upd, n=n, fused=False)
+    fused = aggregation.colrel_increment(A, tau, upd, n=n, fused=True)
+    for k in upd:
+        np.testing.assert_allclose(
+            np.asarray(faithful[k]), np.asarray(fused[k]), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_fedavg_is_identity_relay_special_case(setting):
+    """Paper: standard FL = ColRel with A = I (uncompensated)."""
+    n, p, adj, A, upd, tau = setting
+    I = np.eye(n)
+    got = aggregation.colrel_increment(I, tau, upd, n=n, fused=True)
+    want = aggregation.fedavg_blind_increment(tau, upd, n=n)
+    for k in upd:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]), rtol=1e-6)
+
+
+def test_no_dropout_equals_full_tau(setting):
+    n, p, adj, A, upd, tau = setting
+    ones = jnp.ones((n,), jnp.float32)
+    got = aggregation.fedavg_blind_increment(ones, upd, n=n)
+    want = aggregation.no_dropout_increment(upd, n=n)
+    for k in upd:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(want[k]), rtol=1e-5, atol=1e-7
+        )
+
+
+def test_nonblind_divides_by_successes(setting):
+    n, p, adj, A, upd, tau = setting
+    got = aggregation.fedavg_nonblind_increment(tau, upd)
+    k = float(np.asarray(tau).sum())
+    want = aggregation.fedavg_blind_increment(tau, upd, n=n)
+    for key in upd:
+        np.testing.assert_allclose(
+            np.asarray(got[key]), np.asarray(want[key]) * n / k, rtol=1e-5
+        )
+
+
+def test_increment_unbiasedness_monte_carlo(setting):
+    """E_τ[PS increment] = (1/n) Σ_i Δx_i under Lemma-1 weights."""
+    n, p, adj, A, upd, tau = setting
+    cm = connectivity.ConnectivityModel(p)
+    taus = np.asarray(cm.sample_rounds(jax.random.key(3), 40_000))
+    coeff = taus @ np.asarray(A) / n  # (R, n) per-origin realized weights
+    mean_coeff = coeff.mean(0)
+    np.testing.assert_allclose(mean_coeff, 1.0 / n, atol=3e-3)
+
+
+def test_relay_linearity(setting):
+    n, p, adj, A, upd, tau = setting
+    upd2 = jax.tree.map(lambda x: 2.0 * x, upd)
+    out1 = relay.relay(A, upd)
+    out2 = relay.relay(A, upd2)
+    for k in upd:
+        np.testing.assert_allclose(
+            np.asarray(out2[k]), 2.0 * np.asarray(out1[k]), rtol=1e-5
+        )
+
+
+def test_server_momentum():
+    from repro.core.aggregation import ServerOpt
+
+    opt = ServerOpt(momentum=0.9, lr=1.0)
+    params = {"x": jnp.zeros((3,))}
+    state = opt.init(params)
+    inc = {"x": jnp.ones((3,))}
+    p1, s1 = opt.apply(params, state, inc)
+    p2, s2 = opt.apply(p1, s1, inc)
+    np.testing.assert_allclose(np.asarray(p2["x"]), 1.0 + 1.9, rtol=1e-6)

@@ -1,0 +1,59 @@
+import numpy as np
+import pytest
+
+from repro.core import topology
+
+
+def test_ring_degrees():
+    adj = topology.ring(10, k=1)
+    assert adj.sum(1).tolist() == [2] * 10
+    adj2 = topology.ring(10, k=2)  # 4 nearest neighbors (paper Fig. 4)
+    assert adj2.sum(1).tolist() == [4] * 10
+
+
+def test_fully_connected():
+    adj = topology.fully_connected(6)
+    assert adj.sum() == 6 * 5
+    assert not adj.diagonal().any()
+
+
+def test_symmetry_and_no_self_loops():
+    for adj in [topology.ring(7, 2), topology.erdos_renyi(12, 0.4, seed=1),
+                topology.clusters(10, 3), topology.fully_connected(5)]:
+        assert np.array_equal(adj, adj.T)
+        assert not adj.diagonal().any()
+
+
+def test_clusters_disconnected_across():
+    adj = topology.clusters(9, 3)
+    assert not adj[0, 3] and not adj[3, 6]
+    assert adj[0, 1] and adj[3, 4]
+
+
+def test_closed_mask_includes_self():
+    adj = topology.ring(5, 1)
+    m = topology.closed_mask(adj)
+    assert m.diagonal().all()
+
+
+def test_common_neighborhood_literal():
+    adj = topology.ring(6, 1)
+    m3 = topology.common_neighborhood_sets(adj)
+    m = topology.closed_mask(adj)
+    for j in range(6):
+        for i in range(6):
+            for l in range(6):
+                assert m3[j, i, l] == (m[j, i] and m[j, l])
+
+
+def test_from_edges_roundtrip():
+    adj = topology.from_edges(4, [(0, 1), (2, 3), (1, 1)])
+    assert adj[0, 1] and adj[1, 0] and adj[2, 3]
+    assert not adj[1, 1]
+
+
+def test_asymmetric_rejected():
+    bad = np.zeros((3, 3), bool)
+    bad[0, 1] = True
+    with pytest.raises(ValueError):
+        topology.neighborhoods(bad)
