@@ -1,0 +1,20 @@
+# Tier-1 verification targets.  `test` is the canonical suite (ROADMAP.md);
+# `test-fast` skips the @slow convergence tests for quick local iteration.
+PY ?= python
+PYTEST = PYTHONPATH=src $(PY) -m pytest
+
+.PHONY: test test-fast test-all bench
+
+test:
+	$(PYTEST) -x -q
+
+test-fast:
+	$(PYTEST) -x -q -m "not slow"
+
+# full suite without -x: runs past the known-failing slow convergence
+# bounds so regressions in later files stay visible
+test-all:
+	$(PYTEST) -q
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,0 +1,123 @@
+"""Fig. 5 (beyond-paper): ColRel under a time-varying channel.
+
+Markov (Gilbert–Elliott) link churn on a ring D2D base graph plus
+piecewise-constant drift of the uplink probabilities p(r).  Three policies
+over identical data/τ randomness:
+
+  * ``colrel_adaptive`` — re-runs OPT-α per channel epoch (LRU cache +
+    warm start; `repro.channels.AdaptiveOptAlpha`);
+  * ``colrel_stale``    — the round-0 A forever, projected onto the live
+    topology (what a static-channel deployment would do);
+  * ``fedavg_dropout_blind`` — no relaying at all.
+
+Claim: adaptive ColRel beats both, because the stale A loses relay mass
+(bias) whenever links fade and its weights are wrong for the drifted p.
+The jitted round step is traced once — A and p enter by value every round.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FigureResult, make_mlp, print_figure_csv
+from repro import channels
+from repro.core import connectivity, topology
+from repro.core.aggregation import ServerOpt
+from repro.data.loader import FederatedLoader
+from repro.data.partition import iid_partition
+from repro.data.synthetic import cifar_like
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+
+def make_schedule(n: int, *, seed: int = 0) -> channels.TimeVaryingChannel:
+    """The fig-5 channel: ring(n, 2) base with bursty Markov fading and
+    p re-estimated (piecewise-constant) every 5 rounds."""
+    link = channels.MarkovLinkProcess(
+        topology.ring(n, 2), p_up_to_down=0.3, p_down_to_up=0.5, seed=seed)
+    p_drift = channels.PiecewiseConstantDrift(
+        connectivity.heterogeneous_profile(n).p, hold=5, low=0.1, high=0.9,
+        seed=seed + 1)
+    # adj_every=2: a 2-round channel coherence time, so consecutive rounds
+    # repeat an epoch and the scheduler's LRU cache is exercised.
+    return channels.TimeVaryingChannel(link_process=link, p_process=p_drift,
+                                       adj_every=2)
+
+
+def run(rounds: int = 30, model: str = "mlp", n: int = 10,
+        local_steps: int = 8, local_batch: int = 64, lr: float = 0.1,
+        n_train: int = 4000, seed: int = 0, eval_every: int = 2):
+    if model != "mlp":
+        # fig5 studies the channel, not the architecture; don't burn minutes
+        # re-running it per model in `benchmarks.run --model ...` sweeps.
+        print(f"fig5/skipped,0,reason=channel_study_is_mlp_only;model={model}")
+        return {}
+    ds = cifar_like(n_train, snr=0.5, seed=seed)
+    test = cifar_like(1000, snr=0.5, seed=seed + 99)
+    parts = iid_partition(ds, n, seed=seed)
+    init, logits_fn, loss = make_mlp()
+    test_x, test_y = jnp.asarray(test.inputs), jnp.asarray(test.labels)
+
+    @jax.jit
+    def accuracy(params):
+        return (jnp.argmax(logits_fn(params, test_x), -1) == test_y).mean()
+
+    policies = {
+        "fedavg_dropout_blind": ("fedavg_blind", None),
+        "colrel_stale": ("colrel_fused",
+                         lambda: channels.StaleOptAlpha(sweeps=40)),
+        "colrel_adaptive": ("colrel_fused",
+                            lambda: channels.AdaptiveOptAlpha(
+                                sweeps=40, warm_sweeps=12)),
+    }
+
+    results = {}
+    adaptive_stats = None
+    for name, (strategy, make_policy) in policies.items():
+        schedule = make_schedule(n, seed=seed + 7)  # same channel per policy
+        policy = make_policy() if make_policy else None
+        loader = FederatedLoader(ds, parts, seed=seed)
+        sim = FLSimulator(
+            loss, n_clients=n, strategy=strategy, p=None,
+            local_steps=local_steps,
+            client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+            server_opt=ServerOpt(),
+        )
+        params = init(jax.random.key(seed))
+        ss = sim.init_server_state(params)
+        key = jax.random.key(seed + 1)  # same τ stream per policy
+        losses, accs = [], []
+        t0 = time.time()
+        for r, ch in enumerate(schedule.rounds(rounds)):
+            A = policy.relay_matrix(ch) if policy else None
+            key, sub = jax.random.split(key)
+            batch = loader.round_batch(local_steps, local_batch)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, ss, m = sim.run_round(sub, params, ss, batch, lr,
+                                          A=A, p=ch.p)
+            losses.append(float(m["loss"]))
+            if r % eval_every == 0 or r == rounds - 1:
+                accs.append((r, float(accuracy(params))))
+        assert sim.trace_count == 1, f"round step retraced: {sim.trace_count}"
+        results[name] = FigureResult(name, losses, accs, time.time() - t0)
+        if isinstance(policy, channels.AdaptiveOptAlpha):
+            adaptive_stats = policy.stats
+    print_figure_csv("fig5", results)
+    if adaptive_stats is not None:
+        s = adaptive_stats
+        print(f"fig5/opt_alpha_scheduler,0,rounds={s.rounds};solves={s.solves};"
+              f"cache_hits={s.cache_hits};warm_solves={s.warm_solves};"
+              f"mean_sweeps={s.mean_sweeps:.1f}")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    a = ap.parse_args()
+    run(rounds=a.rounds)

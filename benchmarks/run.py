@@ -24,11 +24,13 @@ def main() -> None:
     print("name,us_per_call,derived")
 
     if not args.skip_figures:
-        from benchmarks import fig2_homogeneous, fig3_ring, fig4_noniid
+        from benchmarks import (fig2_homogeneous, fig3_ring, fig4_noniid,
+                                fig5_timevarying)
 
         fig2_homogeneous.run(rounds=rounds, model=args.model)
         fig3_ring.run(rounds=rounds, model=args.model)
         fig4_noniid.run(rounds=rounds, model=args.model)
+        fig5_timevarying.run(rounds=rounds, model=args.model)
 
     from benchmarks import bench_opt_alpha, bench_relay_kernel, roofline
 

@@ -1,0 +1,45 @@
+"""Time-varying channel subsystem.
+
+Link-state processes (Markov/Gilbert–Elliott fading, random-waypoint
+mobility), uplink-probability drift, the per-round :class:`ChannelSchedule`
+stream, and relay-matrix scheduling policies (adaptive OPT-α with LRU cache +
+warm start, and the stale-A baseline).  Everything here is host-side numpy;
+the compiled round step only ever sees the resulting (A, p, τ) values.
+"""
+from repro.channels.drift import (
+    PiecewiseConstantDrift,
+    RandomWalkDrift,
+    StaticP,
+)
+from repro.channels.link_state import MarkovLinkProcess, gilbert_elliott
+from repro.channels.mobility import RandomWaypointMobility, geometric_adjacency
+from repro.channels.schedule import (
+    ChannelSchedule,
+    ChannelState,
+    StaticChannel,
+    TimeVaryingChannel,
+)
+from repro.channels.scheduler import (
+    AdaptiveOptAlpha,
+    SchedulerStats,
+    StaleOptAlpha,
+    project_to_support,
+)
+
+__all__ = [
+    "AdaptiveOptAlpha",
+    "ChannelSchedule",
+    "ChannelState",
+    "MarkovLinkProcess",
+    "PiecewiseConstantDrift",
+    "RandomWalkDrift",
+    "RandomWaypointMobility",
+    "SchedulerStats",
+    "StaleOptAlpha",
+    "StaticChannel",
+    "StaticP",
+    "TimeVaryingChannel",
+    "geometric_adjacency",
+    "gilbert_elliott",
+    "project_to_support",
+]

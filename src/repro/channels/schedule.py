@@ -1,0 +1,128 @@
+"""ChannelSchedule: the per-round channel state stream.
+
+A schedule yields one :class:`ChannelState` per federated round — the realized
+D2D adjacency, the uplink probability vector, and an ``epoch_id`` that
+increments exactly when ``(adj, p)`` changes value.  Epochs are what the
+adaptive OPT-α scheduler keys on: within an epoch the cached relay matrix is
+exact, across epochs it re-optimizes (warm-started).
+
+The simulator and the distributed round step consume only *values* from the
+state (A, p, τ are traced arguments of the compiled step), so iterating a
+schedule never retraces jitted code — channel dynamics are a host-side
+concern, exactly like the data loader.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import topology
+from repro.channels.drift import StaticP
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelState:
+    """One round's channel: realized D2D graph + uplink marginals."""
+
+    round: int
+    epoch_id: int
+    adj: np.ndarray  # (n, n) bool, symmetric, zero diagonal
+    p: np.ndarray    # (n,) float32 in [0, 1]
+
+    def key(self) -> tuple[bytes, bytes]:
+        """Value-identity key (the adaptive scheduler's cache key)."""
+        return (self.adj.tobytes(), self.p.tobytes())
+
+
+class ChannelSchedule:
+    """Base class: subclasses implement ``next_round``; ``_emit`` canonicalizes
+    dtypes and maintains the round counter and epoch bookkeeping."""
+
+    def __init__(self):
+        self._round = 0
+        self._epoch = -1
+        self._last_key = None
+
+    def _emit(self, adj: np.ndarray, p: np.ndarray) -> ChannelState:
+        adj = np.ascontiguousarray(adj, dtype=bool)
+        p = np.ascontiguousarray(p, dtype=np.float32)
+        if adj.shape[0] != p.shape[0]:
+            raise ValueError(
+                f"channel size mismatch: adj is {adj.shape[0]}-node, "
+                f"p has {p.shape[0]} entries")
+        if np.any(p < 0) or np.any(p > 1):
+            raise ValueError("p left [0, 1]")
+        state = ChannelState(self._round, self._epoch, adj, p)
+        if state.key() != self._last_key:
+            self._epoch += 1
+            self._last_key = state.key()
+            state = dataclasses.replace(state, epoch_id=self._epoch)
+        self._round += 1
+        return state
+
+    def next_round(self) -> ChannelState:
+        raise NotImplementedError
+
+    def rounds(self, n_rounds: int):
+        """Iterator over the next ``n_rounds`` channel states."""
+        for _ in range(n_rounds):
+            yield self.next_round()
+
+
+class StaticChannel(ChannelSchedule):
+    """The seed setting: one fixed (adj, p) — a single epoch forever."""
+
+    def __init__(self, adj: np.ndarray, p: np.ndarray):
+        super().__init__()
+        self._adj = topology._validate(np.asarray(adj, dtype=bool).copy())
+        self._p = np.asarray(p, dtype=np.float32)
+
+    def next_round(self) -> ChannelState:
+        return self._emit(self._adj, self._p)
+
+
+class TimeVaryingChannel(ChannelSchedule):
+    """Composes a link-state process (Markov / mobility) with a p-drift
+    process.  Either side may be static: pass ``adj=...`` instead of
+    ``link_process`` and/or a plain vector ``p=...`` instead of ``p_process``.
+
+    ``adj_every`` / ``p_every`` throttle how often each process advances
+    (e.g. topology churning every round while p re-estimates every 10).
+    Round 0 uses the processes' initial states.
+    """
+
+    def __init__(
+        self,
+        *,
+        link_process=None,
+        adj: np.ndarray | None = None,
+        p_process=None,
+        p: np.ndarray | None = None,
+        adj_every: int = 1,
+        p_every: int = 1,
+    ):
+        super().__init__()
+        if (link_process is None) == (adj is None):
+            raise ValueError("pass exactly one of link_process / adj")
+        if (p_process is None) == (p is None):
+            raise ValueError("pass exactly one of p_process / p")
+        if adj_every < 1 or p_every < 1:
+            raise ValueError("adj_every / p_every must be >= 1")
+        self._link = link_process
+        self._pproc = StaticP(p) if p_process is None else p_process
+        self._adj = (
+            topology._validate(np.asarray(adj, dtype=bool).copy())
+            if link_process is None else link_process.adjacency()
+        )
+        self._adj_every = int(adj_every)
+        self._p_every = int(p_every)
+
+    def next_round(self) -> ChannelState:
+        r = self._round
+        if r > 0:
+            if self._link is not None and r % self._adj_every == 0:
+                self._adj = self._link.step()
+            if r % self._p_every == 0:
+                self._pproc.step()
+        return self._emit(self._adj, self._pproc.value())

@@ -1,0 +1,115 @@
+"""Relay-matrix scheduling over a time-varying channel.
+
+``AdaptiveOptAlpha`` is the subsystem's hot-path policy: it re-runs OPT-α
+only when the channel *value* actually changes (LRU cache keyed on the
+channel bytes) and, on a miss, warm-starts the Gauss–Seidel solve from the
+previous epoch's optimum projected onto the new support
+(:func:`repro.core.opt_alpha.warm_start_weights`) — after a small
+perturbation that converges in a few sweeps instead of from scratch.  The
+joint OPT-α objective is convex, so warm- and cold-started solves reach the
+same S(p, A) (tested).
+
+``StaleOptAlpha`` is the ablation baseline: solve once on the first channel
+and reuse that A forever.  Because a relay matrix is only physically
+realizable on the *current* graph (a down link carries nothing), stale
+matrices must be projected onto the live topology at use time —
+:func:`project_to_support` — which is exactly where the staleness penalty
+(lost mass ⇒ bias) comes from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core import opt_alpha, topology
+from repro.channels.schedule import ChannelState
+
+
+def project_to_support(A: np.ndarray, adj: np.ndarray) -> np.ndarray:
+    """Zero every relay weight that the current graph cannot carry
+    (j ∉ N_i ∪ {i}).  Models using an outdated A on a changed topology."""
+    m = topology.closed_mask(np.asarray(adj, dtype=bool).copy())
+    return np.where(m, np.asarray(A, dtype=np.float64), 0.0)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    rounds: int = 0
+    cache_hits: int = 0
+    solves: int = 0
+    warm_solves: int = 0
+    sweeps_total: int = 0
+
+    @property
+    def mean_sweeps(self) -> float:
+        return self.sweeps_total / self.solves if self.solves else 0.0
+
+
+class AdaptiveOptAlpha:
+    """Per-round relay matrices for a :class:`ChannelSchedule` stream."""
+
+    def __init__(
+        self,
+        *,
+        sweeps: int = 40,
+        warm_sweeps: int | None = None,
+        tol: float = 1e-10,
+        cache_size: int = 64,
+        warm_start: bool = True,
+    ):
+        if cache_size < 1:
+            raise ValueError("cache_size must be >= 1")
+        self.sweeps = sweeps
+        self.warm_sweeps = sweeps if warm_sweeps is None else warm_sweeps
+        self.tol = tol
+        self.cache_size = cache_size
+        self.warm_start = warm_start
+        self.stats = SchedulerStats()
+        self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._last_A: np.ndarray | None = None
+
+    def relay_matrix(self, state: ChannelState) -> np.ndarray:
+        self.stats.rounds += 1
+        key = state.key()
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.stats.cache_hits += 1
+            self._last_A = hit
+            return hit
+        A0 = None
+        sweeps = self.sweeps
+        if self.warm_start and self._last_A is not None:
+            A0 = opt_alpha.warm_start_weights(state.p, state.adj, self._last_A)
+            sweeps = self.warm_sweeps
+            self.stats.warm_solves += 1
+        res = opt_alpha.optimize(
+            state.p, state.adj, sweeps=sweeps, tol=self.tol, A0=A0)
+        self.stats.solves += 1
+        self.stats.sweeps_total += res.sweeps
+        # the cache and the warm-start seed alias the returned array; freeze
+        # it so a caller mutating A cannot silently corrupt later epochs
+        res.A.setflags(write=False)
+        self._cache[key] = res.A
+        if len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+        self._last_A = res.A
+        return res.A
+
+
+class StaleOptAlpha:
+    """Solve OPT-α on the first channel only; every later round reuses that A
+    projected onto the live topology (the channel-oblivious baseline)."""
+
+    def __init__(self, *, sweeps: int = 40, tol: float = 1e-10):
+        self.sweeps = sweeps
+        self.tol = tol
+        self._A: np.ndarray | None = None
+
+    def relay_matrix(self, state: ChannelState) -> np.ndarray:
+        if self._A is None:
+            self._A = opt_alpha.optimize(
+                state.p, state.adj, sweeps=self.sweeps, tol=self.tol).A
+        return project_to_support(self._A, state.adj)

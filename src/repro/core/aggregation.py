@@ -56,10 +56,16 @@ def no_dropout_increment(stacked_updates, *, n: int):
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
-    """Bundles a strategy name with its increment function."""
+    """Bundles a strategy name with its increment function.
+
+    ``fn(tau, stacked_updates, A=None) -> increment pytree``.  For the colrel
+    strategies A is a *traced input* so a time-varying channel can swap relay
+    matrices between rounds without retracing the jitted step; when omitted,
+    the matrix bound at construction time is used (static-channel callers).
+    """
 
     name: str
-    fn: Callable  # (tau, stacked_updates) -> increment pytree
+    fn: Callable  # (tau, stacked_updates, A=None) -> increment pytree
 
 
 def make_aggregator(
@@ -68,29 +74,41 @@ def make_aggregator(
     n: int,
     A=None,
 ) -> Aggregator:
+    default_A = A
+
+    def _resolve(A_arg):
+        A_eff = default_A if A_arg is None else A_arg
+        if A_eff is None:
+            raise ValueError("colrel aggregation needs a relay matrix A "
+                             "(bind one at construction or pass it per call)")
+        return A_eff
+
     if strategy == "colrel":
-        if A is None:
-            raise ValueError("colrel aggregation needs a relay matrix A")
         return Aggregator(
-            "colrel", lambda tau, upd: colrel_increment(A, tau, upd, n=n, fused=False)
+            "colrel",
+            lambda tau, upd, A=None: colrel_increment(
+                _resolve(A), tau, upd, n=n, fused=False),
         )
     if strategy == "colrel_fused":
-        if A is None:
-            raise ValueError("colrel aggregation needs a relay matrix A")
         return Aggregator(
             "colrel_fused",
-            lambda tau, upd: colrel_increment(A, tau, upd, n=n, fused=True),
+            lambda tau, upd, A=None: colrel_increment(
+                _resolve(A), tau, upd, n=n, fused=True),
         )
     if strategy == "fedavg_blind":
         return Aggregator(
-            "fedavg_blind", lambda tau, upd: fedavg_blind_increment(tau, upd, n=n)
+            "fedavg_blind",
+            lambda tau, upd, A=None: fedavg_blind_increment(tau, upd, n=n),
         )
     if strategy == "fedavg_nonblind":
         return Aggregator(
-            "fedavg_nonblind", lambda tau, upd: fedavg_nonblind_increment(tau, upd)
+            "fedavg_nonblind",
+            lambda tau, upd, A=None: fedavg_nonblind_increment(tau, upd),
         )
     if strategy == "no_dropout":
-        return Aggregator("no_dropout", lambda tau, upd: no_dropout_increment(upd, n=n))
+        return Aggregator(
+            "no_dropout", lambda tau, upd, A=None: no_dropout_increment(upd, n=n)
+        )
     raise ValueError(f"unknown aggregation strategy: {strategy!r}")
 
 

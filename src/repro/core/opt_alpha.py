@@ -94,6 +94,35 @@ def initial_weights(p: np.ndarray, adj: np.ndarray) -> np.ndarray:
     return A
 
 
+def warm_start_weights(p: np.ndarray, adj: np.ndarray, A_prev: np.ndarray) -> np.ndarray:
+    """Project a previous epoch's relay matrix onto a new channel ``(p, adj)``.
+
+    Used by the adaptive OPT-α scheduler (``repro.channels.scheduler``): after
+    a small channel perturbation the old optimum is a near-feasible point, so
+    seeding Gauss–Seidel from it converges in a few sweeps instead of from
+    scratch.  Per column i: keep only entries on the new closed neighborhood
+    with p_j > 0, rescale so Lemma 1 (Σ_j p_j α_ji = 1) holds under the new p,
+    and fall back to the Alg. 3 initial weights for any column whose carried
+    mass vanished (e.g. every old relay of i dropped out of N_i ∪ {i}).
+    """
+    p = np.asarray(p, dtype=np.float64)
+    adj = np.asarray(adj, dtype=bool)
+    m = topology.closed_mask(adj)
+    A = np.where(m, np.asarray(A_prev, dtype=np.float64), 0.0)
+    A_init = None
+    for i in range(p.shape[0]):
+        sup = m[:, i] & (p > 0)
+        col = np.where(sup, A[:, i], 0.0)
+        mass = float(p @ col)
+        if mass > 1e-12:
+            A[:, i] = col / mass
+        else:
+            if A_init is None:
+                A_init = initial_weights(p, adj)
+            A[:, i] = A_init[:, i]
+    return A
+
+
 def _solve_column_waterfill(
     p_sup: np.ndarray,
     beta: np.ndarray,

@@ -34,19 +34,30 @@ def build_round_step(
     *,
     n_clients: int,
     local_steps: int,
-    A,
+    A=None,
     relay_mode: str = "faithful",
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
 ):
-    """Returns round(params, server_state, batch, tau, lr) -> (params', state', loss).
+    """Returns round(params, server_state, batch, tau, lr, A=None)
+    -> (params', state', loss).
 
     batch leaves: (n_clients, local_steps, per_client_batch, ...).
+
+    The relay matrix may be bound at build time (static channel: it folds into
+    the compiled step as a constant) or passed per call (time-varying channel:
+    it is a traced input, so swapping A values between rounds does not retrace
+    a jitted ``round``).  The call-time A wins when both are given.
     """
     T = local_steps
     w = 1.0 / n_clients
+    A_static = A
 
-    def round(params, server_state, batch, tau, lr):
+    def round(params, server_state, batch, tau, lr, A=None):
+        A = A_static if A is None else A
+        if A is None:
+            raise ValueError("no relay matrix: bind A at build time or pass "
+                             "it to the round step")
         if T == 1:
             # deltas_g: stacked decayed grads (n, ...); Δ_i = -lr · g_i
             def one(client_batch):

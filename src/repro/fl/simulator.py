@@ -29,7 +29,15 @@ def _metrics(loss, tau, delta_norm):
 
 class FLSimulator:
     """strategy ∈ {colrel, colrel_fused, fedavg_blind, fedavg_nonblind,
-    no_dropout}; A is required for the colrel strategies."""
+    no_dropout}; A is required for the colrel strategies.
+
+    The relay matrix A and the connectivity vector p are *round inputs*: a
+    time-varying channel (``repro.channels``) may pass fresh values to
+    ``run_round`` every round without retracing the jitted step — A enters the
+    compiled function as a traced argument, never a closure constant.  The
+    values given at construction are only defaults.  ``trace_count`` counts
+    actual retraces (it should stay at 1 across channel epochs of fixed n).
+    """
 
     def __init__(
         self,
@@ -50,7 +58,9 @@ class FLSimulator:
         self.server_opt = server_opt
         self.strategy = strategy
         self.p = jnp.asarray(p, jnp.float32) if p is not None else jnp.ones((n_clients,))
-        self.aggregator = aggregation.make_aggregator(strategy, n=n_clients, A=A)
+        self.A = jnp.asarray(A, jnp.float32) if A is not None else None
+        self.aggregator = aggregation.make_aggregator(strategy, n=n_clients)
+        self.trace_count = 0
         self._round = jax.jit(self._round_impl)
 
     # -- one client: T local SGD steps from the broadcast global model -----
@@ -68,11 +78,12 @@ class FLSimulator:
         )
         return tree_sub(new_params, params), losses[0]
 
-    def _round_impl(self, params, server_state, batch, tau, lr):
+    def _round_impl(self, params, server_state, batch, tau, A, lr):
+        self.trace_count += 1  # python-side: runs only when jit retraces
         deltas, losses = jax.vmap(
             self._client_update, in_axes=(None, 0, None)
         )(params, batch, lr)
-        increment = self.aggregator.fn(tau, deltas)
+        increment = self.aggregator.fn(tau, deltas, A)
         new_params, new_state = self.server_opt.apply(params, server_state, increment)
         dn = jnp.mean(
             jax.vmap(lambda i: sum(jnp.sum(l[i].astype(jnp.float32) ** 2)
@@ -80,12 +91,18 @@ class FLSimulator:
         )
         return new_params, new_state, _metrics(jnp.mean(losses), tau, jnp.sqrt(dn))
 
-    def run_round(self, key, params, server_state, batch, lr):
-        """batch: pytree with leaves (n, T, b, ...)."""
-        tau = jax.random.bernoulli(key, self.p).astype(jnp.float32)
+    def run_round(self, key, params, server_state, batch, lr, *, A=None, p=None):
+        """batch: pytree with leaves (n, T, b, ...).
+
+        ``A`` / ``p`` override the construction-time channel for this round
+        (time-varying channels); both enter the jitted step by value only.
+        """
+        p_round = self.p if p is None else jnp.asarray(p, jnp.float32)
+        tau = jax.random.bernoulli(key, p_round).astype(jnp.float32)
         if self.strategy == "no_dropout":
             tau = jnp.ones_like(tau)
-        return self._round(params, server_state, batch, tau, lr)
+        A_round = self.A if A is None else jnp.asarray(A, jnp.float32)
+        return self._round(params, server_state, batch, tau, A_round, lr)
 
     def init_server_state(self, params):
         return self.server_opt.init(params)

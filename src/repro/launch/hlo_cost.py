@@ -184,9 +184,17 @@ def _dot_flops(op: OpInfo, defs: dict) -> float:
     m = _OPERANDS.match("(" + inner)
     lhs_dims = None
     if m:
-        names = [a.strip().lstrip("%") for a in m.group(1).split(",")]
-        if names and names[0] in defs:
-            lhs_dims = defs[names[0]][1]
+        # Operands usually carry their shape inline ("f32[32,64]{1,0} %x");
+        # the first shape in the operand list is the lhs.  Fall back to the
+        # global def map for bare-name operands.
+        op_shapes = _shapes(m.group(1))
+        if op_shapes:
+            lhs_dims = op_shapes[0][1]
+        else:
+            first = m.group(1).split(",")[0].strip()
+            name = first.split()[-1].lstrip("%") if first else ""
+            if name in defs:
+                lhs_dims = defs[name][1]
     cdims = _CONTRACT.search(op.line)
     k = 1
     if cdims and lhs_dims is not None:

@@ -1,0 +1,276 @@
+"""Time-varying channel subsystem: processes, schedules, the adaptive OPT-α
+scheduler, and the A-as-traced-input contract of the round steps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.core import connectivity, opt_alpha, relay as relay_lib, topology
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+
+# ---------------------------------------------------------------- link state
+
+def test_markov_transition_matrix_rows_stochastic():
+    proc = channels.MarkovLinkProcess(
+        topology.fully_connected(6), p_up_to_down=0.3, p_down_to_up=0.1)
+    P = proc.transition_matrix()
+    np.testing.assert_allclose(P.sum(axis=1), 1.0)
+    assert P[1, 0] == 0.3 and P[0, 1] == 0.1  # up→down, down→up
+
+
+def test_markov_stationary_distribution_matches_transition_matrix():
+    """Empirical per-edge up-fraction ≈ π = q_du / (q_ud + q_du), and π is a
+    left eigenvector of the transition matrix."""
+    q_ud, q_du = 0.3, 0.1
+    proc = channels.MarkovLinkProcess(
+        topology.fully_connected(8), p_up_to_down=q_ud, p_down_to_up=q_du,
+        init="stationary", seed=0)
+    pi = proc.stationary_up_prob
+    assert pi == pytest.approx(q_du / (q_ud + q_du))
+    stat = np.array([1.0 - pi, pi])
+    np.testing.assert_allclose(stat @ proc.transition_matrix(), stat)
+
+    rounds, frac = 3000, 0.0
+    for _ in range(rounds):
+        frac += proc.step().sum() / proc.base.sum()
+    assert frac / rounds == pytest.approx(pi, abs=0.02)
+
+
+def test_markov_adjacency_on_base_support_and_valid():
+    base = topology.ring(10, 2)
+    proc = channels.gilbert_elliott(base, stay_up=0.7, stay_down=0.6, seed=1)
+    for _ in range(50):
+        adj = proc.step()
+        topology._validate(adj)          # symmetric, zero diagonal
+        assert not np.any(adj & ~base)   # never an edge outside the envelope
+
+
+# ------------------------------------------------------------------ mobility
+
+def test_geometric_adjacency_symmetric_zero_diagonal():
+    mob = channels.RandomWaypointMobility(12, radius=0.4, speed=0.1, seed=0)
+    seen = set()
+    for _ in range(40):
+        adj = mob.step()
+        out = topology._validate(adj.copy())
+        np.testing.assert_array_equal(out, adj)
+        assert not adj.diagonal().any()
+        seen.add(adj.tobytes())
+    assert len(seen) > 1  # the graph actually moves
+    assert np.all(mob.positions >= 0) and np.all(mob.positions <= mob.area)
+
+
+# --------------------------------------------------------------------- drift
+
+def test_piecewise_constant_drift_holds_then_jumps():
+    p0 = connectivity.paper_heterogeneous().p
+    d = channels.PiecewiseConstantDrift(p0, hold=4, seed=0)
+    sched = channels.TimeVaryingChannel(
+        adj=topology.ring(10, 1), p_process=d)
+    states = list(sched.rounds(12))
+    # epochs change exactly at the hold boundary: rounds 0-3, 4-7, 8-11
+    assert [s.epoch_id for s in states] == [0] * 4 + [1] * 4 + [2] * 4
+    np.testing.assert_array_equal(states[0].p, states[3].p)
+    assert not np.array_equal(states[3].p, states[4].p)
+
+
+def test_random_walk_drift_stays_in_bounds():
+    d = channels.RandomWalkDrift(
+        np.full(8, 0.5), sigma=0.3, low=0.1, high=0.9, seed=0)
+    for _ in range(200):
+        p = d.step()
+        assert np.all(p >= 0.1) and np.all(p <= 0.9)
+
+
+# ----------------------------------------------------------------- schedules
+
+def test_static_channel_single_epoch():
+    sched = channels.StaticChannel(
+        topology.ring(6, 1), np.full(6, 0.4))
+    states = list(sched.rounds(5))
+    assert [s.epoch_id for s in states] == [0] * 5
+    assert [s.round for s in states] == list(range(5))
+
+
+def test_timevarying_epoch_increments_only_on_change():
+    link = channels.MarkovLinkProcess(
+        topology.fully_connected(8), p_up_to_down=0.5, p_down_to_up=0.5,
+        seed=2)
+    sched = channels.TimeVaryingChannel(
+        link_process=link, p=np.full(8, 0.3), adj_every=3)
+    states = list(sched.rounds(9))
+    for a, b in zip(states, states[1:]):
+        same = a.key() == b.key()
+        assert (b.epoch_id == a.epoch_id) == same
+    # within a coherence block the state is value-identical
+    assert states[0].key() == states[1].key() == states[2].key()
+
+
+# ------------------------------------------------- warm start / scheduler
+
+def test_warm_start_weights_feasible_on_new_channel():
+    rng = np.random.default_rng(0)
+    p1, p2 = rng.uniform(0.1, 0.9, 10), rng.uniform(0.1, 0.9, 10)
+    adj1, adj2 = topology.ring(10, 2), topology.ring(10, 1)  # support shrinks
+    A1 = opt_alpha.optimize(p1, adj1, sweeps=30).A
+    A0 = opt_alpha.warm_start_weights(p2, adj2, A1)
+    assert relay_lib.neighbor_support(A0, adj2)
+    np.testing.assert_allclose(
+        opt_alpha.unbiasedness_residual(p2, A0), 0.0, atol=1e-9)
+
+
+def test_warm_start_matches_cold_start_S_on_perturbed_channel():
+    p = connectivity.paper_heterogeneous().p.astype(np.float64)
+    adj = topology.ring(10, 2)
+    A_prev = opt_alpha.optimize(p, adj, sweeps=60).A
+    # perturb: p drifts and one link fades
+    p2 = np.clip(p + np.random.default_rng(1).normal(0, 0.05, 10), 0.05, 0.95)
+    adj2 = adj.copy()
+    adj2[0, 2] = adj2[2, 0] = False
+    cold = opt_alpha.optimize(p2, adj2, sweeps=60)
+    warm = opt_alpha.optimize(
+        p2, adj2, sweeps=60, A0=opt_alpha.warm_start_weights(p2, adj2, A_prev))
+    S_cold, S_warm = cold.S_history[-1], warm.S_history[-1]
+    assert S_warm == pytest.approx(S_cold, rel=1e-6)
+    assert warm.sweeps <= cold.sweeps  # the whole point of warm starting
+
+
+def test_adaptive_scheduler_lru_cache_and_warm_stats():
+    p = np.full(8, 0.5, dtype=np.float32)
+    s1 = channels.ChannelState(0, 0, topology.ring(8, 1), p)
+    s2 = channels.ChannelState(1, 1, topology.ring(8, 2), p)
+    pol = channels.AdaptiveOptAlpha(sweeps=30, warm_sweeps=10, cache_size=4)
+    A1 = pol.relay_matrix(s1)
+    A2 = pol.relay_matrix(s2)
+    A1_again = pol.relay_matrix(s1)
+    np.testing.assert_array_equal(A1, A1_again)  # served from cache
+    assert pol.stats.solves == 2 and pol.stats.cache_hits == 1
+    assert pol.stats.warm_solves == 1  # second solve warm-started off A1
+    assert not np.array_equal(A1, A2)
+
+
+def test_adaptive_scheduler_cache_eviction():
+    p = np.full(6, 0.5, dtype=np.float32)
+    pol = channels.AdaptiveOptAlpha(sweeps=10, cache_size=2)
+    states = [channels.ChannelState(i, i, topology.ring(6, 1 + i % 3), p + i / 100)
+              for i in range(3)]
+    for s in states:
+        pol.relay_matrix(s)
+    pol.relay_matrix(states[0])  # evicted by the 2-deep LRU → re-solved
+    assert pol.stats.solves == 4 and pol.stats.cache_hits == 0
+
+
+def test_stale_policy_projects_onto_live_topology():
+    p = connectivity.paper_heterogeneous().p
+    rich, poor = topology.ring(10, 2), topology.ring(10, 1)
+    pol = channels.StaleOptAlpha(sweeps=30)
+    A_full = pol.relay_matrix(channels.ChannelState(0, 0, rich, p))
+    A_proj = pol.relay_matrix(channels.ChannelState(1, 1, poor, p))
+    assert relay_lib.neighbor_support(A_proj, poor)
+    # projection loses relay mass (the staleness penalty is real)
+    assert A_proj.sum() < A_full.sum()
+
+
+# ------------------------------------- A as traced input in the round steps
+
+def _quad_setting(n=6, dim=4, T=2):
+    def loss_fn(params, batch):
+        diff = params["x"][None, :] - batch["c"]
+        return 0.5 * jnp.mean(jnp.sum(diff ** 2, axis=-1))
+
+    rng = np.random.default_rng(0)
+    batch = {"c": jnp.asarray(rng.standard_normal((n, T, 8, dim)), jnp.float32)}
+    params = {"x": jnp.ones((dim,))}
+    return loss_fn, batch, params
+
+
+def test_A_as_argument_bit_identical_to_A_as_constant():
+    """Static channel: passing A by value computes bit-for-bit the same round
+    as the seed's closure-constant formulation."""
+    n, T = 6, 2
+    loss_fn, batch, params = _quad_setting(n=n, dim=4, T=T)
+    p = np.linspace(0.2, 0.9, n)
+    A = opt_alpha.optimize(p, topology.ring(n, 1), sweeps=20).A
+    tau = jnp.asarray([1, 0, 1, 1, 0, 1], jnp.float32)
+
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel", A=A, p=p,
+                      local_steps=T,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+    by_value = sim._round(params, None, batch, tau, sim.A, 0.1)
+
+    A_const = sim.A  # closure constant, folded at trace time
+
+    @jax.jit
+    def const_round(params, server_state, batch, tau, lr):
+        return sim._round_impl(params, server_state, batch, tau, A_const, lr)
+
+    by_constant = const_round(params, None, batch, tau, 0.1)
+
+    for leaf_v, leaf_c in zip(jax.tree.leaves(by_value),
+                              jax.tree.leaves(by_constant)):
+        np.testing.assert_array_equal(np.asarray(leaf_v), np.asarray(leaf_c))
+
+
+def test_simulator_not_retraced_across_channel_epochs():
+    """Acceptance: trace count == 1 while (A, p, τ) values change per round."""
+    n, T = 6, 2
+    loss_fn, batch, params = _quad_setting(n=n, dim=4, T=T)
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                      local_steps=T,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+    ss = sim.init_server_state(params)
+    link = channels.MarkovLinkProcess(
+        topology.fully_connected(n), p_up_to_down=0.4, p_down_to_up=0.4,
+        seed=0)
+    drift = channels.RandomWalkDrift(np.full(n, 0.5), sigma=0.1, seed=1)
+    sched = channels.TimeVaryingChannel(link_process=link, p_process=drift)
+    pol = channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+    key = jax.random.key(0)
+    epochs = set()
+    for ch in sched.rounds(6):
+        epochs.add(ch.epoch_id)
+        key, sub = jax.random.split(key)
+        params, ss, _ = sim.run_round(sub, params, ss, batch, 0.1,
+                                      A=pol.relay_matrix(ch), p=ch.p)
+    assert len(epochs) > 1          # the channel genuinely changed
+    assert sim.trace_count == 1     # ... and the step still compiled once
+
+
+def test_distributed_round_step_A_argument_no_retrace_and_matches():
+    """build_round_step: call-time A equals build-time A numerically, and
+    swapping A values does not retrace the jitted step."""
+    from repro.fl.distributed import build_round_step
+
+    n = 6
+    loss_fn, batch, params = _quad_setting(n=n, dim=4, T=1)
+    batch = {"c": batch["c"][:, :1]}
+    p = np.linspace(0.2, 0.9, n)
+    A1 = opt_alpha.optimize(p, topology.ring(n, 1), sweeps=20).A
+    A2 = opt_alpha.optimize(p, topology.ring(n, 2), sweeps=20).A
+    tau = jnp.asarray([1, 1, 0, 1, 0, 1], jnp.float32)
+    opt = ClientOpt(kind="sgd", weight_decay=0.0)
+
+    for mode in ("faithful", "fused"):
+        static = build_round_step(loss_fn, n_clients=n, local_steps=1, A=A1,
+                                  relay_mode=mode, client_opt=opt)
+        dynamic = build_round_step(loss_fn, n_clients=n, local_steps=1,
+                                   relay_mode=mode, client_opt=opt)
+        traces = []
+
+        def counted(params, ss, batch, tau, lr, A):
+            traces.append(1)
+            return dynamic(params, ss, batch, tau, lr, A)
+
+        jitted = jax.jit(counted)
+        want, _, _ = jax.jit(static)(params, None, batch, tau, 0.1)
+        got1, _, _ = jitted(params, None, batch, tau, 0.1,
+                            jnp.asarray(A1, jnp.float32))
+        got2, _, _ = jitted(params, None, batch, tau, 0.1,
+                            jnp.asarray(A2, jnp.float32))
+        np.testing.assert_allclose(np.asarray(got1["x"]),
+                                   np.asarray(want["x"]), atol=1e-6)
+        assert len(traces) == 1, f"retraced in mode {mode}"
+        assert not np.allclose(np.asarray(got1["x"]), np.asarray(got2["x"]))

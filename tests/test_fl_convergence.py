@@ -48,18 +48,21 @@ def _run(quad, strategy, A=None, seed=42):
     return float(jnp.sum((params["x"] - jnp.asarray(quad["x_star"])) ** 2))
 
 
+@pytest.mark.slow
 def test_colrel_beats_fedavg_dropout(quad):
     err_colrel = _run(quad, "colrel_fused", quad["A"])
     err_blind = _run(quad, "fedavg_blind")
     assert err_colrel < err_blind * 0.3, (err_colrel, err_blind)
 
 
+@pytest.mark.slow
 def test_optimized_weights_beat_init(quad):
     err_opt = _run(quad, "colrel_fused", quad["A"])
     err_init = _run(quad, "colrel_fused", quad["A0"])
     assert err_opt < err_init * 1.05  # never worse; usually much better
 
 
+@pytest.mark.slow
 def test_colrel_within_reach_of_no_dropout(quad):
     err_colrel = _run(quad, "colrel_fused", quad["A"])
     err_full = _run(quad, "no_dropout")
@@ -99,7 +102,7 @@ def test_distributed_round_matches_simulator(quad):
     sim = FLSimulator(
         quad["loss_fn"], n_clients=n, strategy="colrel", A=quad["A"], p=quad["p"],
         local_steps=1, client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
-    want, _, _ = sim._round(params, None, batch1, tau, lr)
+    want, _, _ = sim._round(params, None, batch1, tau, sim.A, lr)
 
     for mode in ("faithful", "fused"):
         step = build_round_step(
@@ -111,6 +114,7 @@ def test_distributed_round_matches_simulator(quad):
             err_msg=f"relay_mode={mode}")
 
 
+@pytest.mark.slow
 def test_noniid_failure_mode_and_colrel_rescue():
     """Paper Fig. 4 in miniature: sort-and-partition non-IID + dropout makes
     blind FedAvg fail; ColRel recovers most accuracy."""
