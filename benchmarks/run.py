@@ -25,12 +25,13 @@ def main() -> None:
 
     if not args.skip_figures:
         from benchmarks import (fig2_homogeneous, fig3_ring, fig4_noniid,
-                                fig5_timevarying)
+                                fig5_timevarying, fig6_churn)
 
         fig2_homogeneous.run(rounds=rounds, model=args.model)
         fig3_ring.run(rounds=rounds, model=args.model)
         fig4_noniid.run(rounds=rounds, model=args.model)
         fig5_timevarying.run(rounds=rounds, model=args.model)
+        fig6_churn.run(rounds=rounds, model=args.model)
 
     from benchmarks import bench_opt_alpha, bench_relay_kernel, roofline
 

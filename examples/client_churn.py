@@ -1,0 +1,99 @@
+"""Client churn quickstart: ColRel when clients come and go mid-run.
+
+    PYTHONPATH=src python examples/client_churn.py
+
+Ten padded client slots; every few rounds one cohort departs and another
+rejoins (rotating shifts), while D2D links fade on a Markov chain.  A
+`ChurnSchedule` streams one (adj, p, active, epoch) per round; the adaptive
+OPT-α scheduler re-solves the *masked* relay problem per epoch (departed
+clients carry zero weight, unbiasedness holds over whoever is present), and
+the jitted round step never retraces — A, p and the membership mask all
+enter by value.  Compare against blind FedAvg on the identical channel: the
+data is non-IID (one class shard per client), so a departing or
+badly-connected client takes its classes with it — unless its neighbors
+relay its update to the PS.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import channels
+from repro.core import connectivity, topology
+from repro.data.loader import FederatedLoader
+from repro.data.partition import sort_and_partition
+from repro.data.synthetic import gaussian_classification
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+N_MAX, DIM, CLASSES, ROUNDS = 10, 32, 10, 12
+
+
+def make_schedule():
+    """Markov-fading ring + one of 5 cohorts offline per 3-round shift."""
+    link = channels.MarkovLinkProcess(
+        topology.ring(N_MAX, 2), p_up_to_down=0.3, p_down_to_up=0.5, seed=7)
+    return channels.ChurnSchedule(
+        membership=channels.RotatingCohorts(N_MAX, n_cohorts=5, hold=3),
+        link_process=link,
+        p=connectivity.paper_heterogeneous().p,
+        adj_every=2)
+
+
+# Data + model (same linear classifier as quickstart.py)
+ds = gaussian_classification(4000, dim=DIM, n_classes=CLASSES, snr=0.8, seed=0)
+test = gaussian_classification(1000, dim=DIM, n_classes=CLASSES, snr=0.8, seed=1)
+
+
+def loss_fn(params, batch):
+    logits = batch["inputs"] @ params["w"] + params["b"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], 1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(params):
+    logits = jnp.asarray(test.inputs) @ params["w"] + params["b"]
+    return float((jnp.argmax(logits, -1) == jnp.asarray(test.labels)).mean())
+
+
+def train(strategy: str, policy=None) -> float:
+    schedule = make_schedule()  # identical channel for both runs
+    sim = FLSimulator(loss_fn, n_clients=N_MAX, strategy=strategy,
+                      local_steps=4,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=1e-4))
+    loader = FederatedLoader(
+        ds, sort_and_partition(ds, N_MAX, shards_per_client=1, seed=0), seed=0)
+    params = {"w": jnp.zeros((DIM, CLASSES)), "b": jnp.zeros((CLASSES,))}
+    state = sim.init_server_state(params)
+    key = jax.random.key(42)
+    last_epoch = -1
+    for r, ch in enumerate(schedule.rounds(ROUNDS)):
+        A = policy.relay_matrix(ch) if policy else None
+        key, sub = jax.random.split(key)
+        batch = loader.round_batch(4, 16)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, state, m = sim.run_round(sub, params, state, batch, 0.5,
+                                         A=A, p=ch.p, active=ch.active)
+        if policy and ch.epoch_id != last_epoch:
+            last_epoch = ch.epoch_id
+            away = np.nonzero(~ch.active)[0].tolist()
+            print(f"round {r:3d}  epoch {ch.epoch_id:3d}  "
+                  f"away={away}  links={int(ch.adj.sum()) // 2:2d}  "
+                  f"loss={float(m['loss']):.4f}")
+    assert sim.trace_count == 1, "membership changes must not retrace"
+    return accuracy(params)
+
+
+print("=== adaptive ColRel under churn ===")
+policy = channels.AdaptiveOptAlpha(sweeps=40, warm_sweeps=12)
+acc_colrel = train("colrel_fused", policy)
+s = policy.stats
+print(f"\n=== blind FedAvg on the identical channel ===")
+acc_fedavg = train("fedavg_blind")
+
+print(f"\nacc@{ROUNDS}: adaptive_colrel={acc_colrel:.3f}  "
+      f"fedavg_blind={acc_fedavg:.3f}")
+print(f"opt_alpha_solves={s.solves} (warm={s.warm_solves}, "
+      f"cache_hits={s.cache_hits}, mean_sweeps={s.mean_sweeps:.1f})")
+assert acc_colrel >= acc_fedavg, (acc_colrel, acc_fedavg)
+print("adaptive ColRel ≥ FedAvg-blind under churn ✓")

@@ -1,11 +1,56 @@
-"""Time-varying channel subsystem.
+"""Time-varying channel subsystem: what the network does between rounds.
 
-Link-state processes (Markov/Gilbert–Elliott fading, random-waypoint
-mobility), uplink-probability drift, the per-round :class:`ChannelSchedule`
-stream, and relay-matrix scheduling policies (adaptive OPT-α with LRU cache +
-warm start, and the stale-A baseline).  Everything here is host-side numpy;
-the compiled round step only ever sees the resulting (A, p, τ) values.
+Everything in this package is **host-side numpy** — the compiled round step
+only ever sees the resulting ``(A, p, τ, active)`` values as traced inputs,
+so channel dynamics (and client churn) never retrace jitted code.  The
+subsystem is three layers, consumed in order every round:
+
+1. **Processes** — stateful generators advancing one aspect of the channel:
+
+   * link state (`link_state`): Markov / Gilbert–Elliott per-edge fading on a
+     base D2D graph; (`mobility`): random-waypoint trajectories with
+     radio-range geometric adjacency.
+   * uplink drift (`drift`): the p-vector going stale — piecewise-constant
+     jumps (blockage) or a reflected random walk (pathloss drift).
+   * membership (`churn`): clients joining/leaving over a *padded* client
+     dimension ``n_max`` — per-client Markov on/off chains
+     (:class:`MarkovChurn`), deterministic shift rotation
+     (:class:`RotatingCohorts`), or a fixed mask
+     (:class:`StaticMembership`).
+
+2. **Schedules** (`schedule`, `churn`) — compose processes into one stream of
+   :class:`ChannelState` per federated round: the realized adjacency, the
+   uplink marginals p, the churn mask ``active`` (``None`` for the fixed-
+   membership schedules) and an ``epoch_id`` that increments exactly when the
+   channel *value* ``(adj, p, active)`` changes.  :class:`StaticChannel` is
+   the seed setting, :class:`TimeVaryingChannel` composes fading × drift,
+   :class:`ChurnSchedule` additionally streams membership.
+
+3. **Scheduler policies** (`scheduler`) — turn a state stream into per-round
+   relay matrices.  :class:`AdaptiveOptAlpha` re-solves OPT-α only on epoch
+   changes: an LRU cache keyed on the channel bytes — including the churn
+   mask, since the optimum over a different active set is a different matrix
+   — plus Gauss–Seidel warm starts from the previous optimum.  Under churn
+   it solves the masked problem (`opt_alpha.optimize_masked`), so departed
+   clients carry exactly zero weight.  :class:`StaleOptAlpha` is the
+   channel-oblivious ablation (round-0 A forever, projected onto the live
+   topology and membership).
+
+Lifecycle per round::
+
+    state = schedule.next_round()            # (adj, p, active, epoch_id)
+    A     = policy.relay_matrix(state)       # cached within an epoch
+    sim.run_round(key, ..., A=A, p=state.p, active=state.active)
+
+The simulator's ``trace_count`` stays at 1 across epochs *and* membership
+changes: A, p and the mask are values, never shapes.
 """
+from repro.channels.churn import (
+    ChurnSchedule,
+    MarkovChurn,
+    RotatingCohorts,
+    StaticMembership,
+)
 from repro.channels.drift import (
     PiecewiseConstantDrift,
     RandomWalkDrift,
@@ -30,13 +75,17 @@ __all__ = [
     "AdaptiveOptAlpha",
     "ChannelSchedule",
     "ChannelState",
+    "ChurnSchedule",
+    "MarkovChurn",
     "MarkovLinkProcess",
     "PiecewiseConstantDrift",
     "RandomWalkDrift",
     "RandomWaypointMobility",
+    "RotatingCohorts",
     "SchedulerStats",
     "StaleOptAlpha",
     "StaticChannel",
+    "StaticMembership",
     "StaticP",
     "TimeVaryingChannel",
     "geometric_adjacency",

@@ -23,16 +23,29 @@ from repro.channels.drift import StaticP
 
 @dataclasses.dataclass(frozen=True)
 class ChannelState:
-    """One round's channel: realized D2D graph + uplink marginals."""
+    """One round's channel: realized D2D graph + uplink marginals.
+
+    ``active`` is the client-churn membership mask over the padded client
+    dimension (``None`` ⇒ full membership, the pre-churn states).  It is part
+    of the value identity: a membership change opens a new epoch, and the
+    adaptive scheduler's cache keys on it — the optimal relay weights over a
+    different active set are a different matrix.
+    """
 
     round: int
     epoch_id: int
-    adj: np.ndarray  # (n, n) bool, symmetric, zero diagonal
-    p: np.ndarray    # (n,) float32 in [0, 1]
+    adj: np.ndarray  # (n_max, n_max) bool, symmetric, zero diagonal
+    p: np.ndarray    # (n_max,) float32 in [0, 1]
+    active: np.ndarray | None = None  # (n_max,) bool, None ⇒ all live
 
-    def key(self) -> tuple[bytes, bytes]:
+    def key(self) -> tuple[bytes, bytes, bytes]:
         """Value-identity key (the adaptive scheduler's cache key)."""
-        return (self.adj.tobytes(), self.p.tobytes())
+        return (self.adj.tobytes(), self.p.tobytes(),
+                b"" if self.active is None else self.active.tobytes())
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum()) if self.active is not None else self.p.shape[0]
 
 
 class ChannelSchedule:
@@ -44,7 +57,8 @@ class ChannelSchedule:
         self._epoch = -1
         self._last_key = None
 
-    def _emit(self, adj: np.ndarray, p: np.ndarray) -> ChannelState:
+    def _emit(self, adj: np.ndarray, p: np.ndarray,
+              active: np.ndarray | None = None) -> ChannelState:
         adj = np.ascontiguousarray(adj, dtype=bool)
         p = np.ascontiguousarray(p, dtype=np.float32)
         if adj.shape[0] != p.shape[0]:
@@ -53,7 +67,12 @@ class ChannelSchedule:
                 f"p has {p.shape[0]} entries")
         if np.any(p < 0) or np.any(p > 1):
             raise ValueError("p left [0, 1]")
-        state = ChannelState(self._round, self._epoch, adj, p)
+        if active is not None:
+            active = np.ascontiguousarray(active, dtype=bool)
+            if active.shape != p.shape:
+                raise ValueError(
+                    f"active mask has shape {active.shape}, expected {p.shape}")
+        state = ChannelState(self._round, self._epoch, adj, p, active)
         if state.key() != self._last_key:
             self._epoch += 1
             self._last_key = state.key()
@@ -118,6 +137,11 @@ class TimeVaryingChannel(ChannelSchedule):
         self._adj_every = int(adj_every)
         self._p_every = int(p_every)
 
+    def _membership(self) -> np.ndarray | None:
+        """Churn hook: the current active mask (None ⇒ fixed membership).
+        Overridden by :class:`repro.channels.churn.ChurnSchedule`."""
+        return None
+
     def next_round(self) -> ChannelState:
         r = self._round
         if r > 0:
@@ -125,4 +149,4 @@ class TimeVaryingChannel(ChannelSchedule):
                 self._adj = self._link.step()
             if r % self._p_every == 0:
                 self._pproc.step()
-        return self._emit(self._adj, self._pproc.value())
+        return self._emit(self._adj, self._pproc.value(), self._membership())

@@ -27,10 +27,16 @@ from repro.core import opt_alpha, topology
 from repro.channels.schedule import ChannelState
 
 
-def project_to_support(A: np.ndarray, adj: np.ndarray) -> np.ndarray:
+def project_to_support(A: np.ndarray, adj: np.ndarray,
+                       active: np.ndarray | None = None) -> np.ndarray:
     """Zero every relay weight that the current graph cannot carry
-    (j ∉ N_i ∪ {i}).  Models using an outdated A on a changed topology."""
+    (j ∉ N_i ∪ {i}).  Models using an outdated A on a changed topology.
+    With a churn mask ``active``, weights touching a departed client are
+    zeroed too (a slot that left the run carries nothing)."""
     m = topology.closed_mask(np.asarray(adj, dtype=bool).copy())
+    if active is not None:
+        a = np.asarray(active, dtype=bool)
+        m = m & a[:, None] & a[None, :]
     return np.where(m, np.asarray(A, dtype=np.float64), 0.0)
 
 
@@ -81,12 +87,27 @@ class AdaptiveOptAlpha:
             return hit
         A0 = None
         sweeps = self.sweeps
+        masked = state.active is not None and not state.active.all()
+        if masked:
+            # churn: the solve lives on the active block — restrict the
+            # channel first so the warm start and optimum never put mass on
+            # a departed client
+            a = np.asarray(state.active, dtype=bool)
+            p_eff = np.where(a, state.p.astype(np.float64), 0.0)
+            adj_eff = state.adj & a[:, None] & a[None, :]
+        else:
+            p_eff, adj_eff = state.p, state.adj
         if self.warm_start and self._last_A is not None:
-            A0 = opt_alpha.warm_start_weights(state.p, state.adj, self._last_A)
+            A0 = opt_alpha.warm_start_weights(p_eff, adj_eff, self._last_A)
             sweeps = self.warm_sweeps
             self.stats.warm_solves += 1
-        res = opt_alpha.optimize(
-            state.p, state.adj, sweeps=sweeps, tol=self.tol, A0=A0)
+        if masked:
+            res = opt_alpha.optimize_masked(
+                state.p, state.adj, state.active,
+                sweeps=sweeps, tol=self.tol, A0=A0)
+        else:
+            res = opt_alpha.optimize(
+                state.p, state.adj, sweeps=sweeps, tol=self.tol, A0=A0)
         self.stats.solves += 1
         self.stats.sweeps_total += res.sweeps
         # the cache and the warm-start seed alias the returned array; freeze
@@ -110,6 +131,11 @@ class StaleOptAlpha:
 
     def relay_matrix(self, state: ChannelState) -> np.ndarray:
         if self._A is None:
-            self._A = opt_alpha.optimize(
-                state.p, state.adj, sweeps=self.sweeps, tol=self.tol).A
-        return project_to_support(self._A, state.adj)
+            if state.active is not None and not state.active.all():
+                self._A = opt_alpha.optimize_masked(
+                    state.p, state.adj, state.active,
+                    sweeps=self.sweeps, tol=self.tol).A
+            else:
+                self._A = opt_alpha.optimize(
+                    state.p, state.adj, sweeps=self.sweeps, tol=self.tol).A
+        return project_to_support(self._A, state.adj, state.active)

@@ -11,6 +11,17 @@ Strategies
   fedavg_blind     w=1/n blind masked sum of *raw* updates (missing ⇒ zero)
   fedavg_nonblind  masked mean over the successful clients (PS knows ids)
   no_dropout       plain 1/n average, perfect connectivity upper bound
+
+Client churn (padded client dimension)
+--------------------------------------
+Every increment function accepts an optional ``active`` mask: a traced (n,)
+0/1 vector marking which of the ``n = n_max`` padded client slots are live
+this round.  With a mask, the averaging weight renormalizes to 1/n_active,
+τ is intersected with the mask, and (for the colrel strategies) the relay
+matrix is restricted to the active block — so an inactive client contributes
+*exactly zero* to the increment and unbiasedness holds over the active set.
+``active=None`` is the full-membership fast path: it compiles with the
+static 1/n weight and is bit-identical to the fixed-n formulation.
 """
 from __future__ import annotations
 
@@ -24,22 +35,40 @@ from repro.core import relay as relay_lib
 from repro.utils import tree_axpy, tree_scale, tree_zeros_like
 
 
-def colrel_increment(A, tau, stacked_updates, *, n: int, fused: bool = True):
+def active_weight(active, *, n: int):
+    """The blind averaging weight: 1/n_active (traced) under a churn mask,
+    the static python float 1/n without one."""
+    if active is None:
+        return 1.0 / n
+    active = jnp.asarray(active, dtype=jnp.float32)
+    return 1.0 / jnp.maximum(active.sum(), 1.0)
+
+
+def colrel_increment(A, tau, stacked_updates, *, n: int, fused: bool = True,
+                     active=None):
     """ColRel PS increment.  ``fused=True`` is the optimized path (identical
     math); ``fused=False`` materializes Δx̃ per relay (paper-faithful)."""
-    w = 1.0 / n
+    w = active_weight(active, n=n)
+    if active is not None:
+        A = relay_lib.mask_relay_matrix(A, active)
+        tau = jnp.asarray(tau, jnp.float32) * jnp.asarray(active, jnp.float32)
     if fused:
         return relay_lib.fused_aggregate(A, tau, stacked_updates, w=w)
     relayed = relay_lib.relay(A, stacked_updates)
     return relay_lib.masked_aggregate(tau, relayed, w=w)
 
 
-def fedavg_blind_increment(tau, stacked_updates, *, n: int):
-    return relay_lib.masked_aggregate(tau, stacked_updates, w=1.0 / n)
+def fedavg_blind_increment(tau, stacked_updates, *, n: int, active=None):
+    w = active_weight(active, n=n)
+    if active is not None:
+        tau = jnp.asarray(tau, jnp.float32) * jnp.asarray(active, jnp.float32)
+    return relay_lib.masked_aggregate(tau, stacked_updates, w=w)
 
 
-def fedavg_nonblind_increment(tau, stacked_updates):
+def fedavg_nonblind_increment(tau, stacked_updates, *, active=None):
     tau = jnp.asarray(tau, dtype=jnp.float32)
+    if active is not None:
+        tau = tau * jnp.asarray(active, jnp.float32)
     denom = jnp.maximum(tau.sum(), 1.0)
 
     def reduce(leaf):
@@ -48,24 +77,35 @@ def fedavg_nonblind_increment(tau, stacked_updates):
     return jax.tree.map(reduce, stacked_updates)
 
 
-def no_dropout_increment(stacked_updates, *, n: int):
-    return jax.tree.map(
-        lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0), stacked_updates
-    )
+def no_dropout_increment(stacked_updates, *, n: int, active=None):
+    if active is None:
+        return jax.tree.map(
+            lambda leaf: jnp.mean(leaf.astype(jnp.float32), axis=0),
+            stacked_updates,
+        )
+    a = jnp.asarray(active, jnp.float32)
+    w = a / jnp.maximum(a.sum(), 1.0)
+
+    def reduce(leaf):
+        return jnp.tensordot(w, leaf.astype(jnp.float32), axes=(0, 0))
+
+    return jax.tree.map(reduce, stacked_updates)
 
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
     """Bundles a strategy name with its increment function.
 
-    ``fn(tau, stacked_updates, A=None) -> increment pytree``.  For the colrel
-    strategies A is a *traced input* so a time-varying channel can swap relay
-    matrices between rounds without retracing the jitted step; when omitted,
-    the matrix bound at construction time is used (static-channel callers).
+    ``fn(tau, stacked_updates, A=None, active=None) -> increment pytree``.
+    For the colrel strategies A is a *traced input* so a time-varying channel
+    can swap relay matrices between rounds without retracing the jitted step;
+    when omitted, the matrix bound at construction time is used
+    (static-channel callers).  ``active`` is the traced churn mask of the
+    padded client dimension (None ⇒ full membership, static-weight path).
     """
 
     name: str
-    fn: Callable  # (tau, stacked_updates, A=None) -> increment pytree
+    fn: Callable  # (tau, stacked_updates, A=None, active=None) -> increment
 
 
 def make_aggregator(
@@ -86,28 +126,32 @@ def make_aggregator(
     if strategy == "colrel":
         return Aggregator(
             "colrel",
-            lambda tau, upd, A=None: colrel_increment(
-                _resolve(A), tau, upd, n=n, fused=False),
+            lambda tau, upd, A=None, active=None: colrel_increment(
+                _resolve(A), tau, upd, n=n, fused=False, active=active),
         )
     if strategy == "colrel_fused":
         return Aggregator(
             "colrel_fused",
-            lambda tau, upd, A=None: colrel_increment(
-                _resolve(A), tau, upd, n=n, fused=True),
+            lambda tau, upd, A=None, active=None: colrel_increment(
+                _resolve(A), tau, upd, n=n, fused=True, active=active),
         )
     if strategy == "fedavg_blind":
         return Aggregator(
             "fedavg_blind",
-            lambda tau, upd, A=None: fedavg_blind_increment(tau, upd, n=n),
+            lambda tau, upd, A=None, active=None: fedavg_blind_increment(
+                tau, upd, n=n, active=active),
         )
     if strategy == "fedavg_nonblind":
         return Aggregator(
             "fedavg_nonblind",
-            lambda tau, upd, A=None: fedavg_nonblind_increment(tau, upd),
+            lambda tau, upd, A=None, active=None: fedavg_nonblind_increment(
+                tau, upd, active=active),
         )
     if strategy == "no_dropout":
         return Aggregator(
-            "no_dropout", lambda tau, upd, A=None: no_dropout_increment(upd, n=n)
+            "no_dropout",
+            lambda tau, upd, A=None, active=None: no_dropout_increment(
+                upd, n=n, active=active),
         )
     raise ValueError(f"unknown aggregation strategy: {strategy!r}")
 

@@ -238,6 +238,69 @@ def optimize(
     )
 
 
+def optimize_masked(
+    p: np.ndarray,
+    adj: np.ndarray,
+    active: np.ndarray,
+    *,
+    sweeps: int = 50,
+    tol: float = 1e-10,
+    A0: np.ndarray | None = None,
+) -> OptAlphaResult:
+    """OPT-α on the *active block* of a padded client dimension.
+
+    ``active`` is an (n_max,) boolean membership mask (client churn: clients
+    not currently in the run).  The returned matrix is full (n_max, n_max)
+    with every inactive row and column exactly zero — an inactive client
+    neither relays nor is relayed — and its active block equals the dense
+    Gauss–Seidel solve of the subproblem restricted to the active clients
+    (tested).  Unbiasedness (Lemma 1) holds column-wise over the active set.
+
+    The sweep loop visits only active columns, so a mostly-empty mask costs
+    O(n_active) column solves per sweep, not O(n_max).
+    """
+    p = np.asarray(p, dtype=np.float64)
+    adj = np.asarray(adj, dtype=bool)
+    active = np.asarray(active, dtype=bool)
+    n = p.shape[0]
+    if active.shape != (n,):
+        raise ValueError(f"active mask shape {active.shape} != ({n},)")
+    # Channel restricted to the active block: a departed client's links carry
+    # nothing and its uplink never fires.
+    adj_m = adj & active[:, None] & active[None, :]
+    p_m = np.where(active, p, 0.0)
+    m = topology.closed_mask(adj_m)
+    m &= active[:, None] & active[None, :]
+    if A0 is None:
+        A = initial_weights(p_m, adj_m)
+    else:
+        A = np.where(m, np.asarray(A0, dtype=np.float64), 0.0)
+    A[:, ~active] = 0.0
+    A[~active, :] = 0.0
+    feasible = np.ones((n,), dtype=bool)
+    history = [variance_proxy(p_m, A)]
+    bis_total = 0
+    act_idx = np.nonzero(active)[0]
+    for _ in range(sweeps):
+        for i in act_idx:
+            row_mass = A.sum(axis=1)
+            beta = row_mass - A[:, i]
+            col, ok, iters = solve_column(p_m, m[:, i], beta)
+            A[:, i] = col
+            feasible[i] = ok
+            bis_total += iters
+        history.append(variance_proxy(p_m, A))
+        if abs(history[-2] - history[-1]) <= tol * max(1.0, history[-2]):
+            break
+    return OptAlphaResult(
+        A=A,
+        S_history=np.asarray(history),
+        feasible_columns=feasible,
+        sweeps=len(history) - 1,
+        bisection_iters_total=bis_total,
+    )
+
+
 def optimize_distributed(
     p: np.ndarray,
     adj: np.ndarray,

@@ -54,6 +54,16 @@ def relay(A, stacked_updates, *, precision=jax.lax.Precision.HIGHEST):
     return jax.tree.map(mix, stacked_updates)
 
 
+def mask_relay_matrix(A, active):
+    """Restrict A to the active block of a padded client dimension:
+    zero every row and column of an inactive client (churn semantics — a
+    departed client neither relays nor is relayed).  ``active`` is a traced
+    (n,) 0/1 vector, so membership can change per round without retracing."""
+    A = _check_square(A)
+    active = jnp.asarray(active, dtype=jnp.float32)
+    return active[:, None] * A.astype(jnp.float32) * active[None, :]
+
+
 def fused_coefficients(A, tau) -> jnp.ndarray:
     """c_o = Σ_r τ_r α_ro — the per-origin coefficient of the fused
     relay+aggregate path (c = τᵀ A)."""

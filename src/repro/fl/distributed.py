@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import relay as relay_lib
-from repro.core.aggregation import ServerOpt
+from repro.core.aggregation import ServerOpt, active_weight
 from repro.optim.sgd import ClientOpt
 from repro.utils import tree_axpy, tree_scale, tree_sub
 
@@ -39,7 +39,7 @@ def build_round_step(
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
 ):
-    """Returns round(params, server_state, batch, tau, lr, A=None)
+    """Returns round(params, server_state, batch, tau, lr, A=None, active=None)
     -> (params', state', loss).
 
     batch leaves: (n_clients, local_steps, per_client_batch, ...).
@@ -48,16 +48,32 @@ def build_round_step(
     the compiled step as a constant) or passed per call (time-varying channel:
     it is a traced input, so swapping A values between rounds does not retrace
     a jitted ``round``).  The call-time A wins when both are given.
+
+    ``active`` is the churn mask over the padded client dimension
+    (``n_clients = n_max``): a traced (n,) 0/1 vector restricting the relay
+    matrix, τ and the blind weight (1/n_active) to the live clients, so
+    membership changes between calls never retrace.  ``None`` keeps the
+    static-weight fixed-membership path.
     """
     T = local_steps
-    w = 1.0 / n_clients
     A_static = A
 
-    def round(params, server_state, batch, tau, lr, A=None):
+    def round(params, server_state, batch, tau, lr, A=None, active=None):
         A = A_static if A is None else A
         if A is None:
             raise ValueError("no relay matrix: bind A at build time or pass "
                              "it to the round step")
+        w = active_weight(active, n=n_clients)
+        if active is not None:
+            a = jnp.asarray(active, jnp.float32)
+            A = relay_lib.mask_relay_matrix(A, a)
+            tau = jnp.asarray(tau, jnp.float32) * a
+
+        def _mean_loss(losses):
+            if active is None:
+                return jnp.mean(losses)
+            a_ = jnp.asarray(active, jnp.float32)
+            return jnp.sum(losses * a_) / jnp.maximum(a_.sum(), 1.0)
         if T == 1:
             # deltas_g: stacked decayed grads (n, ...); Δ_i = -lr · g_i
             def one(client_batch):
@@ -91,13 +107,13 @@ def build_round_step(
                     ),
                     gsum, params,
                 )
-                mean_loss = jnp.mean(losses)
+                mean_loss = _mean_loss(losses)
             else:
                 deltas_g, losses = jax.vmap(one)(batch)
                 deltas = tree_scale(-lr, deltas_g)
                 relayed = relay_lib.relay(A, deltas)
                 inc = relay_lib.masked_aggregate(tau, relayed, w=w)
-                mean_loss = jnp.mean(losses)
+                mean_loss = _mean_loss(losses)
         else:
             def client_update(client_batch):
                 opt_state = client_opt.init(params)
@@ -112,7 +128,7 @@ def build_round_step(
                 return tree_sub(new_p, params), losses[0]
 
             deltas, losses = jax.vmap(client_update)(batch)
-            mean_loss = jnp.mean(losses)
+            mean_loss = _mean_loss(losses)
             if relay_mode == "fused":
                 inc = relay_lib.fused_aggregate(A, tau, deltas, w=w)
             else:

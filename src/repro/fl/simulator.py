@@ -37,6 +37,15 @@ class FLSimulator:
     compiled function as a traced argument, never a closure constant.  The
     values given at construction are only defaults.  ``trace_count`` counts
     actual retraces (it should stay at 1 across channel epochs of fixed n).
+
+    Client churn: ``n_clients`` is the *padded* client dimension ``n_max``.
+    Passing ``run_round(..., active=mask)`` with a (n_max,) 0/1 mask runs the
+    round over only the live clients — inactive slots still compute a local
+    update (fixed shapes), but contribute exactly zero to the PS increment
+    and are excluded from the metrics; the blind weight renormalizes to
+    1/n_active.  The mask is traced, so clients may join/leave every round
+    while ``trace_count`` stays at 1.  ``active=None`` (default) is the
+    full-membership path, bit-identical to the fixed-n formulation.
     """
 
     def __init__(
@@ -78,31 +87,47 @@ class FLSimulator:
         )
         return tree_sub(new_params, params), losses[0]
 
-    def _round_impl(self, params, server_state, batch, tau, A, lr):
+    def _round_impl(self, params, server_state, batch, tau, A, lr, active):
         self.trace_count += 1  # python-side: runs only when jit retraces
         deltas, losses = jax.vmap(
             self._client_update, in_axes=(None, 0, None)
         )(params, batch, lr)
-        increment = self.aggregator.fn(tau, deltas, A)
+        increment = self.aggregator.fn(tau, deltas, A, active)
         new_params, new_state = self.server_opt.apply(params, server_state, increment)
-        dn = jnp.mean(
-            jax.vmap(lambda i: sum(jnp.sum(l[i].astype(jnp.float32) ** 2)
-                                   for l in jax.tree.leaves(deltas)))(jnp.arange(self.n))
-        )
-        return new_params, new_state, _metrics(jnp.mean(losses), tau, jnp.sqrt(dn))
+        per_client_dn = jax.vmap(
+            lambda i: sum(jnp.sum(l[i].astype(jnp.float32) ** 2)
+                          for l in jax.tree.leaves(deltas))
+        )(jnp.arange(self.n))
+        if active is None:
+            mean_loss, dn = jnp.mean(losses), jnp.mean(per_client_dn)
+        else:
+            # churn: metrics average over the live clients only (a padded
+            # slot's local run is dead compute and must not skew them)
+            a = jnp.asarray(active, jnp.float32)
+            denom = jnp.maximum(a.sum(), 1.0)
+            mean_loss = jnp.sum(losses * a) / denom
+            dn = jnp.sum(per_client_dn * a) / denom
+            tau = tau * a
+        return new_params, new_state, _metrics(mean_loss, tau, jnp.sqrt(dn))
 
-    def run_round(self, key, params, server_state, batch, lr, *, A=None, p=None):
+    def run_round(self, key, params, server_state, batch, lr, *, A=None, p=None,
+                  active=None):
         """batch: pytree with leaves (n, T, b, ...).
 
         ``A`` / ``p`` override the construction-time channel for this round
         (time-varying channels); both enter the jitted step by value only.
+        ``active`` is the churn mask over the padded client dimension (see
+        class docstring) — also by value, so membership changes don't retrace.
         """
         p_round = self.p if p is None else jnp.asarray(p, jnp.float32)
         tau = jax.random.bernoulli(key, p_round).astype(jnp.float32)
         if self.strategy == "no_dropout":
             tau = jnp.ones_like(tau)
         A_round = self.A if A is None else jnp.asarray(A, jnp.float32)
-        return self._round(params, server_state, batch, tau, A_round, lr)
+        active_round = (None if active is None
+                        else jnp.asarray(active, jnp.float32))
+        return self._round(params, server_state, batch, tau, A_round, lr,
+                           active_round)
 
     def init_server_state(self, params):
         return self.server_opt.init(params)

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import relay as relay_lib
 from repro.kernels import relay_mix as _k
 
 
@@ -18,10 +19,22 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def relay_mix(A, stacked, *, block_d: int = _k.DEFAULT_BLOCK_D, interpret=None):
-    """Δ̃ = A·Δ over a stacked pytree (leaves (n, ...))."""
+def _mask_A(A, active):
+    """Restrict A to the active block of a padded client dim (client churn);
+    the mask folds into the kernel operand, the kernel itself is unchanged."""
+    if active is None:
+        return jnp.asarray(A)
+    return relay_lib.mask_relay_matrix(A, active)
+
+
+def relay_mix(A, stacked, *, active=None, block_d: int = _k.DEFAULT_BLOCK_D,
+              interpret=None):
+    """Δ̃ = A·Δ over a stacked pytree (leaves (n, ...)).  ``active`` is the
+    optional churn mask: inactive rows/cols of A are zeroed, so a departed
+    client's slot neither relays nor is relayed."""
     interpret = _default_interpret() if interpret is None else interpret
-    n = jnp.asarray(A).shape[0]
+    A = _mask_A(A, active)
+    n = A.shape[0]
 
     def mix(leaf):
         flat = leaf.reshape(n, -1)
@@ -34,13 +47,18 @@ def relay_mix(A, stacked, *, block_d: int = _k.DEFAULT_BLOCK_D, interpret=None):
     return jax.tree.map(mix, stacked)
 
 
-def fused_aggregate(A, tau, stacked, *, w: float, block_d: int = _k.DEFAULT_BLOCK_D,
-                    interpret=None):
-    """w · Σ_r τ_r (A·Δ)_r without materializing the relayed updates."""
+def fused_aggregate(A, tau, stacked, *, w, active=None,
+                    block_d: int = _k.DEFAULT_BLOCK_D, interpret=None):
+    """w · Σ_r τ_r (A·Δ)_r without materializing the relayed updates.
+    ``w`` may be a python float (fixed membership) or a traced scalar
+    (1/n_active under churn); ``active`` masks A and τ to the live block."""
     interpret = _default_interpret() if interpret is None else interpret
-    A = jnp.asarray(A)
+    A = _mask_A(A, active)
     n = A.shape[0]
-    coeffs = w * (jnp.asarray(tau, jnp.float32) @ A.astype(jnp.float32))
+    tau = jnp.asarray(tau, jnp.float32)
+    if active is not None:
+        tau = tau * jnp.asarray(active, jnp.float32)
+    coeffs = w * (tau @ A.astype(jnp.float32))
 
     def reduce(leaf):
         flat = leaf.reshape(n, -1)

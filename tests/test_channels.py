@@ -199,13 +199,14 @@ def test_A_as_argument_bit_identical_to_A_as_constant():
     sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel", A=A, p=p,
                       local_steps=T,
                       client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
-    by_value = sim._round(params, None, batch, tau, sim.A, 0.1)
+    by_value = sim._round(params, None, batch, tau, sim.A, 0.1, None)
 
     A_const = sim.A  # closure constant, folded at trace time
 
     @jax.jit
     def const_round(params, server_state, batch, tau, lr):
-        return sim._round_impl(params, server_state, batch, tau, A_const, lr)
+        return sim._round_impl(params, server_state, batch, tau, A_const, lr,
+                               None)
 
     by_constant = const_round(params, None, batch, tau, 0.1)
 

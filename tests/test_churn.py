@@ -1,0 +1,311 @@
+"""Client-churn subsystem: padded client dimension + active-mask invariants.
+
+The three load-bearing invariants (ISSUE 2):
+  * an inactive client contributes exactly zero to the PS increment, for
+    every aggregation strategy;
+  * OPT-α on the active block (``optimize_masked``) matches solving the
+    dense subproblem restricted to the active clients;
+  * ``trace_count`` stays 1 while membership changes every round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.core import aggregation, opt_alpha, relay as relay_lib, topology
+from repro.fl.simulator import FLSimulator
+from repro.kernels import ops as kops
+from repro.optim.sgd import ClientOpt
+
+STRATEGIES = ["colrel", "colrel_fused", "fedavg_blind", "fedavg_nonblind",
+              "no_dropout"]
+
+
+def _quad_setting(n=8, dim=4, T=2, seed=0):
+    def loss_fn(params, batch):
+        diff = params["x"][None, :] - batch["c"]
+        return 0.5 * jnp.mean(jnp.sum(diff ** 2, axis=-1))
+
+    rng = np.random.default_rng(seed)
+    batch = {"c": jnp.asarray(rng.standard_normal((n, T, 8, dim)), jnp.float32)}
+    params = {"x": jnp.ones((dim,))}
+    return loss_fn, batch, params
+
+
+def _channel(n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.2, 0.9, n)
+    adj = topology.ring(n, 2)
+    A = opt_alpha.optimize(p, adj, sweeps=30).A
+    return p, adj, A
+
+
+# ------------------------------------------------- invariant 1: exact zeros
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_inactive_clients_contribute_exactly_zero(strategy):
+    """Poisoning an inactive client's update must not move the increment by
+    a single bit — its contribution is exactly zero, not merely small."""
+    n = 8
+    p, adj, A = _channel(n)
+    active = jnp.asarray([1, 1, 0, 1, 0, 1, 1, 1], jnp.float32)
+    tau = jnp.asarray([1, 0, 1, 1, 1, 0, 1, 1], jnp.float32)
+    rng = np.random.default_rng(1)
+    upd = {"x": jnp.asarray(rng.standard_normal((n, 5)), jnp.float32),
+           "y": jnp.asarray(rng.standard_normal((n, 3, 2)), jnp.float32)}
+    poisoned = jax.tree.map(
+        lambda l: l.at[jnp.asarray([2, 4])].set(1e9), upd)
+
+    agg = aggregation.make_aggregator(strategy, n=n, A=A)
+    inc = agg.fn(tau, upd, None, active)
+    inc_poisoned = agg.fn(tau, poisoned, None, active)
+    for a, b in zip(jax.tree.leaves(inc), jax.tree.leaves(inc_poisoned)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.all(np.isfinite(np.asarray(a)))
+
+
+def test_simulator_round_independent_of_inactive_client_data():
+    """End-to-end: garbage batches on inactive clients leave the new global
+    model bit-identical (their whole local run is dead compute)."""
+    n, T = 8, 2
+    loss_fn, batch, params = _quad_setting(n=n, T=T)
+    p, adj, A = _channel(n)
+    active = np.array([1, 0, 1, 1, 1, 0, 1, 1], np.float32)
+    garbage = {"c": batch["c"].at[jnp.asarray([1, 5])].set(1e6)}
+
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused", A=A, p=p,
+                      local_steps=T,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+    key = jax.random.key(3)
+    out1, _, m1 = sim.run_round(key, params, None, batch, 0.1, active=active)
+    out2, _, m2 = sim.run_round(key, params, None, garbage, 0.1, active=active)
+    np.testing.assert_array_equal(np.asarray(out1["x"]), np.asarray(out2["x"]))
+    # masked metrics ignore the poisoned slots too
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]))
+    assert float(m1["delta_norm"]) == pytest.approx(float(m2["delta_norm"]))
+
+
+def test_full_membership_mask_matches_maskless_path():
+    """active = all-ones computes the same round as active = None (the
+    static path), so churn code costs nothing when unused."""
+    n, T = 8, 2
+    loss_fn, batch, params = _quad_setting(n=n, T=T)
+    p, adj, A = _channel(n)
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel", A=A, p=p,
+                      local_steps=T,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+    key = jax.random.key(0)
+    out_none, _, _ = sim.run_round(key, params, None, batch, 0.1)
+    out_ones, _, _ = sim.run_round(key, params, None, batch, 0.1,
+                                   active=np.ones(n, np.float32))
+    np.testing.assert_allclose(np.asarray(out_none["x"]),
+                               np.asarray(out_ones["x"]), rtol=1e-6)
+
+
+def test_masked_weight_renormalizes_over_active_set():
+    """fedavg_blind under a mask uses w = 1/n_active, not 1/n_max: with all
+    active clients connected, the increment is the plain mean over them."""
+    n = 6
+    active = jnp.asarray([1, 1, 1, 0, 0, 0], jnp.float32)
+    tau = jnp.ones((n,), jnp.float32)
+    upd = {"x": jnp.asarray(np.arange(n * 2, dtype=np.float32).reshape(n, 2))}
+    agg = aggregation.make_aggregator("fedavg_blind", n=n)
+    inc = agg.fn(tau, upd, None, active)
+    np.testing.assert_allclose(
+        np.asarray(inc["x"]), np.asarray(upd["x"][:3]).mean(axis=0), rtol=1e-6)
+
+
+# --------------------------------- invariant 2: masked OPT-α = dense sub-solve
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_optimize_masked_matches_dense_subproblem(seed):
+    n = 10
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.1, 0.9, n)
+    adj = topology.ring(n, 2)
+    active = np.ones(n, bool)
+    active[rng.choice(n, size=3, replace=False)] = False
+    idx = np.nonzero(active)[0]
+
+    full = opt_alpha.optimize_masked(p, adj, active, sweeps=40)
+    sub = opt_alpha.optimize(p[idx], adj[np.ix_(idx, idx)], sweeps=40)
+
+    # inactive rows and columns are exactly zero
+    assert np.all(full.A[~active, :] == 0.0)
+    assert np.all(full.A[:, ~active] == 0.0)
+    # the active block is the dense solve of the restricted subproblem
+    np.testing.assert_allclose(full.A[np.ix_(idx, idx)], sub.A, atol=1e-12)
+    assert full.S_history[-1] == pytest.approx(sub.S_history[-1])
+    # unbiasedness over the active set (Lemma 1 on the subproblem)
+    np.testing.assert_allclose(
+        opt_alpha.unbiasedness_residual(p[idx], full.A[np.ix_(idx, idx)]),
+        0.0, atol=1e-9)
+
+
+def test_optimize_masked_all_active_matches_dense():
+    p, adj, _ = _channel(9, seed=2)
+    full = opt_alpha.optimize(p, adj, sweeps=30)
+    masked = opt_alpha.optimize_masked(p, adj, np.ones(9, bool), sweeps=30)
+    np.testing.assert_allclose(masked.A, full.A, atol=1e-12)
+
+
+def test_adaptive_scheduler_cache_keys_on_mask():
+    """Same (adj, p), different membership ⇒ different cache entries and a
+    masked solve; revisiting a mask is a pure cache hit."""
+    n = 8
+    p = np.full(n, 0.5, np.float32)
+    adj = topology.ring(n, 2)
+    m1 = np.array([1, 1, 1, 1, 1, 1, 0, 0], bool)
+    m2 = np.ones(n, bool)
+    s1 = channels.ChannelState(0, 0, adj, p, m1)
+    s2 = channels.ChannelState(1, 1, adj, p, m2)
+    pol = channels.AdaptiveOptAlpha(sweeps=30, warm_sweeps=10)
+    A1 = pol.relay_matrix(s1)
+    A2 = pol.relay_matrix(s2)
+    A1_again = pol.relay_matrix(channels.ChannelState(2, 0, adj, p, m1))
+    assert pol.stats.solves == 2 and pol.stats.cache_hits == 1
+    np.testing.assert_array_equal(A1, A1_again)
+    assert np.all(A1[~m1, :] == 0.0) and np.all(A1[:, ~m1] == 0.0)
+    assert not np.array_equal(A1, A2)
+
+
+def test_stale_policy_projects_out_departed_clients():
+    n = 8
+    p, adj, _ = _channel(n, seed=3)
+    pol = channels.StaleOptAlpha(sweeps=20)
+    A_full = pol.relay_matrix(channels.ChannelState(0, 0, adj, p.astype(np.float32)))
+    mask = np.array([1, 1, 0, 1, 1, 1, 0, 1], bool)
+    A_churn = pol.relay_matrix(
+        channels.ChannelState(1, 1, adj, p.astype(np.float32), mask))
+    assert np.all(A_churn[~mask, :] == 0.0) and np.all(A_churn[:, ~mask] == 0.0)
+    assert A_churn.sum() < A_full.sum()  # lost mass = the staleness penalty
+
+
+# -------------------------------------------------- membership processes
+
+
+def test_markov_churn_respects_min_active_floor():
+    proc = channels.MarkovChurn(10, p_leave=0.9, p_join=0.05, min_active=3,
+                                seed=0)
+    masks = set()
+    for _ in range(200):
+        a = proc.step()
+        assert a.sum() >= 3
+        masks.add(a.tobytes())
+    assert len(masks) > 1  # churn actually happens
+
+
+def test_rotating_cohorts_rotation_and_determinism():
+    proc = channels.RotatingCohorts(8, n_cohorts=4, hold=2)
+    seen = [proc.value().copy()]
+    for _ in range(7):
+        seen.append(proc.step().copy())
+    # hold=2: each mask repeats twice, cohorts go offline round-robin
+    np.testing.assert_array_equal(seen[0], seen[1])
+    assert not np.array_equal(seen[1], seen[2])
+    assert all(a.sum() == 6 for a in seen)  # always exactly one cohort out
+    offline = [tuple(np.nonzero(~a)[0]) for a in seen[::2]]
+    assert offline == [(0, 1), (2, 3), (4, 5), (6, 7)]
+    proc2 = channels.RotatingCohorts(8, n_cohorts=4, hold=2)
+    np.testing.assert_array_equal(proc2.value(), seen[0])
+
+
+def test_churn_schedule_epoch_increments_on_membership_change():
+    """Static (adj, p): the membership mask alone drives the epochs."""
+    n = 6
+    sched = channels.ChurnSchedule(
+        membership=channels.RotatingCohorts(n, n_cohorts=3, hold=2),
+        adj=topology.ring(n, 1), p=np.full(n, 0.5))
+    states = list(sched.rounds(8))
+    assert [s.epoch_id for s in states] == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert all(s.active is not None and s.n_active == 4 for s in states)
+
+
+def test_churn_schedule_composes_with_fading_and_drift():
+    n = 8
+    link = channels.MarkovLinkProcess(
+        topology.fully_connected(n), p_up_to_down=0.3, p_down_to_up=0.4,
+        seed=0)
+    drift = channels.RandomWalkDrift(np.full(n, 0.5), sigma=0.05, seed=1)
+    sched = channels.ChurnSchedule(
+        membership=channels.MarkovChurn(n, p_leave=0.3, p_join=0.5,
+                                        min_active=2, seed=2),
+        link_process=link, p_process=drift)
+    prev = None
+    for s in sched.rounds(12):
+        topology._validate(s.adj.copy())
+        assert s.active.shape == (n,) and s.active.sum() >= 2
+        if prev is not None:
+            assert (s.epoch_id == prev.epoch_id) == (s.key() == prev.key())
+        prev = s
+
+
+# ----------------------------------- invariant 3: one trace across churn
+
+
+def test_trace_count_one_across_membership_changes():
+    """Acceptance: clients join/leave every round (n_active varies within
+    n_max) and the jitted round step still compiles exactly once."""
+    n, T = 8, 2
+    loss_fn, batch, params = _quad_setting(n=n, T=T)
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                      local_steps=T,
+                      client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+    ss = sim.init_server_state(params)
+    link = channels.MarkovLinkProcess(
+        topology.fully_connected(n), p_up_to_down=0.3, p_down_to_up=0.5,
+        seed=0)
+    drift = channels.RandomWalkDrift(np.full(n, 0.6), sigma=0.05, seed=1)
+    sched = channels.ChurnSchedule(
+        membership=channels.MarkovChurn(n, p_leave=0.35, p_join=0.5,
+                                        min_active=2, seed=3),
+        link_process=link, p_process=drift)
+    pol = channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+    key = jax.random.key(0)
+    n_actives = set()
+    for ch in sched.rounds(8):
+        n_actives.add(ch.n_active)
+        key, sub = jax.random.split(key)
+        params, ss, m = sim.run_round(sub, params, ss, batch, 0.1,
+                                      A=pol.relay_matrix(ch), p=ch.p,
+                                      active=ch.active)
+        assert np.isfinite(float(m["loss"]))
+    assert len(n_actives) > 1   # membership genuinely varied
+    assert sim.trace_count == 1  # ... within one compiled step
+
+
+# ------------------------------------------------------- kernel path parity
+
+
+def test_kernel_fused_aggregate_masked_matches_reference():
+    n = 8
+    p, adj, A = _channel(n, seed=4)
+    active = jnp.asarray([1, 0, 1, 1, 1, 0, 1, 1], jnp.float32)
+    tau = jnp.asarray(np.random.default_rng(5).random(n) < 0.7, jnp.float32)
+    upd = {"x": jnp.asarray(
+        np.random.default_rng(6).standard_normal((n, 257)), jnp.float32)}
+    w = 1.0 / jnp.maximum(jnp.sum(active), 1.0)
+    got = kops.fused_aggregate(jnp.asarray(A, jnp.float32), tau, upd, w=w,
+                               active=active, interpret=True)
+    want = aggregation.colrel_increment(
+        jnp.asarray(A, jnp.float32), tau, upd, n=n, fused=True, active=active)
+    np.testing.assert_allclose(np.asarray(got["x"]), np.asarray(want["x"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_relay_mix_masked_zeroes_inactive_rows():
+    n = 8
+    _, _, A = _channel(n, seed=7)
+    active = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+    upd = {"x": jnp.asarray(
+        np.random.default_rng(8).standard_normal((n, 130)), jnp.float32)}
+    out = kops.relay_mix(jnp.asarray(A, jnp.float32), upd, active=active,
+                         interpret=True)
+    got = np.asarray(out["x"])
+    assert np.all(got[2] == 0.0) and np.all(got[6] == 0.0)
+    want = relay_lib.relay(relay_lib.mask_relay_matrix(A, active), upd)
+    np.testing.assert_allclose(got, np.asarray(want["x"]), rtol=1e-5,
+                               atol=1e-6)
