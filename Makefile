@@ -3,7 +3,7 @@
 PY ?= python
 PYTEST = PYTHONPATH=src $(PY) -m pytest
 
-.PHONY: test test-fast test-all bench
+.PHONY: test test-fast test-all bench bench-smoke lint
 
 test:
 	$(PYTEST) -x -q
@@ -18,3 +18,17 @@ test-all:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# CI perf gate: run the tiny bench scenario (loop vs scan engine), write
+# BENCH_bench_smoke.json, fail on >2x rounds/sec regression vs the
+# checked-in baseline (benchmarks/baselines/, regenerate by copying a fresh
+# report over it when hardware or engine legitimately changes)
+bench-smoke:
+	PYTHONPATH=src $(PY) -m repro.bench.run --scenario bench_smoke \
+	  --out-dir . \
+	  --baseline benchmarks/baselines/BENCH_bench_smoke.json \
+	  --max-regression 2.0
+
+lint:
+	ruff check .
+	ruff format --check src/repro/bench tests/test_bench.py

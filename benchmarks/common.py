@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry as creg
-from repro.core import connectivity, opt_alpha, topology
 from repro.core.aggregation import ServerOpt
 from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition, sort_and_partition

@@ -20,7 +20,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import FigureResult, make_mlp, print_figure_csv
 from repro import channels
@@ -29,6 +28,7 @@ from repro.core.aggregation import ServerOpt
 from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition
 from repro.data.synthetic import cifar_like
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
 from repro.fl.simulator import FLSimulator
 from repro.optim.sgd import ClientOpt
 
@@ -49,7 +49,8 @@ def make_schedule(n: int, *, seed: int = 0) -> channels.TimeVaryingChannel:
 
 def run(rounds: int = 30, model: str = "mlp", n: int = 10,
         local_steps: int = 8, local_batch: int = 64, lr: float = 0.1,
-        n_train: int = 4000, seed: int = 0, eval_every: int = 2):
+        n_train: int = 4000, seed: int = 0, eval_every: int = 2,
+        engine: str = "loop"):
     if model != "mlp":
         # fig5 studies the channel, not the architecture; don't burn minutes
         # re-running it per model in `benchmarks.run --model ...` sweeps.
@@ -89,19 +90,42 @@ def run(rounds: int = 30, model: str = "mlp", n: int = 10,
         params = init(jax.random.key(seed))
         ss = sim.init_server_state(params)
         key = jax.random.key(seed + 1)  # same τ stream per policy
-        losses, accs = [], []
+        accs = []
+
+        def next_batch():
+            return loader.round_batch(local_steps, local_batch)
+
         t0 = time.time()
-        for r, ch in enumerate(schedule.rounds(rounds)):
-            A = policy.relay_matrix(ch) if policy else None
-            key, sub = jax.random.split(key)
-            batch = loader.round_batch(local_steps, local_batch)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, ss, m = sim.run_round(sub, params, ss, batch, lr,
-                                          A=A, p=ch.p)
-            losses.append(float(m["loss"]))
-            if r % eval_every == 0 or r == rounds - 1:
-                accs.append((r, float(accuracy(params))))
-        assert sim.trace_count == 1, f"round step retraced: {sim.trace_count}"
+        if engine == "scan":
+            # epoch-fused paper-scale path: one lax.scan per channel epoch,
+            # bit-identical to the loop; accuracy sampled at epoch boundaries.
+            # chunk matches the ~2-round coherence time (adj_every=2): a
+            # padded chunk computes `chunk` rounds regardless, so chunk >>
+            # epoch length would burn compute on masked-out rounds.
+            eng = EpochScanEngine(sim, chunk=2)
+
+            def on_segment(seg, params_, _metrics):
+                accs.append((seg.start_round + seg.n_rounds - 1,
+                             float(accuracy(params_))))
+
+            params, ss, metrics, _ = eng.run_schedule(
+                key, params, ss, schedule=schedule, rounds=rounds,
+                next_batch=next_batch, lr=lr, policy=policy,
+                on_segment=on_segment)
+            assert eng.trace_count <= 2, \
+                f"scan engine retraced: {eng.trace_count}"
+        else:
+            def on_round(r, params_):
+                if r % eval_every == 0 or r == rounds - 1:
+                    accs.append((r, float(accuracy(params_))))
+
+            params, ss, metrics, _ = run_rounds_loop(
+                sim, key, params, ss, schedule=schedule, rounds=rounds,
+                next_batch=next_batch, lr=lr, policy=policy,
+                on_round=on_round)
+            assert sim.trace_count == 1, \
+                f"round step retraced: {sim.trace_count}"
+        losses = [float(x) for x in metrics["loss"]]
         results[name] = FigureResult(name, losses, accs, time.time() - t0)
         if isinstance(policy, channels.AdaptiveOptAlpha):
             adaptive_stats = policy.stats
@@ -119,5 +143,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
+                    help="per-round reference loop or the epoch-fused "
+                         "lax.scan engine (paper-scale horizons)")
     a = ap.parse_args()
-    run(rounds=a.rounds)
+    run(rounds=a.rounds, engine=a.engine)

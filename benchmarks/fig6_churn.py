@@ -24,7 +24,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import FigureResult, make_mlp, print_figure_csv
 from repro import channels
@@ -33,6 +32,7 @@ from repro.core.aggregation import ServerOpt
 from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition
 from repro.data.synthetic import cifar_like
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
 from repro.fl.simulator import FLSimulator
 from repro.optim.sgd import ClientOpt
 
@@ -53,7 +53,8 @@ def make_schedule(n: int, *, seed: int = 0) -> channels.ChurnSchedule:
 
 def run(rounds: int = 30, model: str = "mlp", n: int = 10,
         local_steps: int = 8, local_batch: int = 64, lr: float = 0.1,
-        n_train: int = 4000, seed: int = 0, eval_every: int = 2):
+        n_train: int = 4000, seed: int = 0, eval_every: int = 2,
+        engine: str = "loop"):
     if model != "mlp":
         # fig6 studies churn, not the architecture; see fig5's rationale
         print(f"fig6/skipped,0,reason=churn_study_is_mlp_only;model={model}")
@@ -92,19 +93,41 @@ def run(rounds: int = 30, model: str = "mlp", n: int = 10,
         params = init(jax.random.key(seed))
         ss = sim.init_server_state(params)
         key = jax.random.key(seed + 1)  # same τ stream per policy
-        losses, accs = [], []
+        accs = []
+
+        def next_batch():
+            return loader.round_batch(local_steps, local_batch)
+
         t0 = time.time()
-        for r, ch in enumerate(schedule.rounds(rounds)):
-            A = policy.relay_matrix(ch) if policy else None
-            key, sub = jax.random.split(key)
-            batch = loader.round_batch(local_steps, local_batch)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, ss, m = sim.run_round(sub, params, ss, batch, lr,
-                                          A=A, p=ch.p, active=ch.active)
-            losses.append(float(m["loss"]))
-            if r % eval_every == 0 or r == rounds - 1:
-                accs.append((r, float(accuracy(params))))
-        assert sim.trace_count == 1, f"round step retraced: {sim.trace_count}"
+        if engine == "scan":
+            # epoch-fused paper-scale path: membership changes bound the
+            # segments, so A, p *and* the churn mask are loop-invariant
+            # within each lax.scan; bit-identical to the loop.  chunk
+            # matches the ~2-round coherence time (see fig5's rationale).
+            eng = EpochScanEngine(sim, chunk=2)
+
+            def on_segment(seg, params_, _metrics):
+                accs.append((seg.start_round + seg.n_rounds - 1,
+                             float(accuracy(params_))))
+
+            params, ss, metrics, _ = eng.run_schedule(
+                key, params, ss, schedule=schedule, rounds=rounds,
+                next_batch=next_batch, lr=lr, policy=policy,
+                on_segment=on_segment)
+            assert eng.trace_count <= 2, \
+                f"scan engine retraced: {eng.trace_count}"
+        else:
+            def on_round(r, params_):
+                if r % eval_every == 0 or r == rounds - 1:
+                    accs.append((r, float(accuracy(params_))))
+
+            params, ss, metrics, _ = run_rounds_loop(
+                sim, key, params, ss, schedule=schedule, rounds=rounds,
+                next_batch=next_batch, lr=lr, policy=policy,
+                on_round=on_round)
+            assert sim.trace_count == 1, \
+                f"round step retraced: {sim.trace_count}"
+        losses = [float(x) for x in metrics["loss"]]
         results[name] = FigureResult(name, losses, accs, time.time() - t0)
         if isinstance(policy, channels.AdaptiveOptAlpha):
             adaptive_stats = policy.stats
@@ -122,5 +145,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
+                    help="per-round reference loop or the epoch-fused "
+                         "lax.scan engine (paper-scale horizons)")
     a = ap.parse_args()
-    run(rounds=a.rounds)
+    run(rounds=a.rounds, engine=a.engine)

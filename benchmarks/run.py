@@ -1,15 +1,48 @@
 """Benchmark orchestrator — one function per paper figure/table plus the
 framework benches.  Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--engine scan]
+    PYTHONPATH=src python -m benchmarks.run --list
+    PYTHONPATH=src python -m benchmarks.run --bench bench_smoke
 
 Default budgets are CPU-friendly (single core); ``--full`` uses paper-scale
-round counts.  The roofline rows are read from the dry-run artifacts (run
+round counts (pair it with ``--engine scan`` so Figs. 5/6 run epoch-fused).
+``--bench`` runs registered ``repro.bench`` scenarios (loop vs scan engine,
+writes ``BENCH_<name>.json``); ``--list`` shows everything runnable.  The
+roofline rows are read from the dry-run artifacts (run
 ``python -m repro.launch.dryrun --all [--multi-pod]`` first to refresh).
 """
 from __future__ import annotations
 
 import argparse
+
+FIGURES = {
+    "fig2": "homogeneous p, fully-connected (paper Fig. 2)",
+    "fig3": "ring + heterogeneous p (paper Fig. 3)",
+    "fig4": "non-IID + server momentum (paper Fig. 4)",
+    "fig5": "time-varying channel, adaptive vs stale OPT-α (beyond-paper)",
+    "fig6": "client churn over a padded client dim (beyond-paper)",
+}
+
+
+def run_bench_scenarios(names: list[str], out_dir: str = ".") -> None:
+    """Run registered bench scenarios and print their CSV rows."""
+    from repro.bench import harness, report as report_lib, scenarios
+
+    for name in names:
+        spec = scenarios.get_scenario(name)
+        result = harness.run_scenario(spec)
+        rep = report_lib.make_report(spec, result)
+        path = report_lib.write_report(rep, out_dir)
+        for eng, run in sorted(rep["engines"].items()):
+            us = 1e6 * run["wall_s"] / spec.rounds
+            print(f"bench/{name}/{eng},{us:.0f},"
+                  f"rounds_per_sec={run['rounds_per_sec']:.1f};"
+                  f"trace_count={run['trace_count']};"
+                  f"dispatches={run['dispatches']}")
+        print(f"bench/{name}/summary,0,"
+              f"speedup={rep['speedup_rounds_per_sec']:.2f}x;"
+              f"bitwise_match={rep['bitwise_match']};report={path}")
 
 
 def main() -> None:
@@ -17,8 +50,28 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale rounds (slow on CPU)")
     ap.add_argument("--model", default="mlp", choices=["mlp", "resnet20"])
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
+                    help="round engine for figs 5/6 (scan = epoch-fused)")
     ap.add_argument("--skip-figures", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="list figure benchmarks and registered bench "
+                         "scenarios, then exit")
+    ap.add_argument("--bench", action="append", default=[],
+                    help="also run a registered repro.bench scenario "
+                         "(repeatable); writes BENCH_<name>.json")
     args = ap.parse_args()
+
+    if args.list:
+        from repro.bench import scenarios
+        from repro.bench.run import format_scenario_line
+
+        print("figure benchmarks:")
+        for name, desc in FIGURES.items():
+            print(f"  {name:>12}  {desc}")
+        print("bench scenarios (--bench NAME / repro.bench.run):")
+        for spec in scenarios.list_scenarios():
+            print(f"  {format_scenario_line(spec)}")
+        return
 
     rounds = 100 if args.full else 25
     print("name,us_per_call,derived")
@@ -30,8 +83,12 @@ def main() -> None:
         fig2_homogeneous.run(rounds=rounds, model=args.model)
         fig3_ring.run(rounds=rounds, model=args.model)
         fig4_noniid.run(rounds=rounds, model=args.model)
-        fig5_timevarying.run(rounds=rounds, model=args.model)
-        fig6_churn.run(rounds=rounds, model=args.model)
+        fig5_timevarying.run(rounds=rounds, model=args.model,
+                             engine=args.engine)
+        fig6_churn.run(rounds=rounds, model=args.model, engine=args.engine)
+
+    if args.bench:
+        run_bench_scenarios(args.bench)
 
     from benchmarks import bench_opt_alpha, bench_relay_kernel, roofline
 

@@ -7,7 +7,6 @@ a CSV file — the data behind the paper's accuracy-vs-round figures."""
 import argparse
 import sys
 
-import numpy as np
 
 sys.path.insert(0, ".")  # allow `python examples/...` from repo root
 from benchmarks.common import run_figure  # noqa: E402

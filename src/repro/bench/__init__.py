@@ -1,0 +1,51 @@
+"""Benchmark subsystem: declarative scenarios, a timing harness, JSON reports.
+
+Three layers, consumed in order:
+
+1. **Scenarios** (`scenarios`) — :class:`ScenarioSpec` declaratively composes
+   model size × topology × fading × drift × churn × engine chunking into one
+   named, registered benchmark setting.  A spec is data: the same spec drives
+   the per-round loop engine and the epoch-segmented scan engine over
+   identical randomness, so their outputs are comparable (and bit-identical).
+
+2. **Harness** (`harness`) — :func:`run_scenario` runs a spec under each
+   engine twice (cold + warm), measuring wall clock, compile time,
+   ``trace_count`` and rounds/sec, and verifies the two engines' final
+   parameters match bit-for-bit.
+
+3. **Reports** (`report`) — schema-versioned ``BENCH_<scenario>.json``
+   emission, plus :func:`check_regression`, the CI perf gate comparing a
+   fresh report against a checked-in baseline (fail when rounds/sec regresses
+   by more than the configured factor).
+
+CLI: ``PYTHONPATH=src python -m repro.bench.run --scenario bench_smoke``
+(see ``make bench-smoke`` and the ``bench-smoke`` CI job).
+"""
+from repro.bench.harness import EngineRun, run_scenario
+from repro.bench.report import (
+    SCHEMA_VERSION,
+    check_regression,
+    load_report,
+    make_report,
+    write_report,
+)
+from repro.bench.scenarios import (
+    ScenarioSpec,
+    get_scenario,
+    list_scenarios,
+    register,
+)
+
+__all__ = [
+    "EngineRun",
+    "SCHEMA_VERSION",
+    "ScenarioSpec",
+    "check_regression",
+    "get_scenario",
+    "list_scenarios",
+    "load_report",
+    "make_report",
+    "register",
+    "run_scenario",
+    "write_report",
+]

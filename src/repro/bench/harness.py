@@ -1,0 +1,177 @@
+"""Timing harness: one scenario, both engines, cold + warm runs.
+
+Per engine the harness runs the scenario twice on one simulator instance:
+the **cold** run pays tracing + XLA compilation, the **warm** run is
+steady-state throughput.  Reported quantities:
+
+  wall_s          warm-run wall clock for all ``spec.rounds`` rounds
+  compile_s       cold wall minus warm wall (the one-time tracing+compile
+                  cost the scan engine amortizes over the whole horizon)
+  rounds_per_sec  spec.rounds / wall_s — the headline engine throughput
+  trace_count     compiles observed across both runs (the no-retrace
+                  invariant: 1 for the loop step, ≤ 2 for the scan engine)
+
+Fairness: the per-round batch stream is pre-generated once (host numpy) and
+replayed identically to every run of every engine, and each run builds a
+fresh schedule / policy / loader from the same seeds — so both engines
+consume bit-identical data, τ randomness and relay matrices, and the harness
+can (and does) assert their final parameters match bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.bench.scenarios import ScenarioBundle, ScenarioSpec, build
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
+
+
+@dataclasses.dataclass
+class EngineRun:
+    """One engine's measurements on one scenario.
+
+    ``dispatches`` counts compiled round-engine calls only (loop: one step
+    call per round; scan: one chunk scan per ⌈len/chunk⌉ per epoch) —
+    τ-sampling calls and H2D transfers are excluded on both sides.
+    """
+
+    engine: str
+    wall_s: float
+    compile_s: float
+    rounds_per_sec: float
+    trace_count: int
+    dispatches: int
+    final_loss: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _pregenerate_batches(bundle: ScenarioBundle) -> list:
+    """Materialize the full per-round batch stream once (numpy), replayed
+    identically to every engine run."""
+    spec = bundle.spec
+    loader = bundle.make_loader()
+    return [
+        loader.round_batch(spec.local_steps, spec.local_batch)
+        for _ in range(spec.rounds)
+    ]
+
+
+def _run_once(bundle: ScenarioBundle, engine, batches: list):
+    """One full pass over the scenario; returns (wall_s, metrics, params)."""
+    spec = bundle.spec
+    schedule = bundle.make_schedule()
+    policy = bundle.make_policy()
+    params = bundle.init_fn(jax.random.key(spec.seed))
+    sim = engine.sim if isinstance(engine, EpochScanEngine) else engine
+    server_state = sim.init_server_state(params)
+    key = jax.random.key(spec.seed + 1)
+    stream = iter(batches)
+    t0 = time.perf_counter()
+    if isinstance(engine, EpochScanEngine):
+        params, server_state, metrics, _ = engine.run_schedule(
+            key,
+            params,
+            server_state,
+            schedule=schedule,
+            rounds=spec.rounds,
+            next_batch=lambda: next(stream),
+            lr=spec.lr,
+            policy=policy,
+        )
+    else:
+        params, server_state, metrics, _ = run_rounds_loop(
+            engine,
+            key,
+            params,
+            server_state,
+            schedule=schedule,
+            rounds=spec.rounds,
+            next_batch=lambda: next(stream),
+            lr=spec.lr,
+            policy=policy,
+        )
+    jax.block_until_ready(params)
+    return time.perf_counter() - t0, metrics, params
+
+
+def run_engine(bundle: ScenarioBundle, name: str, batches: list):
+    """Cold + warm pass of one engine; returns (EngineRun, final params)."""
+    spec = bundle.spec
+    sim = bundle.make_sim()
+    if name == "scan":
+        engine = EpochScanEngine(sim, chunk=spec.chunk)
+        dispatches = sum(
+            -(-seg.n_rounds // spec.chunk)
+            for seg in bundle.make_schedule().segments(spec.rounds)
+        )
+    elif name == "loop":
+        engine = sim
+        dispatches = spec.rounds
+    else:
+        raise ValueError(f"unknown engine: {name!r}")
+    cold_s, _, _ = _run_once(bundle, engine, batches)
+    warm_s, metrics, params = _run_once(bundle, engine, batches)
+    trace_count = (
+        engine.trace_count
+        if isinstance(engine, EpochScanEngine)
+        else sim.trace_count
+    )
+    run = EngineRun(
+        engine=name,
+        wall_s=warm_s,
+        compile_s=max(0.0, cold_s - warm_s),
+        rounds_per_sec=spec.rounds / warm_s,
+        trace_count=trace_count,
+        dispatches=dispatches,
+        final_loss=float(metrics["loss"][-1]),
+    )
+    return run, params
+
+
+def run_scenario(
+    spec: ScenarioSpec | str,
+    *,
+    engines=("loop", "scan"),
+    check_bitwise: bool = True,
+) -> dict:
+    """Run ``spec`` under every engine; returns
+    ``{"runs": {name: EngineRun}, "speedup": float | None,
+    "bitwise_match": bool | None}``.
+
+    ``speedup`` is scan rounds/sec over loop rounds/sec (None unless both
+    ran).  ``bitwise_match`` asserts the engines' final parameters are
+    bit-identical — a benchmark whose fast path diverges from the reference
+    is measuring the wrong thing, so a mismatch raises.
+    """
+    if isinstance(spec, str):
+        from repro.bench.scenarios import get_scenario
+
+        spec = get_scenario(spec)
+    bundle = build(spec)
+    batches = _pregenerate_batches(bundle)
+    runs: dict[str, EngineRun] = {}
+    finals = {}
+    for name in engines:
+        runs[name], finals[name] = run_engine(bundle, name, batches)
+    speedup = None
+    if "loop" in runs and "scan" in runs:
+        speedup = runs["scan"].rounds_per_sec / runs["loop"].rounds_per_sec
+    bitwise = None
+    if check_bitwise and "loop" in runs and "scan" in runs:
+        leaves_l = jax.tree.leaves(finals["loop"])
+        leaves_s = jax.tree.leaves(finals["scan"])
+        bitwise = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(leaves_l, leaves_s)
+        )
+        if not bitwise:
+            raise AssertionError(
+                f"{spec.name}: scan engine diverged bitwise from the "
+                "per-round reference"
+            )
+    return {"runs": runs, "speedup": speedup, "bitwise_match": bitwise}

@@ -1,0 +1,117 @@
+"""Schema-versioned ``BENCH_<scenario>.json`` reports + the CI perf gate.
+
+Report schema (``schema_version`` 1)::
+
+    {
+      "schema_version": 1,
+      "scenario": "<name>",
+      "description": "...",
+      "created_unix": 1234567890,
+      "jax_version": "0.4.37",
+      "backend": "cpu",
+      "spec": { ...ScenarioSpec fields... },
+      "engines": {
+        "loop": {"wall_s": ..., "compile_s": ..., "rounds_per_sec": ...,
+                 "trace_count": ..., "dispatches": ..., "final_loss": ...},
+        "scan": { ... }
+      },
+      "speedup_rounds_per_sec": 6.2,
+      "bitwise_match": true
+    }
+
+The gate (:func:`check_regression`) compares per-engine ``rounds_per_sec``
+against a checked-in baseline report and fails when throughput regresses by
+more than ``factor`` (default 2×: generous enough to absorb CI-runner noise,
+tight enough to catch a lost fusion or an accidental per-round sync).  It
+also re-asserts the qualitative invariants the baseline recorded:
+``bitwise_match`` and the scan-beats-loop speedup staying within the same
+``factor`` of the baseline's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+
+from repro.bench.harness import EngineRun
+from repro.bench.scenarios import ScenarioSpec
+
+SCHEMA_VERSION = 1
+
+
+def make_report(spec: ScenarioSpec, result: dict) -> dict:
+    """Assemble the JSON payload from a :func:`run_scenario` result."""
+    runs: dict[str, EngineRun] = result["runs"]
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "scenario": spec.name,
+        "description": spec.description,
+        "created_unix": int(time.time()),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "spec": dataclasses.asdict(spec),
+        "engines": {name: run.as_dict() for name, run in runs.items()},
+        "speedup_rounds_per_sec": result["speedup"],
+        "bitwise_match": result["bitwise_match"],
+    }
+
+
+def report_path(out_dir, scenario: str) -> pathlib.Path:
+    return pathlib.Path(out_dir) / f"BENCH_{scenario}.json"
+
+
+def write_report(report: dict, out_dir=".") -> pathlib.Path:
+    path = report_path(out_dir, report["scenario"])
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(report, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def load_report(path) -> dict:
+    with open(path) as f:
+        report = json.load(f)
+    version = report.get("schema_version")
+    if version != SCHEMA_VERSION:
+        raise ValueError(f"{path}: schema_version {version!r} != {SCHEMA_VERSION}")
+    return report
+
+
+def check_regression(report: dict, baseline: dict, *, factor: float = 2.0) -> list[str]:
+    """Compare a fresh report against a baseline; returns failure strings
+    (empty ⇒ gate passes).  Only engines present in both are compared."""
+    failures = []
+    if report.get("scenario") != baseline.get("scenario"):
+        failures.append(
+            f"scenario mismatch: report {report.get('scenario')!r} vs "
+            f"baseline {baseline.get('scenario')!r}"
+        )
+        return failures
+    for name, base in baseline.get("engines", {}).items():
+        cur = report.get("engines", {}).get(name)
+        if cur is None:
+            failures.append(f"engine {name!r} missing from report")
+            continue
+        base_rps, cur_rps = base["rounds_per_sec"], cur["rounds_per_sec"]
+        if cur_rps * factor < base_rps:
+            failures.append(
+                f"{name}: rounds/sec regressed >{factor:g}x "
+                f"({cur_rps:.1f} vs baseline {base_rps:.1f})"
+            )
+        if cur["trace_count"] > base["trace_count"]:
+            failures.append(
+                f"{name}: trace_count grew ({cur['trace_count']} vs "
+                f"baseline {base['trace_count']}) — the engine retraces"
+            )
+    if baseline.get("bitwise_match") and report.get("bitwise_match") is False:
+        failures.append("scan engine no longer bit-identical to the loop")
+    base_speedup = baseline.get("speedup_rounds_per_sec")
+    cur_speedup = report.get("speedup_rounds_per_sec")
+    if base_speedup and cur_speedup and cur_speedup * factor < base_speedup:
+        failures.append(
+            f"scan-over-loop speedup collapsed: {cur_speedup:.2f}x vs "
+            f"baseline {base_speedup:.2f}x"
+        )
+    return failures

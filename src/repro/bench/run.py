@@ -1,0 +1,118 @@
+"""Benchmark CLI: run a registered scenario, emit ``BENCH_<name>.json``,
+optionally gate against a checked-in baseline.
+
+    PYTHONPATH=src python -m repro.bench.run --list
+    PYTHONPATH=src python -m repro.bench.run --scenario bench_smoke
+    PYTHONPATH=src python -m repro.bench.run --scenario bench_smoke \\
+        --baseline benchmarks/baselines/BENCH_bench_smoke.json \\
+        --max-regression 2.0
+
+Exit status is non-zero when the regression gate fails (CI wires this into
+the ``bench-smoke`` job; see ``make bench-smoke``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.bench import harness, report as report_lib, scenarios
+
+
+def format_scenario_line(spec) -> str:
+    """One ``--list`` row per scenario (shared with ``benchmarks.run``)."""
+    return (
+        f"{spec.name:>12}  rounds={spec.rounds:<4} "
+        f"n={spec.n_clients:<3} {spec.description}"
+    )
+
+
+def format_summary(rep: dict) -> str:
+    lines = [f"scenario {rep['scenario']}: {rep['description']}"]
+    for name, run in sorted(rep["engines"].items()):
+        lines.append(
+            f"  {name:>4}: {run['rounds_per_sec']:>8.1f} rounds/s  "
+            f"wall {run['wall_s']:.3f}s  compile {run['compile_s']:.3f}s  "
+            f"traces {run['trace_count']}  dispatches {run['dispatches']}"
+        )
+    if rep.get("speedup_rounds_per_sec"):
+        lines.append(
+            f"  scan/loop speedup: {rep['speedup_rounds_per_sec']:.2f}x  "
+            f"(bitwise_match={rep['bitwise_match']})"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument(
+        "--list",
+        action="store_true",
+        help="print the registered scenarios and exit",
+    )
+    ap.add_argument(
+        "--scenario",
+        action="append",
+        default=[],
+        help="scenario name (repeatable); default: bench_smoke",
+    )
+    ap.add_argument(
+        "--engines",
+        default="loop,scan",
+        help="comma-separated engines to run (loop, scan)",
+    )
+    ap.add_argument(
+        "--out-dir",
+        default=".",
+        help="directory for BENCH_<scenario>.json reports",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="baseline BENCH_*.json to gate against",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=2.0,
+        help="fail when rounds/sec drops by more than this factor vs the "
+        "baseline (default 2.0)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for spec in scenarios.list_scenarios():
+            print(format_scenario_line(spec))
+        return 0
+
+    names = args.scenario or ["bench_smoke"]
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    status = 0
+    for name in names:
+        spec = scenarios.get_scenario(name)
+        result = harness.run_scenario(spec, engines=engines)
+        rep = report_lib.make_report(spec, result)
+        path = report_lib.write_report(rep, args.out_dir)
+        print(format_summary(rep))
+        print(f"  wrote {path}")
+        if args.baseline:
+            baseline = report_lib.load_report(args.baseline)
+            failures = report_lib.check_regression(
+                rep, baseline, factor=args.max_regression
+            )
+            if failures:
+                status = 1
+                for f in failures:
+                    print(f"  GATE FAIL: {f}", file=sys.stderr)
+            else:
+                print(
+                    f"  gate: OK (within {args.max_regression:g}x of "
+                    f"{args.baseline})"
+                )
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

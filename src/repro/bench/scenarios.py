@@ -1,0 +1,315 @@
+"""Declarative benchmark scenarios: topology × fading × drift × churn.
+
+A :class:`ScenarioSpec` is pure data — every field is a plain value, so a
+scenario can live in a registry, be printed by ``--list``, and be serialized
+into its ``BENCH_*.json`` report.  ``build()`` turns a spec into the factory
+bundle the harness consumes; each engine run gets *fresh* schedule / policy /
+loader instances so cold and warm runs see identical streams.
+
+The registered scenarios:
+
+  bench_smoke   tiny CI gate scenario (seconds on one CPU core)
+  fig5_500      the acceptance scenario: 500 rounds, n=10, ring(10, 2) with
+                bursty Markov fading + piecewise-constant p-drift at a
+                25-round coherence time (the Fig. 5 channel at paper-scale
+                horizon, bench-scale model so the engine — not the matmul —
+                is what's measured)
+  fig6_500      fig5_500 plus rotating-cohort churn over the padded client
+                dimension (the Fig. 6 setting)
+  static_500    single-epoch control: the seed paper's static channel, where
+                epoch fusion is maximal
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro import channels
+from repro.core import connectivity, topology
+from repro.core.aggregation import ServerOpt
+from repro.data.loader import FederatedLoader
+from repro.data.partition import iid_partition
+from repro.data.synthetic import gaussian_classification
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """One benchmark setting.  All fields are plain data (JSON-serializable
+    via ``dataclasses.asdict``)."""
+
+    name: str
+    description: str = ""
+    # federated setting
+    n_clients: int = 10
+    rounds: int = 100
+    local_steps: int = 2
+    local_batch: int = 8
+    strategy: str = "colrel_fused"
+    policy: str = "adaptive"  # adaptive | stale | none
+    opt_method: str = "exact"  # OPT-α column solver (exact | bisect)
+    opt_sweeps: int = 40
+    warm_sweeps: int = 12
+    lr: float = 0.1
+    seed: int = 0
+    # model / data (MLP over flat gaussian features)
+    dim: int = 64
+    width: int = 32
+    n_classes: int = 10
+    n_train: int = 1024
+    # channel composition
+    topology: str = "ring"  # ring | full
+    ring_k: int = 2
+    fading: str = "markov"  # markov | static
+    p_up_to_down: float = 0.3
+    p_down_to_up: float = 0.5
+    adj_every: int = 1
+    drift: str = "piecewise"  # piecewise | static
+    drift_hold: int = 1
+    p_every: int = 1
+    churn: str = "none"  # none | rotating
+    n_cohorts: int = 5
+    churn_hold: int = 4
+    # scan engine
+    chunk: int = 32
+
+
+def _make_mlp(dim: int, width: int, n_classes: int):
+    """Spec-sized analogue of ``benchmarks.common.make_mlp`` over flat
+    features (leaves keyed ``inputs``/``labels``)."""
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "w1": jax.random.normal(k1, (dim, width)) * dim**-0.5,
+            "b1": jnp.zeros((width,)),
+            "w2": jax.random.normal(k2, (width, n_classes)) * width**-0.5,
+            "b2": jnp.zeros((n_classes,)),
+        }
+
+    def loss(params, batch):
+        x = batch["inputs"]
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        lg = (h @ params["w2"] + params["b2"]).astype(jnp.float32)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, batch["labels"][:, None], 1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    return init, loss
+
+
+@dataclasses.dataclass
+class ScenarioBundle:
+    """Factories the harness calls per engine run."""
+
+    spec: ScenarioSpec
+    init_fn: object
+    loss_fn: object
+
+    def base_adjacency(self):
+        spec = self.spec
+        if spec.topology == "ring":
+            return topology.ring(spec.n_clients, spec.ring_k)
+        if spec.topology == "full":
+            return topology.fully_connected(spec.n_clients)
+        raise ValueError(f"unknown topology: {spec.topology!r}")
+
+    def base_p(self):
+        return connectivity.heterogeneous_profile(self.spec.n_clients).p
+
+    def make_schedule(self) -> channels.ChannelSchedule:
+        spec = self.spec
+        adj = self.base_adjacency()
+        seed = spec.seed + 7
+        link = None
+        if spec.fading == "markov":
+            link = channels.MarkovLinkProcess(
+                adj,
+                p_up_to_down=spec.p_up_to_down,
+                p_down_to_up=spec.p_down_to_up,
+                seed=seed,
+            )
+        elif spec.fading != "static":
+            raise ValueError(f"unknown fading: {spec.fading!r}")
+        p0 = self.base_p()
+        p_process = None
+        if spec.drift == "piecewise":
+            p_process = channels.PiecewiseConstantDrift(
+                p0,
+                hold=spec.drift_hold,
+                low=0.1,
+                high=0.9,
+                seed=seed + 1,
+            )
+        elif spec.drift != "static":
+            raise ValueError(f"unknown drift: {spec.drift!r}")
+        kw = dict(adj_every=spec.adj_every, p_every=spec.p_every)
+        if link is None:
+            kw["adj"] = adj
+        else:
+            kw["link_process"] = link
+        if p_process is None:
+            kw["p"] = p0
+        else:
+            kw["p_process"] = p_process
+        if spec.churn == "rotating":
+            member = channels.RotatingCohorts(
+                spec.n_clients, n_cohorts=spec.n_cohorts, hold=spec.churn_hold
+            )
+            return channels.ChurnSchedule(membership=member, **kw)
+        if spec.churn != "none":
+            raise ValueError(f"unknown churn: {spec.churn!r}")
+        if link is None and p_process is None:
+            return channels.StaticChannel(adj, p0)
+        return channels.TimeVaryingChannel(**kw)
+
+    def make_policy(self):
+        spec = self.spec
+        if spec.policy == "adaptive":
+            return channels.AdaptiveOptAlpha(
+                sweeps=spec.opt_sweeps,
+                warm_sweeps=spec.warm_sweeps,
+                method=spec.opt_method,
+            )
+        if spec.policy == "stale":
+            return channels.StaleOptAlpha(
+                sweeps=spec.opt_sweeps, method=spec.opt_method
+            )
+        if spec.policy == "none":
+            return None
+        raise ValueError(f"unknown policy: {spec.policy!r}")
+
+    def make_sim(self) -> FLSimulator:
+        spec = self.spec
+        return FLSimulator(
+            self.loss_fn,
+            n_clients=spec.n_clients,
+            strategy=spec.strategy,
+            p=self.base_p(),
+            local_steps=spec.local_steps,
+            client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+            server_opt=ServerOpt(),
+        )
+
+    def make_loader(self) -> FederatedLoader:
+        spec = self.spec
+        ds = gaussian_classification(
+            spec.n_train,
+            dim=spec.dim,
+            n_classes=spec.n_classes,
+            snr=0.5,
+            seed=spec.seed,
+        )
+        parts = iid_partition(ds, spec.n_clients, seed=spec.seed)
+        return FederatedLoader(ds, parts, seed=spec.seed)
+
+
+def build(spec: ScenarioSpec) -> ScenarioBundle:
+    init_fn, loss_fn = _make_mlp(spec.dim, spec.width, spec.n_classes)
+    return ScenarioBundle(spec, init_fn, loss_fn)
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"scenario already registered: {spec.name!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r} (known: {known})") from None
+
+
+def list_scenarios() -> list[ScenarioSpec]:
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+register(
+    ScenarioSpec(
+        name="bench_smoke",
+        description="tiny CI gate: 64 rounds, n=6, 8-round channel coherence",
+        n_clients=6,
+        rounds=64,
+        local_steps=2,
+        local_batch=8,
+        dim=32,
+        width=16,
+        n_train=256,
+        adj_every=8,
+        p_every=8,
+        drift_hold=1,
+        chunk=8,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="fig5_500",
+        description=(
+            "acceptance scenario: Fig. 5 channel (ring(10,2), Markov "
+            "fading + p-drift) at a 500-round horizon, 25-round "
+            "coherence time"
+        ),
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        adj_every=25,
+        p_every=25,
+        drift_hold=1,
+        chunk=25,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="fig6_500",
+        description="fig5_500 plus rotating-cohort churn (Fig. 6 setting)",
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        adj_every=25,
+        p_every=25,
+        drift_hold=1,
+        chunk=25,
+        churn="rotating",
+        n_cohorts=5,
+        churn_hold=25,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="static_500",
+        description="single-epoch control: static channel, maximal fusion",
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        fading="static",
+        drift="static",
+        chunk=50,
+    )
+)

@@ -25,6 +25,10 @@ subsystem is three layers, consumed in order every round:
    channel *value* ``(adj, p, active)`` changes.  :class:`StaticChannel` is
    the seed setting, :class:`TimeVaryingChannel` composes fading × drift,
    :class:`ChurnSchedule` additionally streams membership.
+   ``ChannelSchedule.segments()`` regroups the stream into maximal
+   constant-channel :class:`ChannelSegment` runs — the unit the
+   epoch-segmented scan engine (:class:`repro.fl.engine.EpochScanEngine`)
+   fuses into one ``lax.scan`` per epoch.
 
 3. **Scheduler policies** (`scheduler`) — turn a state stream into per-round
    relay matrices.  :class:`AdaptiveOptAlpha` re-solves OPT-α only on epoch
@@ -60,6 +64,7 @@ from repro.channels.link_state import MarkovLinkProcess, gilbert_elliott
 from repro.channels.mobility import RandomWaypointMobility, geometric_adjacency
 from repro.channels.schedule import (
     ChannelSchedule,
+    ChannelSegment,
     ChannelState,
     StaticChannel,
     TimeVaryingChannel,
@@ -74,6 +79,7 @@ from repro.channels.scheduler import (
 __all__ = [
     "AdaptiveOptAlpha",
     "ChannelSchedule",
+    "ChannelSegment",
     "ChannelState",
     "ChurnSchedule",
     "MarkovChurn",

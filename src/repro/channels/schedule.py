@@ -48,6 +48,44 @@ class ChannelState:
         return int(self.active.sum()) if self.active is not None else self.p.shape[0]
 
 
+@dataclasses.dataclass(frozen=True)
+class ChannelSegment:
+    """A maximal run of consecutive rounds sharing one channel value.
+
+    ``epoch_id`` increments exactly when ``(adj, p, active)`` changes, so
+    grouping consecutive states by it yields segments within which the relay
+    matrix, the uplink marginals and the membership mask are all constant —
+    the unit of work the epoch-segmented scan engine
+    (:class:`repro.fl.engine.EpochScanEngine`) fuses into one ``lax.scan``.
+    """
+
+    epoch_id: int
+    start_round: int
+    states: tuple[ChannelState, ...]
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.states)
+
+    @property
+    def state(self) -> ChannelState:
+        """The shared channel value (any round's state; they are equal up to
+        the round counter) — what a scheduler policy solves on."""
+        return self.states[0]
+
+    @property
+    def adj(self) -> np.ndarray:
+        return self.states[0].adj
+
+    @property
+    def p(self) -> np.ndarray:
+        return self.states[0].p
+
+    @property
+    def active(self) -> np.ndarray | None:
+        return self.states[0].active
+
+
 class ChannelSchedule:
     """Base class: subclasses implement ``next_round``; ``_emit`` canonicalizes
     dtypes and maintains the round counter and epoch bookkeeping."""
@@ -87,6 +125,20 @@ class ChannelSchedule:
         """Iterator over the next ``n_rounds`` channel states."""
         for _ in range(n_rounds):
             yield self.next_round()
+
+    def segments(self, n_rounds: int):
+        """Iterator over the next ``n_rounds`` rounds grouped into maximal
+        constant-channel :class:`ChannelSegment` runs (consecutive states
+        with the same ``epoch_id``).  Concatenating ``seg.states`` over the
+        yielded segments reproduces ``rounds(n_rounds)`` exactly."""
+        buf: list[ChannelState] = []
+        for state in self.rounds(n_rounds):
+            if buf and state.epoch_id != buf[0].epoch_id:
+                yield ChannelSegment(buf[0].epoch_id, buf[0].round, tuple(buf))
+                buf = []
+            buf.append(state)
+        if buf:
+            yield ChannelSegment(buf[0].epoch_id, buf[0].round, tuple(buf))
 
 
 class StaticChannel(ChannelSchedule):

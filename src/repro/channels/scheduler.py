@@ -64,6 +64,7 @@ class AdaptiveOptAlpha:
         tol: float = 1e-10,
         cache_size: int = 64,
         warm_start: bool = True,
+        method: str = "bisect",
     ):
         if cache_size < 1:
             raise ValueError("cache_size must be >= 1")
@@ -72,6 +73,7 @@ class AdaptiveOptAlpha:
         self.tol = tol
         self.cache_size = cache_size
         self.warm_start = warm_start
+        self.method = method
         self.stats = SchedulerStats()
         self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self._last_A: np.ndarray | None = None
@@ -104,10 +106,11 @@ class AdaptiveOptAlpha:
         if masked:
             res = opt_alpha.optimize_masked(
                 state.p, state.adj, state.active,
-                sweeps=sweeps, tol=self.tol, A0=A0)
+                sweeps=sweeps, tol=self.tol, A0=A0, method=self.method)
         else:
             res = opt_alpha.optimize(
-                state.p, state.adj, sweeps=sweeps, tol=self.tol, A0=A0)
+                state.p, state.adj, sweeps=sweeps, tol=self.tol, A0=A0,
+                method=self.method)
         self.stats.solves += 1
         self.stats.sweeps_total += res.sweeps
         # the cache and the warm-start seed alias the returned array; freeze
@@ -124,9 +127,11 @@ class StaleOptAlpha:
     """Solve OPT-α on the first channel only; every later round reuses that A
     projected onto the live topology (the channel-oblivious baseline)."""
 
-    def __init__(self, *, sweeps: int = 40, tol: float = 1e-10):
+    def __init__(self, *, sweeps: int = 40, tol: float = 1e-10,
+                 method: str = "bisect"):
         self.sweeps = sweeps
         self.tol = tol
+        self.method = method
         self._A: np.ndarray | None = None
 
     def relay_matrix(self, state: ChannelState) -> np.ndarray:
@@ -134,8 +139,9 @@ class StaleOptAlpha:
             if state.active is not None and not state.active.all():
                 self._A = opt_alpha.optimize_masked(
                     state.p, state.adj, state.active,
-                    sweeps=self.sweeps, tol=self.tol).A
+                    sweeps=self.sweeps, tol=self.tol, method=self.method).A
             else:
                 self._A = opt_alpha.optimize(
-                    state.p, state.adj, sweeps=self.sweeps, tol=self.tol).A
+                    state.p, state.adj, sweeps=self.sweeps, tol=self.tol,
+                    method=self.method).A
         return project_to_support(self._A, state.adj, state.active)

@@ -4,7 +4,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 
-from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 
 ARCHS = {
     "qwen3-14b": "qwen3_14b",

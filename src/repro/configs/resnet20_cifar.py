@@ -1,6 +1,5 @@
 """ResNet-20 / CIFAR-10 — the paper's own §V model (GN instead of BN,
 DESIGN.md §8)."""
-import dataclasses
 from repro.configs.base import ModelConfig
 
 CONFIG = ModelConfig(

@@ -169,16 +169,67 @@ def _solve_column_waterfill(
     return alpha, iters
 
 
+def _solve_column_exact(
+    p_sup: np.ndarray,
+    beta: np.ndarray,
+) -> tuple[np.ndarray, int]:
+    """The same column subproblem solved exactly: g(λ) = Σ_j p_j α_j(λ) is
+    piecewise linear and nondecreasing with breakpoints λ_j = 2(1−p_j)β_j
+    (where α_j activates), so instead of bisecting we sort the breakpoints
+    and solve g(λ*) = 1 in closed form on the one segment that brackets it.
+
+    O(s log s) per column against O(s · iters) for the bisection — the
+    scheduler hot path under a time-varying channel (one OPT-α re-solve per
+    channel epoch) is ~10× faster end to end.  Agrees with the bisection to
+    its tolerance (tested), but is not bit-identical to it; the paper-
+    faithful bisection stays the default.
+    """
+    one_minus = 1.0 - p_sup
+    slope = p_sup / (2.0 * one_minus)     # d(p_j α_j)/dλ once j is active
+    lam_break = 2.0 * one_minus * beta    # λ at which α_j leaves zero
+    order = np.argsort(lam_break)
+    lam_sorted = lam_break[order]
+    csum_slope = np.cumsum(slope[order])
+    csum_pb = np.cumsum((p_sup * beta)[order])
+    lam = None
+    for k in range(order.size):
+        # active set = the k+1 smallest breakpoints; on this segment
+        # g(λ) = λ·Σ_act slope − Σ_act p_j β_j, solve g = 1
+        cand = (1.0 + csum_pb[k]) / csum_slope[k]
+        hi = lam_sorted[k + 1] if k + 1 < order.size else np.inf
+        if lam_sorted[k] <= cand <= hi:
+            lam = cand
+            break
+    if lam is None:  # numerical ties: the last segment always extends to ∞
+        lam = (1.0 + csum_pb[-1]) / csum_slope[-1]
+    alpha = np.maximum(0.0, -beta + lam / (2.0 * one_minus))
+    s = float(p_sup @ alpha)
+    if s > 0:
+        alpha = alpha / s
+    return alpha, 0
+
+
+_COLUMN_SOLVERS = {
+    "bisect": _solve_column_waterfill,
+    "exact": _solve_column_exact,
+}
+
+
 def solve_column(
     p: np.ndarray,
     closed_col: np.ndarray,
     beta_full: np.ndarray,
+    *,
+    method: str = "bisect",
 ) -> tuple[np.ndarray, bool, int]:
     """Paper eq. (9) for one origin column i.
 
     p          : (n,) connectivity probabilities
     closed_col : (n,) bool, j ∈ N_i ∪ {i}
     beta_full  : (n,) β_ji = Σ_{l ∈ L_ji} α_jl  (row mass excluding column i)
+    method     : ``bisect`` (paper-faithful λ search) or ``exact`` (the
+                 closed-form piecewise-linear solve; ~10× faster, identical
+                 up to the bisection tolerance)
 
     Returns (column, feasible, bisection_iters).
     """
@@ -192,7 +243,7 @@ def solve_column(
     sup = np.nonzero(closed_col & (p > 0.0))[0]
     if sup.size == 0:
         return col, False, 0  # nobody in N_i ∪ {i} can ever reach the PS
-    alpha, iters = _solve_column_waterfill(p[sup], beta_full[sup])
+    alpha, iters = _COLUMN_SOLVERS[method](p[sup], beta_full[sup])
     col[sup] = alpha
     return col, True, iters
 
@@ -204,11 +255,13 @@ def optimize(
     sweeps: int = 50,
     tol: float = 1e-10,
     A0: np.ndarray | None = None,
+    method: str = "bisect",
 ) -> OptAlphaResult:
     """Run OPT-α Gauss–Seidel sweeps until S(p, A) stalls or `sweeps` is hit.
 
     One sweep = n column updates (paper Alg. 3 runs L single-column
     iterations; `sweeps` here counts full passes, i.e. L = sweeps·n).
+    ``method`` selects the column solver (see :func:`solve_column`).
     """
     p = np.asarray(p, dtype=np.float64)
     adj = np.asarray(adj, dtype=bool)
@@ -222,7 +275,7 @@ def optimize(
         for i in range(n):
             row_mass = A.sum(axis=1)
             beta = row_mass - A[:, i]  # β_ji = Σ_{l≠i} α_jl  (support-collapsed)
-            col, ok, iters = solve_column(p, m[:, i], beta)
+            col, ok, iters = solve_column(p, m[:, i], beta, method=method)
             A[:, i] = col
             feasible[i] = ok
             bis_total += iters
@@ -246,6 +299,7 @@ def optimize_masked(
     sweeps: int = 50,
     tol: float = 1e-10,
     A0: np.ndarray | None = None,
+    method: str = "bisect",
 ) -> OptAlphaResult:
     """OPT-α on the *active block* of a padded client dimension.
 
@@ -285,7 +339,7 @@ def optimize_masked(
         for i in act_idx:
             row_mass = A.sum(axis=1)
             beta = row_mass - A[:, i]
-            col, ok, iters = solve_column(p_m, m[:, i], beta)
+            col, ok, iters = solve_column(p_m, m[:, i], beta, method=method)
             A[:, i] = col
             feasible[i] = ok
             bis_total += iters

@@ -1,1 +1,4 @@
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
 from repro.fl.simulator import FLSimulator
+
+__all__ = ["EpochScanEngine", "FLSimulator", "run_rounds_loop"]

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.core import relay as relay_lib
 from repro.core.aggregation import ServerOpt, active_weight
 from repro.optim.sgd import ClientOpt
-from repro.utils import tree_axpy, tree_scale, tree_sub
+from repro.utils import tree_scale, tree_sub
 
 
 def build_round_step(
@@ -139,3 +139,45 @@ def build_round_step(
         return new_params, new_state, mean_loss
 
     return round
+
+
+def build_scan_round_step(
+    loss_fn: Callable[[Any, dict], jax.Array],
+    *,
+    n_clients: int,
+    local_steps: int,
+    A=None,
+    relay_mode: str = "faithful",
+    client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
+    server_opt: ServerOpt = ServerOpt(),
+):
+    """Epoch-fused variant of :func:`build_round_step`: returns
+    ``scan_rounds(params, server_state, batches, taus, lr, A=None,
+    active=None) -> (params', state', losses)`` running R rounds in one
+    ``lax.scan`` — one dispatch per channel epoch instead of per round.
+
+    ``batches`` leaves are stacked (R, n_clients, local_steps, b, ...) and
+    ``taus`` is (R, n_clients); A and the churn mask are loop-invariant
+    traced inputs (constant within an epoch, by definition of an epoch).
+    The scan body *is* the single-round step, so R sequential calls of the
+    per-round function produce bit-identical results.
+    """
+    round = build_round_step(
+        loss_fn, n_clients=n_clients, local_steps=local_steps, A=A,
+        relay_mode=relay_mode, client_opt=client_opt, server_opt=server_opt,
+    )
+
+    def scan_rounds(params, server_state, batches, taus, lr, A=None,
+                    active=None):
+        def body(carry, xs):
+            p, s = carry
+            batch, tau = xs
+            p, s, loss = round(p, s, batch, tau, lr, A=A, active=active)
+            return (p, s), loss
+
+        (params, server_state), losses = jax.lax.scan(
+            body, (params, server_state), (batches, taus)
+        )
+        return params, server_state, losses
+
+    return scan_rounds

@@ -1,0 +1,257 @@
+"""Epoch-segmented ``lax.scan`` round engine.
+
+``FLSimulator.run_round`` dispatches one compiled step per round, so a
+1000-round sweep pays ~1000 host→device round-trips even though the step
+itself never retraces (A, p, τ, active are traced inputs).  Within a channel
+epoch the tuple ``(A, p, active)`` is *constant* — only τ and the data
+change — so whole epochs can be fused into a single ``jax.lax.scan`` over
+stacked per-round streams:
+
+    carry = (server params, server opt state)
+    xs    = (batch_r, τ_r, valid_r)          # stacked over rounds
+    A, lr, active                            # loop-invariant traced inputs
+
+The scan body is the simulator's own ``_round_math``, so the fused path is
+bit-identical to the per-round reference by construction (and by test:
+``tests/test_scan_engine.py``).
+
+Compile discipline
+------------------
+Epoch lengths vary, and a scan's length is static — scanning each epoch at
+its exact length would recompile per distinct length.  The engine therefore
+runs fixed-size chunks: an epoch of L rounds becomes ``L // chunk`` scans of
+``chunk`` rounds plus a final padded scan whose dead rounds are masked out of
+the carry (``jnp.where`` on a per-round valid flag selects the old carry
+bit-exactly, so padding never perturbs real rounds).  One compile for the
+chunk scan — ``trace_count`` stays at 1 across epochs of a fixed client dim
+(2 when both the ``active=None`` and the masked variant are used).
+
+Epoch orchestration lives on the host: ``run_schedule`` walks
+``ChannelSchedule.segments()``, re-solves OPT-α once per segment boundary
+(the adaptive policy), materializes the segment's τ/batch streams with
+exactly the loop driver's RNG order, and issues one ``run_segment`` per
+epoch.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.simulator import FLSimulator
+
+
+def _stack_rounds(batches: list) -> Any:
+    """Stack a list of per-round batch pytrees into one (R, ...) pytree:
+    host-side ``np.stack`` per leaf, then a single device transfer each —
+    one H2D per segment instead of one per round."""
+    return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+
+
+def _pad_leading(tree: Any, pad: int) -> Any:
+    """Append ``pad`` zero rounds along the leading axis of every leaf."""
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
+        ),
+        tree,
+    )
+
+
+class EpochScanEngine:
+    """Fused multi-round execution for an :class:`FLSimulator`.
+
+    The engine never re-implements round math: its scan body calls
+    ``sim._round_math``, and a segment's remainder rounds run as one
+    zero-padded, valid-masked chunk — same compiled function, no per-length
+    retrace.
+
+    ``trace_count`` counts the engine's compiles (chunk-scan traces plus any
+    per-round traces of the wrapped simulator) — the scan-path analogue of
+    ``FLSimulator.trace_count``.
+    """
+
+    def __init__(self, sim: FLSimulator, *, chunk: int = 32):
+        """``chunk`` is the scan length per compiled call and should track
+        the channel's coherence time: a padded chunk computes ``chunk``
+        rounds regardless of how many are real, so ``chunk`` far above the
+        typical epoch length trades dead compute for nothing (e.g. 2-round
+        epochs under ``chunk=32`` cost 16× the math of the loop path)."""
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.sim = sim
+        self.chunk = int(chunk)
+        self._scan_traces = 0
+        self._chunk_fn = jax.jit(self._chunk_impl)
+        self._taus_fn = jax.jit(self._taus_impl)
+
+    @property
+    def trace_count(self) -> int:
+        return self._scan_traces + self.sim.trace_count
+
+    # -- one compiled call: scan `chunk` rounds under a fixed channel -------
+    def _chunk_impl(self, params, server_state, batches, taus, valid, A, lr,
+                    active):
+        self._scan_traces += 1  # python-side: runs only when jit retraces
+
+        def body(carry, xs):
+            p0, s0 = carry
+            batch, tau, v = xs
+            p1, s1, metrics = self.sim._round_math(
+                p0, s0, batch, tau, A, lr, active
+            )
+            # padded rounds: keep the old carry bit-exactly (v is a scalar
+            # bool; where(True, new, old) passes `new` through unchanged)
+            p1 = jax.tree.map(lambda a, b: jnp.where(v, a, b), p1, p0)
+            s1 = jax.tree.map(lambda a, b: jnp.where(v, a, b), s1, s0)
+            return (p1, s1), metrics
+
+        (params, server_state), metrics = jax.lax.scan(
+            body, (params, server_state), (batches, taus, valid)
+        )
+        return params, server_state, metrics
+
+    # -- one compiled call: a chunk's τ stream from the sequential key chain
+    def _taus_impl(self, key, p, valid):
+        def body(k, v):
+            k2, sub = jax.random.split(k)
+            tau = jax.random.bernoulli(sub, p).astype(jnp.float32)
+            if self.sim.strategy == "no_dropout":
+                tau = jnp.ones_like(tau)
+            # padded rounds must not advance the key chain — the final key
+            # has to equal the loop driver's after exactly R splits
+            k = jax.tree.map(lambda a, b: jnp.where(v, a, b), k2, k)
+            return k, tau
+        return jax.lax.scan(body, key, valid)
+
+    def sample_taus(self, key, p, n_rounds: int):
+        """A segment's τ stream, drawn in chunk-sized compiled calls but
+        bit-identical to ``n_rounds`` sequential ``split`` + ``sample_tau``
+        rounds (tested).  Returns ``(advanced_key, (n_rounds, n) taus)``."""
+        p = jnp.asarray(p, jnp.float32)
+        C = self.chunk
+        parts = []
+        for start in range(0, n_rounds, C):
+            real = min(C, n_rounds - start)
+            valid = jnp.arange(C) < real
+            key, taus = self._taus_fn(key, p, valid)
+            parts.append(taus[:real] if real < C else taus)
+        return key, (parts[0] if len(parts) == 1 else jnp.concatenate(parts))
+
+    def run_segment(self, params, server_state, batches, taus, lr, *,
+                    A=None, active=None):
+        """Run one channel epoch: ``R`` rounds under a fixed (A, active).
+
+        ``batches``: pytree with leaves (R, n, T, b, ...) — the epoch's data
+        stream; ``taus``: (R, n) float32 — the epoch's uplink masks (drawn
+        host-side, e.g. via ``sim.sample_tau``).  Dispatches
+        ``ceil(R / chunk)`` compiled calls, the last one zero-padded and
+        masked.  Returns ``(params, server_state, metrics)`` with every
+        metric stacked over the R real rounds (padding trimmed).
+        """
+        A_seg = self.sim.A if A is None else jnp.asarray(A, jnp.float32)
+        if A_seg is None and self.sim.strategy in ("colrel", "colrel_fused"):
+            raise ValueError("colrel strategies need a relay matrix A")
+        active_seg = (None if active is None
+                      else jnp.asarray(active, jnp.float32))
+        taus = jnp.asarray(taus, jnp.float32)
+        R, C = int(taus.shape[0]), self.chunk
+        if R == 0:
+            raise ValueError("empty segment")
+        parts = []
+        for start in range(0, R, C):
+            stop = min(start + C, R)
+            pad = C - (stop - start)
+            bs = _pad_leading(
+                jax.tree.map(lambda x: x[start:stop], batches), pad
+            )
+            ts = _pad_leading(taus[start:stop], pad)
+            valid = jnp.arange(C) < (stop - start)
+            params, server_state, metrics = self._chunk_fn(
+                params, server_state, bs, ts, valid, A_seg, lr, active_seg
+            )
+            if pad:
+                metrics = jax.tree.map(lambda m: m[: stop - start], metrics)
+            parts.append(metrics)
+        metrics = (parts[0] if len(parts) == 1
+                   else jax.tree.map(
+                       lambda *ms: jnp.concatenate(ms), *parts))
+        return params, server_state, metrics
+
+    def run_schedule(self, key, params, server_state, *, schedule, rounds,
+                     next_batch: Callable[[], Any], lr, policy=None,
+                     on_segment: Callable | None = None):
+        """Drive a :class:`ChannelSchedule` for ``rounds`` rounds, one
+        ``run_segment`` per channel epoch.
+
+        Mirrors the per-round loop driver exactly: the key chain advances
+        once per round in round order (``sample_taus``), ``next_batch()`` is
+        called once per round in round order, and ``policy.relay_matrix``
+        is evaluated once per segment — the same value the loop's per-round
+        calls get from the policy's cache.  The trajectory is therefore
+        bit-identical to calling ``run_round`` round by round.
+
+        ``next_batch`` returns one round's stacked batch pytree
+        (n, T, b, ...).  ``on_segment(segment, params, metrics)`` is an
+        optional host callback per epoch (evaluation hooks).  Returns
+        ``(params, server_state, metrics, key)`` with metrics stacked over
+        all rounds.
+        """
+        all_metrics = []
+        for seg in schedule.segments(rounds):
+            A = policy.relay_matrix(seg.state) if policy is not None else None
+            # materialize the segment chunk-by-chunk: the scan consumes at
+            # most `chunk` rounds per compiled call, so never hold more than
+            # one chunk of batches in memory (a single-epoch 500-round
+            # schedule must not stack 500 rounds of data at once)
+            seg_metrics = []
+            for start in range(0, seg.n_rounds, self.chunk):
+                window = min(self.chunk, seg.n_rounds - start)
+                key, taus = self.sample_taus(key, seg.p, window)
+                batches = [next_batch() for _ in range(window)]
+                params, server_state, metrics = self.run_segment(
+                    params, server_state, _stack_rounds(batches), taus, lr,
+                    A=A, active=seg.active,
+                )
+                seg_metrics.append(metrics)
+            metrics = (seg_metrics[0] if len(seg_metrics) == 1
+                       else jax.tree.map(
+                           lambda *ms: jnp.concatenate(ms), *seg_metrics))
+            all_metrics.append(metrics)
+            if on_segment is not None:
+                on_segment(seg, params, metrics)
+        metrics = (all_metrics[0] if len(all_metrics) == 1
+                   else jax.tree.map(
+                       lambda *ms: jnp.concatenate(ms), *all_metrics))
+        return params, server_state, metrics, key
+
+
+def run_rounds_loop(sim: FLSimulator, key, params, server_state, *, schedule,
+                    rounds, next_batch: Callable[[], Any], lr, policy=None,
+                    on_round: Callable | None = None):
+    """The per-round reference driver: the exact loop the figure benchmarks
+    run — one dispatch per round and, like every existing driver, a host
+    read of the round's loss (``float(...)``, a device sync per round: the
+    dispatch-bound regime the scan engine exists to remove).  Factored out
+    so loop-vs-scan comparisons share one definition.
+    Returns ``(params, server_state, per_round_metrics, key)``."""
+    all_metrics = []
+    losses = []
+    for state in schedule.rounds(rounds):
+        A = policy.relay_matrix(state) if policy is not None else None
+        key, sub = jax.random.split(key)
+        batch = jax.tree.map(jnp.asarray, next_batch())
+        params, server_state, m = sim.run_round(
+            sub, params, server_state, batch, lr,
+            A=A, p=state.p, active=state.active,
+        )
+        losses.append(float(m["loss"]))
+        all_metrics.append(m)
+        if on_round is not None:
+            on_round(state.round, params)
+    metrics = jax.tree.map(lambda *ms: jnp.stack(ms), *all_metrics)
+    return params, server_state, metrics, key

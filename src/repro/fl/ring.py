@@ -14,7 +14,6 @@ equal to the einsum relay on a real mesh.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

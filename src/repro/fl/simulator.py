@@ -9,14 +9,13 @@ the examples.  The whole round is one jitted function.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, relay as relay_lib
+from repro.core import aggregation
 from repro.core.aggregation import ServerOpt
 from repro.optim.sgd import ClientOpt
 from repro.utils import tree_sub
@@ -46,6 +45,11 @@ class FLSimulator:
     1/n_active.  The mask is traced, so clients may join/leave every round
     while ``trace_count`` stays at 1.  ``active=None`` (default) is the
     full-membership path, bit-identical to the fixed-n formulation.
+
+    ``run_round`` is the per-round reference path (one dispatch per round).
+    For long horizons, :class:`repro.fl.engine.EpochScanEngine` fuses whole
+    channel epochs into ``lax.scan`` calls over the same ``_round_math``,
+    bit-identical to calling ``run_round`` round by round.
     """
 
     def __init__(
@@ -89,6 +93,13 @@ class FLSimulator:
 
     def _round_impl(self, params, server_state, batch, tau, A, lr, active):
         self.trace_count += 1  # python-side: runs only when jit retraces
+        return self._round_math(params, server_state, batch, tau, A, lr, active)
+
+    def _round_math(self, params, server_state, batch, tau, A, lr, active):
+        """The round as a pure function — traced both by the per-round jit
+        (``run_round``) and by the epoch-segmented scan engine
+        (``repro.fl.engine``), so the two paths share one definition and
+        stay bit-identical by construction."""
         deltas, losses = jax.vmap(
             self._client_update, in_axes=(None, 0, None)
         )(params, batch, lr)
@@ -119,15 +130,22 @@ class FLSimulator:
         ``active`` is the churn mask over the padded client dimension (see
         class docstring) — also by value, so membership changes don't retrace.
         """
-        p_round = self.p if p is None else jnp.asarray(p, jnp.float32)
-        tau = jax.random.bernoulli(key, p_round).astype(jnp.float32)
-        if self.strategy == "no_dropout":
-            tau = jnp.ones_like(tau)
+        tau = self.sample_tau(key, p)
         A_round = self.A if A is None else jnp.asarray(A, jnp.float32)
         active_round = (None if active is None
                         else jnp.asarray(active, jnp.float32))
         return self._round(params, server_state, batch, tau, A_round, lr,
                            active_round)
+
+    def sample_tau(self, key, p=None):
+        """One round's uplink mask, exactly as ``run_round`` draws it.  The
+        epoch-segmented scan engine calls this per round to materialize a
+        segment's τ stream, so loop and scan consume identical randomness."""
+        p_round = self.p if p is None else jnp.asarray(p, jnp.float32)
+        tau = jax.random.bernoulli(key, p_round).astype(jnp.float32)
+        if self.strategy == "no_dropout":
+            tau = jnp.ones_like(tau)
+        return tau
 
     def init_server_state(self, params):
         return self.server_opt.init(params)

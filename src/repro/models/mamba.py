@@ -11,7 +11,6 @@ SRAM — re-derived here for VMEM.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

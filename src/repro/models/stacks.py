@@ -17,7 +17,6 @@ is never materialized.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,155 @@
+"""Benchmark subsystem: registry, harness, JSON schema, regression gate."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.bench import harness, report as report_lib, scenarios
+
+TINY = scenarios.ScenarioSpec(
+    name="tiny_test",
+    description="harness unit-test scenario",
+    n_clients=4,
+    rounds=8,
+    local_steps=1,
+    local_batch=4,
+    dim=8,
+    width=4,
+    n_train=64,
+    adj_every=4,
+    p_every=4,
+    drift_hold=1,
+    chunk=4,
+)
+
+
+# -------------------------------------------------------------- registry
+
+
+def test_registry_contains_the_shipped_scenarios():
+    names = [s.name for s in scenarios.list_scenarios()]
+    assert "bench_smoke" in names
+    assert "fig5_500" in names
+    assert "fig6_500" in names
+    for name in names:
+        assert scenarios.get_scenario(name).name == name
+
+
+def test_registry_rejects_unknown_and_duplicate():
+    with pytest.raises(KeyError, match="unknown scenario"):
+        scenarios.get_scenario("no_such_scenario")
+    spec = scenarios.get_scenario("bench_smoke")
+    with pytest.raises(ValueError, match="already registered"):
+        scenarios.register(spec)
+
+
+def test_acceptance_scenario_is_fig5_at_paper_scale():
+    spec = scenarios.get_scenario("fig5_500")
+    assert spec.rounds == 500
+    assert spec.n_clients == 10
+    assert spec.topology == "ring" and spec.fading == "markov"
+    assert spec.policy == "adaptive"
+
+
+# ---------------------------------------------------------------- harness
+
+
+def test_harness_runs_both_engines_bitwise_identical():
+    result = harness.run_scenario(TINY)
+    runs = result["runs"]
+    assert set(runs) == {"loop", "scan"}
+    assert result["bitwise_match"] is True
+    assert result["speedup"] > 0
+    for run in runs.values():
+        assert run.wall_s > 0
+        assert run.rounds_per_sec > 0
+        assert run.final_loss == runs["loop"].final_loss  # same trajectory
+    assert runs["loop"].trace_count == 1
+    assert runs["scan"].trace_count <= 2
+    assert runs["scan"].dispatches < runs["loop"].dispatches
+
+
+# ---------------------------------------------------------- report + gate
+
+
+def _engine_run(rps):
+    return harness.EngineRun(
+        engine="x",
+        wall_s=TINY.rounds / rps,
+        compile_s=0.5,
+        rounds_per_sec=rps,
+        trace_count=1,
+        dispatches=8,
+        final_loss=1.0,
+    )
+
+
+def _fake_result():
+    return {
+        "runs": {"loop": _engine_run(100.0), "scan": _engine_run(500.0)},
+        "speedup": 5.0,
+        "bitwise_match": True,
+    }
+
+
+def test_report_schema_and_roundtrip(tmp_path):
+    rep = report_lib.make_report(TINY, _fake_result())
+    assert rep["schema_version"] == report_lib.SCHEMA_VERSION
+    assert rep["scenario"] == "tiny_test"
+    assert rep["spec"] == dataclasses.asdict(TINY)
+    assert set(rep["engines"]) == {"loop", "scan"}
+    path = report_lib.write_report(rep, tmp_path)
+    assert path.name == "BENCH_tiny_test.json"
+    assert report_lib.load_report(path) == rep
+
+
+def test_load_report_rejects_wrong_schema(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    path.write_text(json.dumps({"schema_version": 999, "scenario": "x"}))
+    with pytest.raises(ValueError, match="schema_version"):
+        report_lib.load_report(path)
+
+
+def test_gate_passes_against_itself_and_catches_regressions():
+    base = report_lib.make_report(TINY, _fake_result())
+    assert report_lib.check_regression(base, base) == []
+
+    # >2x rounds/sec regression on one engine
+    slow = json.loads(json.dumps(base))
+    slow["engines"]["scan"]["rounds_per_sec"] /= 3.0
+    fails = report_lib.check_regression(slow, base, factor=2.0)
+    assert any("scan" in f and "regressed" in f for f in fails)
+    # within 2x: no failure
+    ok = json.loads(json.dumps(base))
+    ok["engines"]["scan"]["rounds_per_sec"] /= 1.5
+    assert report_lib.check_regression(ok, base, factor=2.0) == []
+
+    # retracing engine
+    traced = json.loads(json.dumps(base))
+    traced["engines"]["scan"]["trace_count"] = 7
+    assert any("trace_count" in f for f in report_lib.check_regression(traced, base))
+
+    # lost bit-identity
+    diverged = json.loads(json.dumps(base))
+    diverged["bitwise_match"] = False
+    assert any(
+        "bit-identical" in f for f in report_lib.check_regression(diverged, base)
+    )
+
+    # collapsed speedup
+    flat = json.loads(json.dumps(base))
+    flat["speedup_rounds_per_sec"] = 1.0
+    assert any("speedup" in f for f in report_lib.check_regression(flat, base))
+
+    # mismatched scenario
+    other = json.loads(json.dumps(base))
+    other["scenario"] = "something_else"
+    assert any("mismatch" in f for f in report_lib.check_regression(other, base))
+
+
+def test_cli_list_and_tiny_run(tmp_path, capsys):
+    from repro.bench import run as run_cli
+
+    assert run_cli.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "bench_smoke" in out and "fig5_500" in out

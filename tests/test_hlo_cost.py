@@ -1,7 +1,6 @@
 """The loop-aware HLO cost model (roofline input) on known-flops programs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.launch import hlo_cost
 

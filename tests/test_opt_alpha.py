@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 
 from repro.core import connectivity, opt_alpha, relay, topology
 
@@ -97,3 +96,40 @@ def test_coverage_diagnostic():
     solo = p  # without relaying, coverage is p_i itself
     assert (cov >= solo - 1e-12).all()
     assert (cov > solo).any()
+
+
+def test_exact_column_solver_matches_bisection():
+    """The closed-form piecewise-linear λ solve agrees with the paper's
+    bisection to its tolerance, on random channels and random row masses."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = int(rng.integers(3, 12))
+        p = rng.uniform(0.05, 0.95, n)
+        adj = topology.ring(n, int(rng.integers(1, max(2, n // 2))))
+        rb = opt_alpha.optimize(p, adj, sweeps=25, method="bisect")
+        rx = opt_alpha.optimize(p, adj, sweeps=25, method="exact")
+        assert np.max(np.abs(rb.A - rx.A)) < 1e-8
+        assert np.abs(opt_alpha.unbiasedness_residual(p, rx.A)).max() < 1e-9
+        assert (rx.A >= -1e-12).all()
+        assert relay.neighbor_support(rx.A, adj)
+
+
+def test_exact_solver_masked_matches_bisection():
+    rng = np.random.default_rng(1)
+    n = 8
+    p = rng.uniform(0.1, 0.9, n)
+    adj = topology.ring(n, 2)
+    active = np.array([1, 1, 0, 1, 1, 0, 1, 1], dtype=bool)
+    rb = opt_alpha.optimize_masked(p, adj, active, sweeps=25, method="bisect")
+    rx = opt_alpha.optimize_masked(p, adj, active, sweeps=25, method="exact")
+    assert np.max(np.abs(rb.A - rx.A)) < 1e-8
+    assert np.all(rx.A[:, ~active] == 0.0)
+    assert np.all(rx.A[~active, :] == 0.0)
+
+
+def test_exact_solver_reaches_the_same_optimum():
+    p, adj = _setting()
+    rb = opt_alpha.optimize(p, adj, sweeps=60, method="bisect")
+    rx = opt_alpha.optimize(p, adj, sweeps=60, method="exact")
+    assert np.isclose(opt_alpha.variance_proxy(p, rb.A),
+                      opt_alpha.variance_proxy(p, rx.A), rtol=1e-8)

@@ -1,0 +1,262 @@
+"""Epoch-segmented scan engine (ISSUE 3): the two load-bearing invariants.
+
+  * the scan path is **bit-identical** to the per-round reference path —
+    same params, same server state, same per-round metrics, same final key —
+    across a multi-epoch schedule with churn, fading and p-drift;
+  * compile discipline: the engine stays within 2 compiles across epochs of
+    a fixed client dimension (fixed-size chunk scans + masked padding, never
+    a per-epoch-length retrace).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.core import opt_alpha, topology
+from repro.core.aggregation import ServerOpt
+from repro.fl.distributed import build_round_step, build_scan_round_step
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.fl.simulator import FLSimulator
+
+
+def _quad_setting(n=6, dim=4, T=2, b=4, seed=0):
+    def loss_fn(params, batch):
+        diff = params["x"][None, :] - batch["c"]
+        return 0.5 * jnp.mean(jnp.sum(diff ** 2, axis=-1))
+
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        return {"c": rng.standard_normal((n, T, b, dim)).astype(np.float32)}
+
+    params = {"x": jnp.ones((dim,))}
+    return loss_fn, next_batch, params
+
+
+def _churn_drift_schedule(n=6, seed=0):
+    """Multi-epoch: Markov fading + piecewise p-drift + rotating churn, with
+    misaligned periods so segment lengths vary."""
+    link = channels.MarkovLinkProcess(
+        topology.ring(n, 2), p_up_to_down=0.4, p_down_to_up=0.6, seed=seed)
+    drift = channels.PiecewiseConstantDrift(
+        np.linspace(0.2, 0.9, n), hold=1, low=0.1, high=0.9, seed=seed + 1)
+    member = channels.RotatingCohorts(n, n_cohorts=3, hold=5)
+    return channels.ChurnSchedule(
+        membership=member, link_process=link, p_process=drift,
+        adj_every=3, p_every=4)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ------------------------------------------------------------- segments()
+
+
+def test_segments_partition_the_round_stream():
+    rounds = 23
+    states = list(_churn_drift_schedule().rounds(rounds))
+    segs = list(_churn_drift_schedule().segments(rounds))
+    # same stream, regrouped
+    flat = [s for seg in segs for s in seg.states]
+    assert len(flat) == rounds
+    for got, want in zip(flat, states):
+        assert got.round == want.round
+        assert got.epoch_id == want.epoch_id
+        assert got.key() == want.key()
+    assert len(segs) > 3  # genuinely multi-epoch
+    # within a segment the channel value is constant...
+    for seg in segs:
+        assert seg.n_rounds == len(seg.states)
+        for s in seg.states:
+            assert s.key() == seg.state.key()
+            assert s.epoch_id == seg.epoch_id
+    # ...and consecutive segments differ (epochs are maximal runs)
+    for a, b in zip(segs, segs[1:]):
+        assert a.state.key() != b.state.key()
+        assert b.start_round == a.start_round + a.n_rounds
+
+
+def test_segment_value_properties():
+    seg = next(_churn_drift_schedule().segments(5))
+    assert np.array_equal(seg.adj, seg.state.adj)
+    assert np.array_equal(seg.p, seg.state.p)
+    assert np.array_equal(seg.active, seg.state.active)
+
+
+# ------------------------------------------------- τ-stream bit-equivalence
+
+
+def test_sample_taus_matches_sequential_sampling():
+    loss_fn, _, _ = _quad_setting()
+    sim = FLSimulator(loss_fn, n_clients=6, strategy="fedavg_blind")
+    engine = EpochScanEngine(sim, chunk=4)
+    p = np.linspace(0.2, 0.9, 6).astype(np.float32)
+    # R=10 with chunk 4 exercises both full and padded tau chunks
+    key = jax.random.key(3)
+    got_key, got = engine.sample_taus(key, p, 10)
+    ref_key, ref = key, []
+    for _ in range(10):
+        ref_key, sub = jax.random.split(ref_key)
+        ref.append(sim.sample_tau(sub, p))
+    assert np.array_equal(np.asarray(got), np.asarray(jnp.stack(ref)))
+    assert np.array_equal(jax.random.key_data(got_key),
+                          jax.random.key_data(ref_key))
+
+
+def test_sample_taus_no_dropout_is_all_ones():
+    loss_fn, _, _ = _quad_setting()
+    sim = FLSimulator(loss_fn, n_clients=6, strategy="no_dropout")
+    engine = EpochScanEngine(sim, chunk=4)
+    _, taus = engine.sample_taus(jax.random.key(0), np.full(6, 0.3), 6)
+    assert np.array_equal(np.asarray(taus), np.ones((6, 6)))
+
+
+# ------------------------------------------- run_segment vs run_round calls
+
+
+def test_run_segment_matches_sequential_run_round():
+    n = 6
+    loss_fn, next_batch, params0 = _quad_setting(n=n)
+    p = np.linspace(0.3, 0.9, n)
+    A = opt_alpha.optimize(p, topology.ring(n, 2), sweeps=20).A
+    rng = np.random.default_rng(5)
+    R = 7  # chunk=4: one full chunk + one padded chunk
+    batches = [next_batch() for _ in range(R)]
+    taus = rng.random((R, n)) < p[None, :]
+    active = (rng.random(n) < 0.8).astype(np.float32)
+
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                      A=A, p=p)
+    ref_params, ref_ss = params0, sim.init_server_state(params0)
+    ref_metrics = []
+    for r in range(R):
+        ref_params, ref_ss, m = sim._round(
+            ref_params, ref_ss, jax.tree.map(jnp.asarray, batches[r]),
+            jnp.asarray(taus[r], jnp.float32), jnp.asarray(A, jnp.float32),
+            0.1, jnp.asarray(active))
+        ref_metrics.append(m)
+    ref_metrics = jax.tree.map(lambda *ms: jnp.stack(ms), *ref_metrics)
+
+    sim2 = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                       A=A, p=p)
+    engine = EpochScanEngine(sim2, chunk=4)
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    got_params, got_ss, got_metrics = engine.run_segment(
+        params0, sim2.init_server_state(params0), stacked,
+        jnp.asarray(taus, jnp.float32), 0.1, A=A, active=active)
+
+    assert _tree_equal(ref_params, got_params)
+    assert _tree_equal(ref_ss, got_ss)
+    assert _tree_equal(ref_metrics, got_metrics)
+
+
+# --------------------------- full-schedule bit-equivalence (churn + drift)
+
+
+@pytest.mark.parametrize("strategy", ["colrel_fused", "fedavg_blind"])
+def test_scan_bit_identical_to_loop_over_multi_epoch_churn_drift(strategy):
+    """The tentpole invariant: run_schedule == per-round loop, bit for bit,
+    over a schedule where adjacency, p and membership all change."""
+    n, rounds = 6, 17
+    loss_fn, _, params0 = _quad_setting(n=n, seed=11)
+
+    def make_sim():
+        return FLSimulator(
+            loss_fn, n_clients=n, strategy=strategy,
+            server_opt=ServerOpt(momentum=0.5),  # nontrivial carried state
+        )
+
+    def make_policy():
+        if strategy == "fedavg_blind":
+            return None
+        return channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+
+    runs = {}
+    for engine_name in ("loop", "scan"):
+        rng = np.random.default_rng(42)  # identical batch stream
+
+        def next_batch():
+            return {"c": rng.standard_normal((n, 2, 4, 4)).astype(np.float32)}
+
+        sim = make_sim()
+        params = params0
+        ss = sim.init_server_state(params)
+        key = jax.random.key(7)
+        schedule = _churn_drift_schedule(n=n, seed=3)
+        policy = make_policy()
+        if engine_name == "loop":
+            out = run_rounds_loop(
+                sim, key, params, ss, schedule=schedule, rounds=rounds,
+                next_batch=next_batch, lr=0.1, policy=policy)
+        else:
+            eng = EpochScanEngine(sim, chunk=4)
+            out = eng.run_schedule(
+                key, params, ss, schedule=schedule, rounds=rounds,
+                next_batch=next_batch, lr=0.1, policy=policy)
+        runs[engine_name] = out
+
+    (lp, ls, lm, lk), (sp, ss_, sm, sk) = runs["loop"], runs["scan"]
+    assert _tree_equal(lp, sp)
+    assert _tree_equal(ls, ss_)
+    assert _tree_equal(lm, sm)  # per-round loss/tau/delta_norm streams
+    assert np.array_equal(jax.random.key_data(lk), jax.random.key_data(sk))
+
+
+def test_scan_engine_trace_count_bound():
+    """≤ 2 compiles across many epochs of fixed n: one for the chunk scan,
+    at most one more for a remainder — never one per epoch length."""
+    n, rounds = 6, 29
+    loss_fn, _, params0 = _quad_setting(n=n, seed=2)
+    rng = np.random.default_rng(0)
+
+    def next_batch():
+        return {"c": rng.standard_normal((n, 2, 4, 4)).astype(np.float32)}
+
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused")
+    engine = EpochScanEngine(sim, chunk=4)
+    schedule = _churn_drift_schedule(n=n, seed=9)
+    assert len(list(_churn_drift_schedule(n=n, seed=9).segments(rounds))) > 4
+    engine.run_schedule(
+        jax.random.key(0), params0, sim.init_server_state(params0),
+        schedule=schedule, rounds=rounds, next_batch=next_batch, lr=0.1,
+        policy=channels.AdaptiveOptAlpha(sweeps=10))
+    assert engine.trace_count <= 2
+
+
+# ------------------------------------------------- distributed scan wrapper
+
+
+def test_distributed_scan_step_matches_sequential_rounds():
+    n, T, R = 4, 2, 6
+    loss_fn, next_batch, params0 = _quad_setting(n=n, T=T, seed=8)
+    p = np.linspace(0.4, 0.9, n)
+    A = opt_alpha.optimize(p, topology.ring(n, 1), sweeps=20).A
+    kw = dict(n_clients=n, local_steps=T, relay_mode="fused")
+    round_fn = jax.jit(build_round_step(loss_fn, **kw))
+    scan_fn = jax.jit(build_scan_round_step(loss_fn, **kw))
+
+    rng = np.random.default_rng(1)
+    batches = [next_batch() for _ in range(R)]
+    taus = jnp.asarray(rng.random((R, n)) < p[None, :], jnp.float32)
+    A_j = jnp.asarray(A, jnp.float32)
+
+    ref_params, ref_ss = params0, None
+    ref_losses = []
+    for r in range(R):
+        ref_params, ref_ss, loss = round_fn(
+            ref_params, ref_ss, jax.tree.map(jnp.asarray, batches[r]),
+            taus[r], 0.1, A_j)
+        ref_losses.append(loss)
+
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    got_params, got_ss, got_losses = scan_fn(
+        params0, None, stacked, taus, 0.1, A_j)
+
+    assert _tree_equal(ref_params, got_params)
+    assert np.array_equal(np.asarray(jnp.stack(ref_losses)),
+                          np.asarray(got_losses))

@@ -1,12 +1,10 @@
 """Sharding rules + a miniature end-to-end dry-run on a small forced-device
 mesh.  Device-count overrides must happen before jax initializes, so these
 tests run in subprocesses."""
-import json
 import os
 import subprocess
 import sys
 
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
