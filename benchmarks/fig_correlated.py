@@ -1,0 +1,183 @@
+"""Fig. corr (beyond-paper): ColRel under *correlated* connectivity.
+
+One latent shadowing field jointly drives node blockage on the D2D graph and
+the uplink marginals (``repro.channels.CorrelatedChannel``), and the spatial
+correlation length ℓ sweeps the failure regime from independent per-node
+fades (ℓ = 0) through neighborhood bursts to one common obstacle that blocks
+the whole mesh at once (ℓ = ∞).  The per-node fade statistics are identical
+at every ℓ — only the *co-occurrence* of failures changes, which is exactly
+the regime where the paper's independent-failure variance analysis is
+stressed (journal version arXiv:2202.11850; Parasnis et al. 2303.08988).
+
+Three policies over identical data/τ randomness at every ℓ:
+
+  * ``colrel_adaptive`` — re-solves OPT-α per joint channel epoch;
+  * ``colrel_stale``    — the round-0 A forever, projected onto whatever
+    edges the blockage leaves standing;
+  * ``fedavg_dropout_blind`` — no relaying at all.
+
+Claim (the PR's acceptance bar): mean accuracy over the sweep orders
+adaptive ≥ stale ≥ fedavg, and mean final loss orders strictly the other way
+— relaying pays even when failures correlate, and re-optimizing for the
+current blockage pattern pays on top of that.  (Under *coupled* fading the
+stale policy's bias partially self-corrects — a blocked relay's uplink p is
+dragged down by the same fade, so its lost stale weight was cheap anyway —
+which is why adaptive vs stale separates strictly in loss while their
+accuracies can tie at test-set resolution; accuracy is estimated on 1000
+samples, so the ordering is asserted at that 1e-3 granularity.)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FigureResult, make_mlp, print_figure_csv
+from repro import channels
+from repro.core import connectivity, topology
+from repro.core.aggregation import ServerOpt
+from repro.data.loader import FederatedLoader
+from repro.data.partition import iid_partition
+from repro.data.synthetic import cifar_like
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+SWEEP = (0.0, 0.2, 0.5, np.inf)  # independent → bursts → fully blocked
+HOLD = 2  # channel coherence time in rounds (matches figs. 5/6)
+
+
+def ell_label(ell: float) -> str:
+    return "inf" if np.isinf(ell) else f"{ell:g}"
+
+
+def make_schedule(n: int, ell: float, *, seed: int = 0):
+    """The swept channel: ring(n, 2) base on circle positions, blockage and
+    the coupled uplink refreshed jointly every HOLD rounds."""
+    return channels.CorrelatedChannel(
+        topology.ring(n, 2),
+        connectivity.heterogeneous_profile(n).p,
+        corr_length=ell,
+        rho=0.9,
+        blockage_threshold=1.0,
+        couple_uplink=True,
+        uplink_gain=2.0,
+        hold=HOLD,
+        seed=seed,
+    )
+
+
+def run(rounds: int = 30, model: str = "mlp", n: int = 10,
+        local_steps: int = 8, local_batch: int = 64, lr: float = 0.1,
+        n_train: int = 4000, seed: int = 0, engine: str = "loop"):
+    if model != "mlp":
+        # the sweep studies the channel, not the architecture (fig5 rationale)
+        print(f"fig_corr/skipped,0,reason=channel_study_is_mlp_only;"
+              f"model={model}")
+        return {}
+    ds = cifar_like(n_train, snr=0.5, seed=seed)
+    test = cifar_like(1000, snr=0.5, seed=seed + 99)
+    parts = iid_partition(ds, n, seed=seed)
+    init, logits_fn, loss = make_mlp()
+    test_x, test_y = jnp.asarray(test.inputs), jnp.asarray(test.labels)
+
+    @jax.jit
+    def accuracy(params):
+        return (jnp.argmax(logits_fn(params, test_x), -1) == test_y).mean()
+
+    policies = {
+        "fedavg_dropout_blind": ("fedavg_blind", None),
+        "colrel_stale": ("colrel_fused",
+                         lambda: channels.StaleOptAlpha(sweeps=40)),
+        "colrel_adaptive": ("colrel_fused",
+                            lambda: channels.AdaptiveOptAlpha(
+                                sweeps=40, warm_sweeps=12)),
+    }
+
+    results = {}
+    mean_accs: dict[str, list[float]] = {name: [] for name in policies}
+    final_losses: dict[str, list[float]] = {name: [] for name in policies}
+    for ell in SWEEP:
+        for name, (strategy, make_policy) in policies.items():
+            # same channel realization and data/τ stream per policy at this ℓ
+            schedule = make_schedule(n, ell, seed=seed + 7)
+            policy = make_policy() if make_policy else None
+            loader = FederatedLoader(ds, parts, seed=seed)
+            sim = FLSimulator(
+                loss, n_clients=n, strategy=strategy, p=None,
+                local_steps=local_steps,
+                client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+                server_opt=ServerOpt(),
+            )
+            params = init(jax.random.key(seed))
+            ss = sim.init_server_state(params)
+            key = jax.random.key(seed + 1)
+            accs = []
+
+            def next_batch():
+                return loader.round_batch(local_steps, local_batch)
+
+            t0 = time.time()
+            if engine == "scan":
+                eng = EpochScanEngine(sim, chunk=HOLD)
+
+                def on_segment(seg, params_, _metrics):
+                    accs.append((seg.start_round + seg.n_rounds - 1,
+                                 float(accuracy(params_))))
+
+                params, ss, metrics, _ = eng.run_schedule(
+                    key, params, ss, schedule=schedule, rounds=rounds,
+                    next_batch=next_batch, lr=lr, policy=policy,
+                    on_segment=on_segment)
+                assert eng.trace_count <= 2, \
+                    f"scan engine retraced: {eng.trace_count}"
+            else:
+                # evaluate at coherence-interval ends (r = 1, 3, ... for
+                # HOLD=2) — the same grid the scan path's segment-end hook
+                # uses, so the sweep-mean accuracies are engine-comparable
+                def on_round(r, params_):
+                    if r % HOLD == HOLD - 1 or r == rounds - 1:
+                        accs.append((r, float(accuracy(params_))))
+
+                params, ss, metrics, _ = run_rounds_loop(
+                    sim, key, params, ss, schedule=schedule, rounds=rounds,
+                    next_batch=next_batch, lr=lr, policy=policy,
+                    on_round=on_round)
+                assert sim.trace_count == 1, \
+                    f"round step retraced: {sim.trace_count}"
+            losses = [float(x) for x in metrics["loss"]]
+            tag = f"{name}@ell={ell_label(ell)}"
+            results[tag] = FigureResult(tag, losses, accs, time.time() - t0)
+            mean_accs[name].append(float(np.mean([a for _, a in accs])))
+            final_losses[name].append(losses[-1])
+    print_figure_csv("fig_corr", results)
+    acc_m = {k: float(np.mean(v)) for k, v in mean_accs.items()}
+    loss_m = {k: float(np.mean(v)) for k, v in final_losses.items()}
+    tol = 1e-3  # accuracy is a 1000-sample estimate: 1e-3 is its resolution
+    acc_ordered = (
+        acc_m["colrel_adaptive"] >= acc_m["colrel_stale"] - tol
+        and acc_m["colrel_stale"] >= acc_m["fedavg_dropout_blind"] - tol
+    )
+    loss_ordered = (loss_m["colrel_adaptive"] <= loss_m["colrel_stale"]
+                    <= loss_m["fedavg_dropout_blind"])
+    print("fig_corr/sweep_mean,0,"
+          + ";".join(f"acc_{k}={v:.4f}" for k, v in sorted(acc_m.items()))
+          + ";"
+          + ";".join(f"loss_{k}={v:.4f}" for k, v in sorted(loss_m.items()))
+          + f";adaptive_ge_stale_ge_fedavg_acc={acc_ordered}"
+          + f";adaptive_le_stale_le_fedavg_loss={loss_ordered}")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
+                    help="per-round reference loop or the epoch-fused "
+                         "lax.scan engine (paper-scale horizons)")
+    a = ap.parse_args()
+    run(rounds=a.rounds, engine=a.engine)

@@ -22,6 +22,8 @@ FIGURES = {
     "fig4": "non-IID + server momentum (paper Fig. 4)",
     "fig5": "time-varying channel, adaptive vs stale OPT-α (beyond-paper)",
     "fig6": "client churn over a padded client dim (beyond-paper)",
+    "fig_corr": "correlated shadowing + coupled uplink, ℓ sweep "
+                "(beyond-paper)",
 }
 
 
@@ -78,7 +80,7 @@ def main() -> None:
 
     if not args.skip_figures:
         from benchmarks import (fig2_homogeneous, fig3_ring, fig4_noniid,
-                                fig5_timevarying, fig6_churn)
+                                fig5_timevarying, fig6_churn, fig_correlated)
 
         fig2_homogeneous.run(rounds=rounds, model=args.model)
         fig3_ring.run(rounds=rounds, model=args.model)
@@ -86,6 +88,8 @@ def main() -> None:
         fig5_timevarying.run(rounds=rounds, model=args.model,
                              engine=args.engine)
         fig6_churn.run(rounds=rounds, model=args.model, engine=args.engine)
+        fig_correlated.run(rounds=rounds, model=args.model,
+                           engine=args.engine)
 
     if args.bench:
         run_bench_scenarios(args.bench)

@@ -16,6 +16,12 @@ replayed identically to every run of every engine, and each run builds a
 fresh schedule / policy / loader from the same seeds — so both engines
 consume bit-identical data, τ randomness and relay matrices, and the harness
 can (and does) assert their final parameters match bit-for-bit.
+
+``spec.step = "mesh"`` swaps the execution path under measurement: instead
+of ``FLSimulator`` / :class:`EpochScanEngine`, the engines are the
+production mesh round steps — per-round :func:`build_round_step` ("loop")
+vs one :func:`build_scan_round_step` dispatch per channel epoch ("scan").
+Same fairness contract, same bitwise assertion.
 """
 from __future__ import annotations
 
@@ -23,10 +29,14 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.bench.scenarios import ScenarioBundle, ScenarioSpec, build
+from repro.core.aggregation import ServerOpt
+from repro.fl.distributed import build_round_step, build_scan_round_step
 from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.optim.sgd import ClientOpt
 
 
 @dataclasses.dataclass
@@ -99,9 +109,114 @@ def _run_once(bundle: ScenarioBundle, engine, batches: list):
     return time.perf_counter() - t0, metrics, params
 
 
+class _MeshStep:
+    """The jitted mesh round steps with trace counting — the bench analogue
+    of ``FLSimulator.trace_count`` for ``repro.fl.distributed``.  The
+    counters increment at trace time only (python side of the jit)."""
+
+    def __init__(self, bundle: ScenarioBundle):
+        spec = bundle.spec
+        self.trace_count = 0
+        kw = dict(
+            n_clients=spec.n_clients,
+            local_steps=spec.local_steps,
+            relay_mode="fused",
+            client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+            server_opt=ServerOpt(),
+        )
+        round_fn = build_round_step(bundle.loss_fn, **kw)
+        scan_fn = build_scan_round_step(bundle.loss_fn, **kw)
+
+        def counted_round(params, ss, batch, tau, lr, A):
+            self.trace_count += 1
+            return round_fn(params, ss, batch, tau, lr, A)
+
+        def counted_scan(params, ss, batches, taus, lr, A):
+            self.trace_count += 1
+            return scan_fn(params, ss, batches, taus, lr, A)
+
+        self.round = jax.jit(counted_round)
+        self.scan = jax.jit(counted_scan)
+
+
+def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: list):
+    """One full mesh-path pass; returns (wall_s, losses, params).  Walks
+    ``schedule.segments()`` exactly like ``EpochScanEngine.run_schedule``:
+    one OPT-α solve and one τ block per epoch, with the τ key chain advanced
+    once per round so loop and scan consume identical randomness."""
+    spec = bundle.spec
+    schedule = bundle.make_schedule()
+    policy = bundle.make_policy()
+    if policy is None:
+        raise ValueError("the mesh round step needs a relay policy")
+    params = bundle.init_fn(jax.random.key(spec.seed))
+    server_state = None
+    key = jax.random.key(spec.seed + 1)
+    stream = iter(batches)
+    losses = []
+    n_segments = 0
+    t0 = time.perf_counter()
+    for seg in schedule.segments(spec.rounds):
+        if seg.active is not None:
+            raise ValueError("mesh bench path does not drive churn masks")
+        n_segments += 1
+        A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
+        p = jnp.asarray(seg.p, jnp.float32)
+        taus = []
+        for _ in range(seg.n_rounds):
+            key, sub = jax.random.split(key)
+            taus.append(jax.random.bernoulli(sub, p).astype(jnp.float32))
+        seg_batches = [next(stream) for _ in range(seg.n_rounds)]
+        if name == "loop":
+            for r in range(seg.n_rounds):
+                batch = jax.tree.map(jnp.asarray, seg_batches[r])
+                params, server_state, loss = step.round(
+                    params, server_state, batch, taus[r], spec.lr, A
+                )
+                # the per-round host sync every loop driver models (see
+                # run_rounds_loop) — without it async dispatch pipelines the
+                # round calls and the loop baseline measures the wrong thing
+                losses.append(float(loss))
+        else:
+            stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *seg_batches)
+            params, server_state, seg_losses = step.scan(
+                params, server_state, stacked, jnp.stack(taus), spec.lr, A
+            )
+            losses.append(seg_losses)
+    jax.block_until_ready(params)
+    wall = time.perf_counter() - t0
+    losses = jnp.asarray(losses) if name == "loop" else jnp.concatenate(losses)
+    return wall, losses, params, n_segments
+
+
+def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list):
+    """Cold + warm mesh-path pass; mirrors :func:`run_engine`."""
+    spec = bundle.spec
+    if name not in ("loop", "scan"):
+        raise ValueError(f"unknown engine: {name!r}")
+    step = _MeshStep(bundle)
+    cold_s, _, _, _ = _run_mesh_once(bundle, step, name, batches)
+    warm_s, losses, params, n_segments = _run_mesh_once(bundle, step, name, batches)
+    dispatches = spec.rounds if name == "loop" else n_segments
+    run = EngineRun(
+        engine=name,
+        wall_s=warm_s,
+        compile_s=max(0.0, cold_s - warm_s),
+        rounds_per_sec=spec.rounds / warm_s,
+        trace_count=step.trace_count,
+        dispatches=dispatches,
+        final_loss=float(losses[-1]),
+    )
+    return run, params
+
+
 def run_engine(bundle: ScenarioBundle, name: str, batches: list):
     """Cold + warm pass of one engine; returns (EngineRun, final params)."""
     spec = bundle.spec
+    if spec.step == "mesh":
+        return _run_mesh_engine(bundle, name, batches)
+    if spec.step != "sim":
+        raise ValueError(f"unknown step: {spec.step!r}")
     sim = bundle.make_sim()
     if name == "scan":
         engine = EpochScanEngine(sim, chunk=spec.chunk)

@@ -8,16 +8,24 @@ loader instances so cold and warm runs see identical streams.
 
 The registered scenarios:
 
-  bench_smoke   tiny CI gate scenario (seconds on one CPU core)
-  fig5_500      the acceptance scenario: 500 rounds, n=10, ring(10, 2) with
-                bursty Markov fading + piecewise-constant p-drift at a
-                25-round coherence time (the Fig. 5 channel at paper-scale
-                horizon, bench-scale model so the engine — not the matmul —
-                is what's measured)
-  fig6_500      fig5_500 plus rotating-cohort churn over the padded client
-                dimension (the Fig. 6 setting)
-  static_500    single-epoch control: the seed paper's static channel, where
-                epoch fusion is maximal
+  bench_smoke     tiny CI gate scenario (seconds on one CPU core)
+  fig5_500        the acceptance scenario: 500 rounds, n=10, ring(10, 2) with
+                  bursty Markov fading + piecewise-constant p-drift at a
+                  25-round coherence time (the Fig. 5 channel at paper-scale
+                  horizon, bench-scale model so the engine — not the matmul —
+                  is what's measured)
+  fig6_500        fig5_500 plus rotating-cohort churn over the padded client
+                  dimension (the Fig. 6 setting)
+  static_500      single-epoch control: the seed paper's static channel,
+                  where epoch fusion is maximal
+  corr_shadow_500 correlated shadowing: one GP blockage field drives the D2D
+                  graph (edges sharing a blocked node fail together), p
+                  static — the first jointly-sampled adjacency stream
+  corr_uplink_500 corr_shadow_500 with the uplink coupled to the same fade:
+                  (adj, p) move together at every epoch boundary
+  mesh_corr_500   the production mesh round step (``build_round_step`` vs
+                  ``build_scan_round_step``) under the coupled correlated
+                  channel — ``spec.step = "mesh"`` swaps the execution path
 """
 from __future__ import annotations
 
@@ -63,7 +71,7 @@ class ScenarioSpec:
     # channel composition
     topology: str = "ring"  # ring | full
     ring_k: int = 2
-    fading: str = "markov"  # markov | static
+    fading: str = "markov"  # markov | corr_shadow | corr_uplink | static
     p_up_to_down: float = 0.3
     p_down_to_up: float = 0.5
     adj_every: int = 1
@@ -73,8 +81,38 @@ class ScenarioSpec:
     churn: str = "none"  # none | rotating
     n_cohorts: int = 5
     churn_hold: int = 4
-    # scan engine
+    # correlated shadowing (fading = corr_shadow | corr_uplink; the field
+    # refreshes every adj_every rounds — the coherence time)
+    corr_length: float = 0.4
+    shadow_rho: float = 0.9
+    shadow_sigma: float = 1.0
+    blockage_threshold: float = 1.0
+    uplink_gain: float = 2.0
+    # execution path: FLSimulator/EpochScanEngine vs the production mesh
+    # round step (build_round_step / build_scan_round_step).  The mesh scan
+    # dispatches one whole segment per call, so `chunk` applies to the sim
+    # path only.
+    step: str = "sim"  # sim | mesh
+    # scan engine (sim path)
     chunk: int = 32
+
+    def __post_init__(self):
+        # fail at construction, not mid-benchmark after batches are generated
+        if self.step not in ("sim", "mesh"):
+            raise ValueError(f"unknown step: {self.step!r}")
+        if self.step == "mesh" and self.churn != "none":
+            raise ValueError("mesh scenarios do not drive churn masks")
+        if self.step == "mesh" and self.policy == "none":
+            raise ValueError("the mesh round step needs a relay policy")
+        if self.step == "mesh" and self.strategy != "colrel_fused":
+            # _MeshStep benches build_round_step(relay_mode="fused") — the
+            # mesh analogue of colrel_fused; any other strategy would be
+            # recorded in the report but not what was measured
+            raise ValueError("mesh scenarios bench the fused relay only")
+        if self.fading == "corr_uplink" and self.drift != "static":
+            raise ValueError(
+                "corr_uplink couples p to the fade; set drift='static'"
+            )
 
 
 def _make_mlp(dim: int, width: int, n_classes: int):
@@ -123,8 +161,10 @@ class ScenarioBundle:
     def make_schedule(self) -> channels.ChannelSchedule:
         spec = self.spec
         adj = self.base_adjacency()
+        p0 = self.base_p()
         seed = spec.seed + 7
         link = None
+        p_process = None
         if spec.fading == "markov":
             link = channels.MarkovLinkProcess(
                 adj,
@@ -132,10 +172,26 @@ class ScenarioBundle:
                 p_down_to_up=spec.p_down_to_up,
                 seed=seed,
             )
+        elif spec.fading in ("corr_shadow", "corr_uplink"):
+            # one latent field; the link process owns it, the coupled uplink
+            # reads it — (adj, p) are jointly sampled per coherence interval
+            field = channels.ShadowingField(
+                channels.circle_positions(spec.n_clients),
+                corr_length=spec.corr_length,
+                rho=spec.shadow_rho,
+                sigma=spec.shadow_sigma,
+                seed=seed,
+            )
+            link = channels.ShadowedLinkProcess(
+                adj, field, threshold=spec.blockage_threshold
+            )
+            if spec.fading == "corr_uplink":
+                # drift='static' is enforced at spec construction
+                p_process = channels.CoupledUplinkDrift(
+                    p0, field, gain=spec.uplink_gain
+                )
         elif spec.fading != "static":
             raise ValueError(f"unknown fading: {spec.fading!r}")
-        p0 = self.base_p()
-        p_process = None
         if spec.drift == "piecewise":
             p_process = channels.PiecewiseConstantDrift(
                 p0,
@@ -311,5 +367,74 @@ register(
         fading="static",
         drift="static",
         chunk=50,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="corr_shadow_500",
+        description=(
+            "correlated shadowing: GP blockage field over ring positions "
+            "(edges sharing a blocked node fail together), static p, "
+            "25-round coherence"
+        ),
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        fading="corr_shadow",
+        drift="static",
+        adj_every=25,
+        p_every=25,
+        chunk=25,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="corr_uplink_500",
+        description=(
+            "coupled uplink/D2D fading: (adj, p) jointly sampled from one "
+            "shadowing field, 25-round coherence"
+        ),
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        fading="corr_uplink",
+        drift="static",
+        adj_every=25,
+        p_every=25,
+        chunk=25,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="mesh_corr_500",
+        description=(
+            "production mesh round step (fused relay) under the coupled "
+            "correlated channel: per-round build_round_step vs one "
+            "build_scan_round_step dispatch per epoch"
+        ),
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        fading="corr_uplink",
+        drift="static",
+        adj_every=25,
+        p_every=25,
+        chunk=25,
+        step="mesh",
     )
 )

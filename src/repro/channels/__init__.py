@@ -12,6 +12,14 @@ subsystem is three layers, consumed in order every round:
      radio-range geometric adjacency.
    * uplink drift (`drift`): the p-vector going stale — piecewise-constant
      jumps (blockage) or a reflected random walk (pathloss drift).
+   * correlated fading (`correlated`): one latent per-node log-shadowing
+     field (:class:`ShadowingField`: AR(1) in time, Gaussian-process over
+     node positions in space) drives node blockage on the D2D graph
+     (:class:`ShadowedLinkProcess` — edges sharing a blocked node fail
+     together) and, optionally, the uplink marginals
+     (:class:`CoupledUplinkDrift` — p_i co-moves with i's local D2D state).
+     Unlike every process above, the resulting ``(adj, p)`` stream is
+     *jointly* sampled; :class:`CorrelatedChannel` is the one-call schedule.
    * membership (`churn`): clients joining/leaving over a *padded* client
      dimension ``n_max`` — per-client Markov on/off chains
      (:class:`MarkovChurn`), deterministic shift rotation
@@ -55,6 +63,14 @@ from repro.channels.churn import (
     RotatingCohorts,
     StaticMembership,
 )
+from repro.channels.correlated import (
+    CorrelatedChannel,
+    CoupledUplinkDrift,
+    ShadowedLinkProcess,
+    ShadowingField,
+    circle_positions,
+    spatial_covariance,
+)
 from repro.channels.drift import (
     PiecewiseConstantDrift,
     RandomWalkDrift,
@@ -82,6 +98,8 @@ __all__ = [
     "ChannelSegment",
     "ChannelState",
     "ChurnSchedule",
+    "CorrelatedChannel",
+    "CoupledUplinkDrift",
     "MarkovChurn",
     "MarkovLinkProcess",
     "PiecewiseConstantDrift",
@@ -89,12 +107,16 @@ __all__ = [
     "RandomWaypointMobility",
     "RotatingCohorts",
     "SchedulerStats",
+    "ShadowedLinkProcess",
+    "ShadowingField",
     "StaleOptAlpha",
     "StaticChannel",
     "StaticMembership",
     "StaticP",
     "TimeVaryingChannel",
+    "circle_positions",
     "geometric_adjacency",
     "gilbert_elliott",
     "project_to_support",
+    "spatial_covariance",
 ]

@@ -54,8 +54,16 @@ class MarkovChurn:
     are chosen uniformly among that step's survivors).
     """
 
-    def __init__(self, n_max: int, *, p_leave: float, p_join: float,
-                 init_active=None, min_active: int = 1, seed: int = 0):
+    def __init__(
+        self,
+        n_max: int,
+        *,
+        p_leave: float,
+        p_join: float,
+        init_active=None,
+        min_active: int = 1,
+        seed: int = 0,
+    ):
         if not (0.0 <= p_leave <= 1.0 and 0.0 <= p_join <= 1.0):
             raise ValueError("p_leave / p_join must be probabilities")
         if not (1 <= min_active <= n_max):

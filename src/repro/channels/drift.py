@@ -36,8 +36,9 @@ class StaticP:
 class PiecewiseConstantDrift:
     """Hold p for ``hold`` rounds, then resample uniformly in [low, high]."""
 
-    def __init__(self, p0, *, hold: int, low: float = 0.05, high: float = 0.95,
-                 seed: int = 0):
+    def __init__(
+        self, p0, *, hold: int, low: float = 0.05, high: float = 0.95, seed: int = 0
+    ):
         if hold < 1:
             raise ValueError("hold must be >= 1")
         self.p, self.low, self.high = _check_bounds(p0, low, high)
@@ -67,8 +68,9 @@ def _reflect(x: np.ndarray, low: float, high: float) -> np.ndarray:
 class RandomWalkDrift:
     """p(r+1) = reflect(p(r) + N(0, σ²)) — slow per-client drift."""
 
-    def __init__(self, p0, *, sigma: float, low: float = 0.05, high: float = 0.95,
-                 seed: int = 0):
+    def __init__(
+        self, p0, *, sigma: float, low: float = 0.05, high: float = 0.95, seed: int = 0
+    ):
         if sigma < 0:
             raise ValueError("sigma must be nonnegative")
         self.p, self.low, self.high = _check_bounds(p0, low, high)
@@ -81,6 +83,7 @@ class RandomWalkDrift:
     def step(self) -> np.ndarray:
         self.p = _reflect(
             self.p + self._rng.normal(0.0, self.sigma, size=self.p.shape),
-            self.low, self.high,
+            self.low,
+            self.high,
         )
         return self.p

@@ -34,8 +34,9 @@ class MarkovLinkProcess:
         if not (0.0 <= p_up_to_down <= 1.0 and 0.0 <= p_down_to_up <= 1.0):
             raise ValueError("transition probabilities must lie in [0, 1]")
         if p_up_to_down + p_down_to_up == 0.0:
-            raise ValueError("q_ud = q_du = 0 freezes every link; use a "
-                             "StaticChannel instead")
+            raise ValueError(
+                "q_ud = q_du = 0 freezes every link; use a StaticChannel instead"
+            )
         self.base = base
         self.n = base.shape[0]
         self.q_ud = float(p_up_to_down)
@@ -59,8 +60,9 @@ class MarkovLinkProcess:
     def transition_matrix(self) -> np.ndarray:
         """Row-stochastic P over states (down, up): P[s, s'] = P[s → s']."""
         return np.array(
-            [[1.0 - self.q_du, self.q_du],
-             [self.q_ud, 1.0 - self.q_ud]], dtype=np.float64)
+            [[1.0 - self.q_du, self.q_du], [self.q_ud, 1.0 - self.q_ud]],
+            dtype=np.float64,
+        )
 
     def adjacency(self) -> np.ndarray:
         """Current realized D2D graph (symmetric, zero diagonal)."""

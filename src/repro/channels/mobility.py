@@ -58,9 +58,7 @@ class RandomWaypointMobility:
         arrived = dist <= self.speed
         moving = ~arrived & (dist > 0)
         self.positions[arrived] = self._waypoints[arrived]
-        self.positions[moving] += (
-            self.speed * to_wp[moving] / dist[moving, None]
-        )
+        self.positions[moving] += self.speed * to_wp[moving] / dist[moving, None]
         n_new = int(arrived.sum())
         if n_new:
             self._waypoints[arrived] = self._rng.random((n_new, 2)) * self.area

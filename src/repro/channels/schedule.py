@@ -35,13 +35,16 @@ class ChannelState:
     round: int
     epoch_id: int
     adj: np.ndarray  # (n_max, n_max) bool, symmetric, zero diagonal
-    p: np.ndarray    # (n_max,) float32 in [0, 1]
+    p: np.ndarray  # (n_max,) float32 in [0, 1]
     active: np.ndarray | None = None  # (n_max,) bool, None ⇒ all live
 
     def key(self) -> tuple[bytes, bytes, bytes]:
         """Value-identity key (the adaptive scheduler's cache key)."""
-        return (self.adj.tobytes(), self.p.tobytes(),
-                b"" if self.active is None else self.active.tobytes())
+        return (
+            self.adj.tobytes(),
+            self.p.tobytes(),
+            b"" if self.active is None else self.active.tobytes(),
+        )
 
     @property
     def n_active(self) -> int:
@@ -95,21 +98,30 @@ class ChannelSchedule:
         self._epoch = -1
         self._last_key = None
 
-    def _emit(self, adj: np.ndarray, p: np.ndarray,
-              active: np.ndarray | None = None) -> ChannelState:
-        adj = np.ascontiguousarray(adj, dtype=bool)
-        p = np.ascontiguousarray(p, dtype=np.float32)
+    def _emit(
+        self, adj: np.ndarray, p: np.ndarray, active: np.ndarray | None = None
+    ) -> ChannelState:
+        # Snapshot (copy) every array: ``segments()`` holds emitted states one
+        # epoch past their round (it must see the *next* state to know a run
+        # ended), and a jointly-sampled process that updates its buffers in
+        # place would otherwise mutate the yielded segment's (adj, p, active)
+        # under the consumer — ascontiguousarray alone aliases when dtype and
+        # layout already match.
+        adj = np.array(adj, dtype=bool, order="C", copy=True)
+        p = np.array(p, dtype=np.float32, order="C", copy=True)
         if adj.shape[0] != p.shape[0]:
             raise ValueError(
                 f"channel size mismatch: adj is {adj.shape[0]}-node, "
-                f"p has {p.shape[0]} entries")
+                f"p has {p.shape[0]} entries"
+            )
         if np.any(p < 0) or np.any(p > 1):
             raise ValueError("p left [0, 1]")
         if active is not None:
-            active = np.ascontiguousarray(active, dtype=bool)
+            active = np.array(active, dtype=bool, order="C", copy=True)
             if active.shape != p.shape:
                 raise ValueError(
-                    f"active mask has shape {active.shape}, expected {p.shape}")
+                    f"active mask has shape {active.shape}, expected {p.shape}"
+                )
         state = ChannelState(self._round, self._epoch, adj, p, active)
         if state.key() != self._last_key:
             self._epoch += 1
@@ -154,8 +166,8 @@ class StaticChannel(ChannelSchedule):
 
 
 class TimeVaryingChannel(ChannelSchedule):
-    """Composes a link-state process (Markov / mobility) with a p-drift
-    process.  Either side may be static: pass ``adj=...`` instead of
+    """Composes a link-state process (Markov / mobility / shadowing) with a
+    p-drift process.  Either side may be static: pass ``adj=...`` instead of
     ``link_process`` and/or a plain vector ``p=...`` instead of ``p_process``.
 
     ``adj_every`` / ``p_every`` throttle how often each process advances
@@ -184,7 +196,8 @@ class TimeVaryingChannel(ChannelSchedule):
         self._pproc = StaticP(p) if p_process is None else p_process
         self._adj = (
             topology._validate(np.asarray(adj, dtype=bool).copy())
-            if link_process is None else link_process.adjacency()
+            if link_process is None
+            else link_process.adjacency()
         )
         self._adj_every = int(adj_every)
         self._p_every = int(p_every)

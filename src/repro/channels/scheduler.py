@@ -27,8 +27,9 @@ from repro.core import opt_alpha, topology
 from repro.channels.schedule import ChannelState
 
 
-def project_to_support(A: np.ndarray, adj: np.ndarray,
-                       active: np.ndarray | None = None) -> np.ndarray:
+def project_to_support(
+    A: np.ndarray, adj: np.ndarray, active: np.ndarray | None = None
+) -> np.ndarray:
     """Zero every relay weight that the current graph cannot carry
     (j ∉ N_i ∪ {i}).  Models using an outdated A on a changed topology.
     With a churn mask ``active``, weights touching a departed client are
@@ -105,12 +106,23 @@ class AdaptiveOptAlpha:
             self.stats.warm_solves += 1
         if masked:
             res = opt_alpha.optimize_masked(
-                state.p, state.adj, state.active,
-                sweeps=sweeps, tol=self.tol, A0=A0, method=self.method)
+                state.p,
+                state.adj,
+                state.active,
+                sweeps=sweeps,
+                tol=self.tol,
+                A0=A0,
+                method=self.method,
+            )
         else:
             res = opt_alpha.optimize(
-                state.p, state.adj, sweeps=sweeps, tol=self.tol, A0=A0,
-                method=self.method)
+                state.p,
+                state.adj,
+                sweeps=sweeps,
+                tol=self.tol,
+                A0=A0,
+                method=self.method,
+            )
         self.stats.solves += 1
         self.stats.sweeps_total += res.sweeps
         # the cache and the warm-start seed alias the returned array; freeze
@@ -127,8 +139,9 @@ class StaleOptAlpha:
     """Solve OPT-α on the first channel only; every later round reuses that A
     projected onto the live topology (the channel-oblivious baseline)."""
 
-    def __init__(self, *, sweeps: int = 40, tol: float = 1e-10,
-                 method: str = "bisect"):
+    def __init__(
+        self, *, sweeps: int = 40, tol: float = 1e-10, method: str = "bisect"
+    ):
         self.sweeps = sweeps
         self.tol = tol
         self.method = method
@@ -138,10 +151,19 @@ class StaleOptAlpha:
         if self._A is None:
             if state.active is not None and not state.active.all():
                 self._A = opt_alpha.optimize_masked(
-                    state.p, state.adj, state.active,
-                    sweeps=self.sweeps, tol=self.tol, method=self.method).A
+                    state.p,
+                    state.adj,
+                    state.active,
+                    sweeps=self.sweeps,
+                    tol=self.tol,
+                    method=self.method,
+                ).A
             else:
                 self._A = opt_alpha.optimize(
-                    state.p, state.adj, sweeps=self.sweeps, tol=self.tol,
-                    method=self.method).A
+                    state.p,
+                    state.adj,
+                    sweeps=self.sweeps,
+                    tol=self.tol,
+                    method=self.method,
+                ).A
         return project_to_support(self._A, state.adj, state.active)

@@ -233,6 +233,9 @@ def solve_column(
 
     Returns (column, feasible, bisection_iters).
     """
+    if method not in _COLUMN_SOLVERS:
+        known = ", ".join(sorted(_COLUMN_SOLVERS))
+        raise ValueError(f"unknown column solver {method!r} (known: {known})")
     n = p.shape[0]
     col = np.zeros((n,), dtype=np.float64)
     ones = np.nonzero(closed_col & (p >= 1.0))[0]

@@ -240,7 +240,6 @@ def run_rounds_loop(sim: FLSimulator, key, params, server_state, *, schedule,
     so loop-vs-scan comparisons share one definition.
     Returns ``(params, server_state, per_round_metrics, key)``."""
     all_metrics = []
-    losses = []
     for state in schedule.rounds(rounds):
         A = policy.relay_matrix(state) if policy is not None else None
         key, sub = jax.random.split(key)
@@ -249,7 +248,7 @@ def run_rounds_loop(sim: FLSimulator, key, params, server_state, *, schedule,
             sub, params, server_state, batch, lr,
             A=A, p=state.p, active=state.active,
         )
-        losses.append(float(m["loss"]))
+        float(m["loss"])  # the per-round host sync the loop driver models
         all_metrics.append(m)
         if on_round is not None:
             on_round(state.round, params)

@@ -31,8 +31,14 @@ def test_registry_contains_the_shipped_scenarios():
     assert "bench_smoke" in names
     assert "fig5_500" in names
     assert "fig6_500" in names
+    assert "corr_shadow_500" in names
+    assert "corr_uplink_500" in names
+    assert "mesh_corr_500" in names
     for name in names:
         assert scenarios.get_scenario(name).name == name
+    corr = scenarios.get_scenario("corr_uplink_500")
+    assert corr.fading == "corr_uplink" and corr.drift == "static"
+    assert scenarios.get_scenario("mesh_corr_500").step == "mesh"
 
 
 def test_registry_rejects_unknown_and_duplicate():
@@ -67,6 +73,39 @@ def test_harness_runs_both_engines_bitwise_identical():
     assert runs["loop"].trace_count == 1
     assert runs["scan"].trace_count <= 2
     assert runs["scan"].dispatches < runs["loop"].dispatches
+
+
+TINY_CORR = dataclasses.replace(
+    TINY,
+    name="tiny_corr_test",
+    fading="corr_uplink",
+    drift="static",
+    corr_length=0.5,
+)
+
+
+def test_harness_correlated_scenario_bitwise_identical():
+    """Jointly-sampled (adj, p) through both engines: the scan path must
+    still reproduce the loop bit-for-bit."""
+    result = harness.run_scenario(TINY_CORR)
+    assert result["bitwise_match"] is True
+    assert result["runs"]["loop"].trace_count == 1
+    assert result["runs"]["scan"].trace_count <= 2
+
+
+def test_mesh_step_bitwise_and_trace_bound_under_correlated_schedule():
+    """Satellite: the mesh round step (build_scan_round_step) benched under
+    a correlated multi-epoch schedule — per-epoch scan dispatches, bitwise
+    equal to the per-round mesh step, and trace_count ≤ 2 (fixed coherence
+    time ⇒ fixed scan length; at most a shorter final remainder epoch)."""
+    spec = dataclasses.replace(TINY_CORR, name="tiny_mesh_test", step="mesh")
+    result = harness.run_scenario(spec)
+    runs = result["runs"]
+    assert result["bitwise_match"] is True
+    assert runs["loop"].trace_count == 1
+    assert runs["scan"].trace_count <= 2
+    assert runs["scan"].dispatches == spec.rounds // spec.adj_every
+    assert runs["loop"].dispatches == spec.rounds
 
 
 # ---------------------------------------------------------- report + gate

@@ -1,0 +1,378 @@
+"""Correlated-connectivity subsystem: shadowing field, blockage-driven D2D,
+coupled uplink, joint (adj, p) epochs, and the contracts the rest of the
+stack assumes — maximal segments, scheduler caching, no-retrace, and
+loop-vs-scan bit-identity under jointly-sampled state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.core import topology
+from repro.core.aggregation import ServerOpt
+from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.fl.simulator import FLSimulator
+
+
+# ------------------------------------------------------- spatial covariance
+
+
+def test_spatial_covariance_limits_and_shape():
+    pos = channels.circle_positions(8)
+    ind = channels.spatial_covariance(pos, corr_length=0.0, sigma=2.0)
+    np.testing.assert_array_equal(ind, 4.0 * np.eye(8))
+    common = channels.spatial_covariance(pos, corr_length=np.inf, sigma=2.0)
+    np.testing.assert_array_equal(common, np.full((8, 8), 4.0))
+    cov = channels.spatial_covariance(pos, corr_length=0.3)
+    # symmetric PSD with unit diagonal, decaying with distance
+    np.testing.assert_allclose(cov, cov.T)
+    np.testing.assert_allclose(np.diag(cov), 1.0)
+    assert np.all(np.linalg.eigvalsh(cov) > -1e-12)
+    d = np.linalg.norm(pos[0] - pos[1]), np.linalg.norm(pos[0] - pos[4])
+    assert d[0] < d[1] and cov[0, 1] > cov[0, 4]  # near > far correlation
+
+
+def test_shadowing_field_marginals_independent_of_structure():
+    """Each z_i stays N(0, σ²) while ρ and ℓ only shape co-occurrence."""
+    pos = channels.circle_positions(6)
+    for ell, rho in ((0.0, 0.0), (0.4, 0.9), (np.inf, 0.5)):
+        field = channels.ShadowingField(
+            pos, corr_length=ell, rho=rho, sigma=1.5, seed=0
+        )
+        zs = np.stack([field.step() for _ in range(4000)])
+        np.testing.assert_allclose(zs.mean(0), 0.0, atol=0.15)
+        np.testing.assert_allclose(zs.std(0), 1.5, atol=0.15)
+
+
+def test_shadowing_field_spatial_correlation_orders_with_length():
+    pos = channels.circle_positions(10)
+    samples = {}
+    for ell in (0.0, 0.3, np.inf):
+        field = channels.ShadowingField(pos, corr_length=ell, rho=0.0, seed=1)
+        zs = np.stack([field.step() for _ in range(3000)])
+        samples[ell] = np.corrcoef(zs[:, 0], zs[:, 1])[0, 1]  # adjacent nodes
+    assert abs(samples[0.0]) < 0.1
+    assert samples[0.0] < samples[0.3] < samples[np.inf]
+    assert samples[np.inf] > 0.99  # one shared fade
+
+
+# ------------------------------------------------------- blockage link model
+
+
+def test_blocked_node_drops_all_incident_edges():
+    """The defining correlation: edges sharing a blocked node fail together."""
+    base = topology.ring(10, 2)
+    field = channels.ShadowingField(
+        channels.circle_positions(10), corr_length=0.4, rho=0.8, seed=2
+    )
+    link = channels.ShadowedLinkProcess(base, field, threshold=0.8)
+    for _ in range(60):
+        adj = link.step()
+        topology._validate(adj)
+        assert not np.any(adj & ~base)  # base graph is the envelope
+        blocked = link.blocked
+        assert not adj[blocked].any() and not adj[:, blocked].any()
+        # unblocked base edges survive
+        up = ~blocked
+        np.testing.assert_array_equal(
+            adj, base & up[:, None] & up[None, :]
+        )
+
+
+def test_shadowed_link_with_mobility_refits_covariance():
+    mob = channels.RandomWaypointMobility(8, radius=0.5, speed=0.1, seed=3)
+    field = channels.ShadowingField(
+        mob.positions, corr_length=0.3, rho=0.7, seed=4
+    )
+    link = channels.ShadowedLinkProcess(
+        None, field, threshold=1.0, mobility=mob
+    )
+    seen = set()
+    for _ in range(30):
+        adj = link.step()
+        topology._validate(adj)
+        geo = channels.geometric_adjacency(mob.positions, 0.5)
+        assert not np.any(adj & ~geo)  # moving envelope still respected
+        seen.add(adj.tobytes())
+    assert len(seen) > 1
+
+
+def test_shadowed_link_rejects_ambiguous_base():
+    field = channels.ShadowingField(
+        channels.circle_positions(4), corr_length=0.2
+    )
+    with pytest.raises(ValueError, match="exactly one"):
+        channels.ShadowedLinkProcess(None, field)
+
+
+# ----------------------------------------------------------- coupled uplink
+
+
+def test_coupled_uplink_bounds_and_zero_gain():
+    p0 = np.linspace(0.1, 0.9, 8)
+    field = channels.ShadowingField(
+        channels.circle_positions(8), corr_length=0.3, seed=5
+    )
+    flat = channels.CoupledUplinkDrift(p0, field, gain=0.0)
+    moving = channels.CoupledUplinkDrift(p0, field, gain=2.0)
+    before = flat.value().copy()
+    for _ in range(50):
+        field.step()
+        np.testing.assert_array_equal(flat.step(), before)  # γ=0 decouples
+        p = moving.step()
+        assert np.all(p >= 0.05) and np.all(p <= 0.95)
+
+
+def test_coupled_uplink_co_moves_with_blockage():
+    """A blocked node's uplink marginal is dragged down by the same fade."""
+    n, gain, thr = 10, 2.0, 1.0
+    p0 = np.full(n, 0.6)
+    field = channels.ShadowingField(
+        channels.circle_positions(n), corr_length=0.4, rho=0.5, seed=6
+    )
+    link = channels.ShadowedLinkProcess(topology.ring(n, 2), field,
+                                        threshold=thr)
+    up = channels.CoupledUplinkDrift(p0, field, gain=gain)
+    logit0 = np.log(0.6 / 0.4)
+    cap = 1.0 / (1.0 + np.exp(-(logit0 - gain * thr)))
+    saw_blocked = False
+    for _ in range(80):
+        link.step()
+        p = up.step()
+        blocked = link.blocked
+        if blocked.any():
+            saw_blocked = True
+            assert np.all(p[blocked] <= cap + 1e-12)
+            if (~blocked).any():
+                assert p[blocked].max() <= p[~blocked].min() + 1e-12
+    assert saw_blocked
+
+
+def test_coupled_uplink_value_stable_between_steps():
+    """value() must cache: the schedule reads it every round but only steps
+    it on p_every boundaries (pilot estimates lag the fade)."""
+    field = channels.ShadowingField(
+        channels.circle_positions(6), corr_length=0.2, seed=7
+    )
+    up = channels.CoupledUplinkDrift(np.full(6, 0.5), field, gain=2.0)
+    held = up.value().copy()
+    field.step()  # the fade moves on ...
+    np.testing.assert_array_equal(up.value(), held)  # ... the estimate not
+    assert not np.array_equal(up.step(), held)
+
+
+# --------------------------------------------- joint epochs + segmentation
+
+
+def test_correlated_channel_joint_epochs_align_with_hold():
+    n, hold, rounds = 10, 5, 40
+    sched = channels.CorrelatedChannel(
+        topology.ring(n, 2), np.linspace(0.2, 0.9, n),
+        corr_length=0.4, hold=hold, seed=0,
+    )
+    states = list(sched.rounds(rounds))
+    for s in states:
+        assert s.p.dtype == np.float32 and s.adj.dtype == bool
+    # epoch boundaries only ever at hold multiples: (adj, p) move jointly
+    for a, b in zip(states, states[1:]):
+        if b.epoch_id != a.epoch_id:
+            assert b.round % hold == 0
+
+
+def test_correlated_segments_are_maximal_constant_runs():
+    """Satellite: a *jointly*-sampled state stream still yields maximal
+    constant-channel segments — no spurious splits inside a coherence
+    interval, segment bounds only at hold multiples, and the segment stream
+    is exactly the round stream regrouped."""
+    n, hold, rounds = 8, 4, 33
+
+    def make():
+        return channels.CorrelatedChannel(
+            topology.ring(n, 2), np.linspace(0.3, 0.9, n),
+            corr_length=0.5, hold=hold, seed=11,
+        )
+
+    states = list(make().rounds(rounds))
+    segs = list(make().segments(rounds))
+    flat = [s for seg in segs for s in seg.states]
+    assert len(flat) == rounds
+    for got, want in zip(flat, states):
+        assert got.round == want.round and got.key() == want.key()
+    for seg in segs:
+        assert seg.start_round % hold == 0
+        # maximality: every segment spans whole coherence intervals (a
+        # value-recurrence across a hold boundary merges, never splits)
+        if seg is not segs[-1]:
+            assert seg.n_rounds % hold == 0
+        for s in seg.states:
+            assert s.key() == seg.state.key()
+    for a, b in zip(segs, segs[1:]):
+        assert a.state.key() != b.state.key()
+        assert b.start_round == a.start_round + a.n_rounds
+
+
+class _InPlaceJointSampler(channels.ChannelSchedule):
+    """Adversarial joint sampler: (adj, p) live in buffers that are mutated
+    in place on every resample — the idiom `_emit` must defend against."""
+
+    def __init__(self, n: int, *, hold: int, seed: int = 0):
+        super().__init__()
+        self._rng = np.random.default_rng(seed)
+        self._hold = hold
+        self._adj = np.zeros((n, n), dtype=bool)
+        self._p = np.zeros(n, dtype=np.float32)
+        self._resample()
+
+    def _resample(self):
+        z = self._rng.standard_normal(self._p.shape[0])
+        up = z > -0.5
+        self._adj[...] = up[:, None] & up[None, :]
+        np.fill_diagonal(self._adj, False)
+        self._p[...] = np.clip(0.5 + 0.3 * z, 0.05, 0.95)
+
+    def next_round(self):
+        if self._round > 0 and self._round % self._hold == 0:
+            self._resample()
+        return self._emit(self._adj, self._p)
+
+
+def test_segments_survive_in_place_joint_resampling():
+    """Satellite fix: `segments()` yields a segment only after seeing the
+    *next* epoch's first state, by which time an in-place joint sampler has
+    already overwritten its buffers — emitted states must therefore own
+    snapshots, or the yielded segment silently carries the wrong channel."""
+    rounds = 24
+    ref_keys = []
+    for s in _InPlaceJointSampler(6, hold=4, seed=3).rounds(rounds):
+        ref_keys.append(s.key())  # key read while the round is current
+    segs = list(_InPlaceJointSampler(6, hold=4, seed=3).segments(rounds))
+    assert len(segs) > 2
+    for seg in segs:
+        for s in seg.states:
+            assert s.key() == ref_keys[s.round]
+
+
+def test_correlated_composes_with_churn():
+    """ChurnSchedule over the shadowing pieces: membership, blockage and the
+    coupled p stream through one ChannelState; membership changes open
+    epochs of their own."""
+    n = 9
+    field = channels.ShadowingField(
+        channels.circle_positions(n), corr_length=0.4, seed=8
+    )
+    sched = channels.ChurnSchedule(
+        membership=channels.RotatingCohorts(n, n_cohorts=3, hold=6),
+        link_process=channels.ShadowedLinkProcess(
+            topology.ring(n, 2), field, threshold=1.0
+        ),
+        p_process=channels.CoupledUplinkDrift(
+            np.full(n, 0.6), field, gain=2.0
+        ),
+        adj_every=3,
+        p_every=3,
+    )
+    states = list(sched.rounds(24))
+    assert all(s.active is not None for s in states)
+    masks = {s.active.tobytes() for s in states}
+    assert len(masks) == 3  # all three cohort shifts seen
+    # a membership flip alone is an epoch boundary
+    for a, b in zip(states, states[1:]):
+        if not np.array_equal(a.active, b.active):
+            assert b.epoch_id != a.epoch_id
+
+
+# ---------------------------------------- scheduler + engine contracts
+
+
+def test_adaptive_policy_caches_recurring_blockage_patterns():
+    """Pure shadowing (static p): blockage patterns recur, so the LRU keyed
+    on the joint state serves repeats from cache instead of re-solving."""
+    n = 8
+    sched = channels.CorrelatedChannel(
+        topology.ring(n, 2), np.linspace(0.3, 0.9, n),
+        corr_length=np.inf, hold=1, couple_uplink=False, rho=0.5, seed=4,
+    )
+    pol = channels.AdaptiveOptAlpha(sweeps=15, warm_sweeps=6, cache_size=32)
+    for state in sched.rounds(60):
+        A = pol.relay_matrix(state)
+        # feasibility on the live graph every round, even fully blocked
+        assert np.all(A >= -1e-12)
+    assert pol.stats.cache_hits > 0
+    assert pol.stats.solves + pol.stats.cache_hits == pol.stats.rounds
+
+
+def _quad_setting(n, dim=4, T=2, b=4, seed=0):
+    def loss_fn(params, batch):
+        diff = params["x"][None, :] - batch["c"]
+        return 0.5 * jnp.mean(jnp.sum(diff**2, axis=-1))
+
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        return {"c": rng.standard_normal((n, T, b, dim)).astype(np.float32)}
+
+    return loss_fn, next_batch, {"x": jnp.ones((dim,))}
+
+
+def test_no_retrace_under_correlated_channel():
+    """Joint (adj, p) sampling is still value-only traffic into the compiled
+    step: trace_count stays 1 across correlated epochs."""
+    n = 6
+    loss_fn, next_batch, params = _quad_setting(n)
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                      local_steps=2)
+    sched = channels.CorrelatedChannel(
+        topology.ring(n, 2), np.linspace(0.2, 0.9, n),
+        corr_length=0.4, hold=2, seed=5,
+    )
+    pol = channels.AdaptiveOptAlpha(sweeps=15, warm_sweeps=6)
+    run_rounds_loop(
+        sim, jax.random.key(0), params, sim.init_server_state(params),
+        schedule=sched, rounds=10, next_batch=next_batch, lr=0.1, policy=pol,
+    )
+    assert sim.trace_count == 1
+
+
+def test_scan_bit_identical_to_loop_under_correlated_channel():
+    """The tentpole contract: the epoch-segmented scan engine reproduces the
+    per-round reference bit-for-bit when (adj, p) are jointly sampled."""
+    n, rounds = 6, 17
+    loss_fn, _, params0 = _quad_setting(n, seed=7)
+
+    def make_schedule():
+        return channels.CorrelatedChannel(
+            topology.ring(n, 2), np.linspace(0.25, 0.9, n),
+            corr_length=0.5, hold=3, rho=0.7, seed=13,
+        )
+
+    runs = {}
+    for engine_name in ("loop", "scan"):
+        rng = np.random.default_rng(21)
+
+        def next_batch():
+            return {"c": rng.standard_normal((n, 2, 4, 4)).astype(np.float32)}
+
+        sim = FLSimulator(
+            loss_fn, n_clients=n, strategy="colrel_fused", local_steps=2,
+            server_opt=ServerOpt(momentum=0.5),
+        )
+        policy = channels.AdaptiveOptAlpha(sweeps=15, warm_sweeps=6)
+        ss = sim.init_server_state(params0)
+        key = jax.random.key(9)
+        if engine_name == "loop":
+            out = run_rounds_loop(
+                sim, key, params0, ss, schedule=make_schedule(),
+                rounds=rounds, next_batch=next_batch, lr=0.1, policy=policy)
+        else:
+            eng = EpochScanEngine(sim, chunk=3)
+            out = eng.run_schedule(
+                key, params0, ss, schedule=make_schedule(), rounds=rounds,
+                next_batch=next_batch, lr=0.1, policy=policy)
+            assert eng.trace_count <= 2
+        runs[engine_name] = out
+
+    (lp, ls, lm, lk), (sp, ss_, sm, sk) = runs["loop"], runs["scan"]
+    for a, b in zip(jax.tree.leaves((lp, ls, lm)),
+                    jax.tree.leaves((sp, ss_, sm))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(jax.random.key_data(lk), jax.random.key_data(sk))

@@ -133,3 +133,11 @@ def test_exact_solver_reaches_the_same_optimum():
     rx = opt_alpha.optimize(p, adj, sweeps=60, method="exact")
     assert np.isclose(opt_alpha.variance_proxy(p, rb.A),
                       opt_alpha.variance_proxy(p, rx.A), rtol=1e-8)
+
+
+def test_unknown_column_solver_rejected_fast():
+    import pytest
+
+    p, adj = _setting()
+    with pytest.raises(ValueError, match="unknown column solver"):
+        opt_alpha.optimize(p, adj, sweeps=1, method="exat")

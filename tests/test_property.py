@@ -68,6 +68,79 @@ def test_S_convexity_along_segments(setting):
         assert s_mid <= bound + 1e-8 * max(1.0, bound)
 
 
+@st.composite
+def masked_setting(draw):
+    """Random (p, adj, active) draw: a channel plus a churn mask with at
+    least one live client."""
+    n = draw(st.integers(3, MAX_N))
+    p = np.asarray(draw(st.lists(
+        st.floats(0.05, 0.95), min_size=n, max_size=n)))
+    kind = draw(st.sampled_from(["ring", "fct", "er", "clusters"]))
+    if kind == "ring":
+        adj = topology.ring(n, draw(st.integers(1, max(1, n // 2 - 1))))
+    elif kind == "fct":
+        adj = topology.fully_connected(n)
+    elif kind == "er":
+        adj = topology.erdos_renyi(
+            n, draw(st.floats(0.1, 0.9)), seed=draw(st.integers(0, 100)))
+    else:
+        adj = topology.clusters(n, draw(st.integers(1, 3)))
+    active = np.asarray(draw(st.lists(
+        st.booleans(), min_size=n, max_size=n)))
+    if not active.any():
+        active[draw(st.integers(0, n - 1))] = True
+    return p, adj, active
+
+
+@given(masked_setting())
+@settings(max_examples=25, deadline=None)
+def test_exact_solver_agrees_with_bisection_on_masked_draws(setting):
+    """The closed-form piecewise-linear λ solve vs the paper's bisection on
+    random (p, adj, active) draws: identical column solutions on identical
+    input, and the same reached optimum S — to 1e-8.  (The full matrices may
+    differ when the optimum is non-unique; the minimum value never does.)"""
+    p, adj, active = setting
+    adj_m = adj & active[:, None] & active[None, :]
+    p_eff = np.where(active, p, 0.0)
+    m = topology.closed_mask(adj_m) & active[:, None] & active[None, :]
+    A0 = opt_alpha.initial_weights(p_eff, adj_m)
+    for i in np.nonzero(active)[0]:
+        beta = A0.sum(axis=1) - A0[:, i]
+        col_b, ok_b, _ = opt_alpha.solve_column(
+            p_eff, m[:, i], beta, method="bisect")
+        col_x, ok_x, _ = opt_alpha.solve_column(
+            p_eff, m[:, i], beta, method="exact")
+        assert ok_b == ok_x
+        assert np.max(np.abs(col_b - col_x)) < 1e-8
+    rb = opt_alpha.optimize_masked(p, adj, active, sweeps=25, method="bisect")
+    rx = opt_alpha.optimize_masked(p, adj, active, sweeps=25, method="exact")
+    S_b = opt_alpha.variance_proxy(p_eff, rb.A)
+    S_x = opt_alpha.variance_proxy(p_eff, rx.A)
+    assert abs(S_b - S_x) <= 1e-8 * max(1.0, S_b)
+
+
+@given(masked_setting())
+@settings(max_examples=25, deadline=None)
+def test_masked_relay_weights_unbiased_and_on_support(setting):
+    """Under a random churn mask the masked OPT-α weights keep every ColRel
+    invariant: nonnegative, exactly zero on departed rows/columns, supported
+    on the live closed neighborhoods, and unbiased in expectation over the
+    live set — each feasible origin's update carries total expected mass 1
+    (Lemma 1, the column-wise stochasticity the PS relies on)."""
+    p, adj, active = setting
+    res = opt_alpha.optimize_masked(p, adj, active, sweeps=25)
+    A = res.A
+    assert (A >= -1e-10).all()
+    assert np.all(A[~active, :] == 0.0)
+    assert np.all(A[:, ~active] == 0.0)
+    adj_m = adj & active[:, None] & active[None, :]
+    assert relay.neighbor_support(A, adj_m)
+    p_eff = np.where(active, p, 0.0)
+    cols = active & res.feasible_columns
+    if cols.any():
+        np.testing.assert_allclose((p_eff @ A)[cols], 1.0, atol=1e-7)
+
+
 @given(
     st.integers(3, 10),
     st.integers(0, 10_000),
