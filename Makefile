@@ -3,7 +3,7 @@
 PY ?= python
 PYTEST = PYTHONPATH=src $(PY) -m pytest
 
-.PHONY: test test-fast test-cov test-all bench bench-smoke lint
+.PHONY: test test-fast test-cov test-all bench bench-smoke lint docs-check
 
 test:
 	$(PYTEST) -x -q
@@ -14,9 +14,11 @@ test-fast:
 # test-fast plus the coverage gate (CI's test-fast job): measured over
 # src/repro per .coveragerc, failing below the checked-in floor.  The floor
 # is a ratchet — raise it as coverage grows, never lower it to make CI pass.
+# 78 = the measured fast-suite line coverage (~83%) minus a 5-point margin
+# (replacing the placeholder 60 it launched with).
 test-cov:
 	$(PYTEST) -x -q -m "not slow" --cov --cov-config=.coveragerc \
-	  --cov-report=term --cov-fail-under=60
+	  --cov-report=term --cov-fail-under=78
 
 # full suite without -x: runs past the known-failing slow convergence
 # bounds so regressions in later files stay visible
@@ -38,4 +40,12 @@ bench-smoke:
 
 lint:
 	ruff check .
-	ruff format --check src/repro/bench src/repro/channels tests/test_bench.py
+	ruff format --check src/repro/bench src/repro/channels src/repro/fl \
+	  tests/test_bench.py tests/test_pipelined_engine.py
+
+# spot-check the docs against the live code: runs the --list snippets
+# embedded in docs/benchmarks.md / docs/architecture.md and verifies every
+# scenario the docs reference still exists in the registry
+docs-check:
+	PYTHONPATH=src $(PY) tools/check_docs.py docs/benchmarks.md \
+	  docs/architecture.md

@@ -28,7 +28,7 @@ from repro.core.aggregation import ServerOpt
 from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition
 from repro.data.synthetic import cifar_like
-from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
 from repro.fl.simulator import FLSimulator
 from repro.optim.sgd import ClientOpt
 
@@ -96,13 +96,16 @@ def run(rounds: int = 30, model: str = "mlp", n: int = 10,
             return loader.round_batch(local_steps, local_batch)
 
         t0 = time.time()
-        if engine == "scan":
+        if engine in ("scan", "pipelined"):
             # epoch-fused paper-scale path: one lax.scan per channel epoch,
             # bit-identical to the loop; accuracy sampled at epoch boundaries.
             # chunk matches the ~2-round coherence time (adj_every=2): a
             # padded chunk computes `chunk` rounds regardless, so chunk >>
             # epoch length would burn compute on masked-out rounds.
-            eng = EpochScanEngine(sim, chunk=2)
+            # "pipelined" additionally fuses the τ draw into the chunk and
+            # overlaps OPT-α/batch staging with device compute.
+            cls = EpochScanEngine if engine == "scan" else PipelinedScanEngine
+            eng = cls(sim, chunk=2)
 
             def on_segment(seg, params_, _metrics):
                 accs.append((seg.start_round + seg.n_rounds - 1,
@@ -143,8 +146,10 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=100)
-    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
-                    help="per-round reference loop or the epoch-fused "
-                         "lax.scan engine (paper-scale horizons)")
+    ap.add_argument("--engine", default="loop",
+                    choices=["loop", "scan", "pipelined"],
+                    help="per-round reference loop, the epoch-fused "
+                         "lax.scan engine, or the pipelined engine "
+                         "(τ-fused chunks + prefetched host work)")
     a = ap.parse_args()
     run(rounds=a.rounds, engine=a.engine)

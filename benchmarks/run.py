@@ -38,12 +38,17 @@ def run_bench_scenarios(names: list[str], out_dir: str = ".") -> None:
         path = report_lib.write_report(rep, out_dir)
         for eng, run in sorted(rep["engines"].items()):
             us = 1e6 * run["wall_s"] / spec.rounds
-            print(f"bench/{name}/{eng},{us:.0f},"
-                  f"rounds_per_sec={run['rounds_per_sec']:.1f};"
-                  f"trace_count={run['trace_count']};"
-                  f"dispatches={run['dispatches']}")
-        print(f"bench/{name}/summary,0,"
-              f"speedup={rep['speedup_rounds_per_sec']:.2f}x;"
+            row = (f"bench/{name}/{eng},{us:.0f},"
+                   f"rounds_per_sec={run['rounds_per_sec']:.1f};"
+                   f"trace_count={run['trace_count']};"
+                   f"dispatches={run['dispatches']}")
+            if run.get("overlap_fraction") is not None:
+                row += f";overlap_fraction={run['overlap_fraction']:.2f}"
+            print(row)
+        speedups = ";".join(
+            f"speedup_{eng}={ratio:.2f}x"
+            for eng, ratio in sorted((rep.get("speedups_vs_loop") or {}).items()))
+        print(f"bench/{name}/summary,0,{speedups};"
               f"bitwise_match={rep['bitwise_match']};report={path}")
 
 
@@ -52,8 +57,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale rounds (slow on CPU)")
     ap.add_argument("--model", default="mlp", choices=["mlp", "resnet20"])
-    ap.add_argument("--engine", default="loop", choices=["loop", "scan"],
-                    help="round engine for figs 5/6 (scan = epoch-fused)")
+    ap.add_argument("--engine", default="loop",
+                    choices=["loop", "scan", "pipelined"],
+                    help="round engine for figs 5/6/corr (scan = "
+                         "epoch-fused, pipelined = τ-fused chunks + "
+                         "prefetched host work)")
     ap.add_argument("--skip-figures", action="store_true")
     ap.add_argument("--list", action="store_true",
                     help="list figure benchmarks and registered bench "

@@ -1,4 +1,4 @@
-"""Timing harness: one scenario, both engines, cold + warm runs.
+"""Timing harness: one scenario, every engine, cold + warm runs.
 
 Per engine the harness runs the scenario twice on one simulator instance:
 the **cold** run pays tracing + XLA compilation, the **warm** run is
@@ -6,22 +6,30 @@ steady-state throughput.  Reported quantities:
 
   wall_s          warm-run wall clock for all ``spec.rounds`` rounds
   compile_s       cold wall minus warm wall (the one-time tracing+compile
-                  cost the scan engine amortizes over the whole horizon)
+                  cost the scan engines amortize over the whole horizon)
   rounds_per_sec  spec.rounds / wall_s — the headline engine throughput
   trace_count     compiles observed across both runs (the no-retrace
-                  invariant: 1 for the loop step, ≤ 2 for the scan engine)
+                  invariant: 1 for the loop step, ≤ 2 for the scan engines)
+
+The ``pipelined`` engine additionally reports its host/device overlap
+(warm run): ``host_prep_s`` (worker-thread staging time), ``host_wait_s``
+(how long the consumer actually blocked on staged work) and
+``overlap_fraction = 1 - wait/prep`` — the share of host work hidden
+behind device execution.
 
 Fairness: the per-round batch stream is pre-generated once (host numpy) and
 replayed identically to every run of every engine, and each run builds a
-fresh schedule / policy / loader from the same seeds — so both engines
+fresh schedule / policy / loader from the same seeds — so all engines
 consume bit-identical data, τ randomness and relay matrices, and the harness
 can (and does) assert their final parameters match bit-for-bit.
 
 ``spec.step = "mesh"`` swaps the execution path under measurement: instead
 of ``FLSimulator`` / :class:`EpochScanEngine`, the engines are the
-production mesh round steps — per-round :func:`build_round_step` ("loop")
-vs one :func:`build_scan_round_step` dispatch per channel epoch ("scan").
-Same fairness contract, same bitwise assertion.
+production mesh round steps — per-round :func:`build_round_step` ("loop"),
+one :func:`build_scan_round_step` dispatch per channel epoch ("scan"), or
+one τ-fused :func:`build_fused_scan_round_step` dispatch per epoch with the
+host side prefetched ("pipelined").  Same fairness contract, same bitwise
+assertion.
 """
 from __future__ import annotations
 
@@ -33,9 +41,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.bench.scenarios import ScenarioBundle, ScenarioSpec, build
+from repro.channels.scheduler import SegmentPrefetcher
 from repro.core.aggregation import ServerOpt
-from repro.fl.distributed import build_round_step, build_scan_round_step
-from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.fl.distributed import (
+    build_fused_scan_round_step,
+    build_round_step,
+    build_scan_round_step,
+)
+from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
 from repro.optim.sgd import ClientOpt
 
 
@@ -44,8 +57,14 @@ class EngineRun:
     """One engine's measurements on one scenario.
 
     ``dispatches`` counts compiled round-engine calls only (loop: one step
-    call per round; scan: one chunk scan per ⌈len/chunk⌉ per epoch) —
-    τ-sampling calls and H2D transfers are excluded on both sides.
+    call per round; scan: one chunk scan per ⌈len/chunk⌉ per epoch;
+    pipelined: identical chunk count, but each dispatch also covers the τ
+    draws) — separate τ-sampling calls and H2D transfers are excluded on
+    all sides.
+
+    The ``host_*`` / ``overlap_fraction`` fields are the pipelined engine's
+    prefetcher measurements (warm run); ``None`` for engines without a
+    prefetcher.
     """
 
     engine: str
@@ -55,6 +74,9 @@ class EngineRun:
     trace_count: int
     dispatches: int
     final_loss: float
+    overlap_fraction: float | None = None
+    host_prep_s: float | None = None
+    host_wait_s: float | None = None
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -77,12 +99,13 @@ def _run_once(bundle: ScenarioBundle, engine, batches: list):
     schedule = bundle.make_schedule()
     policy = bundle.make_policy()
     params = bundle.init_fn(jax.random.key(spec.seed))
-    sim = engine.sim if isinstance(engine, EpochScanEngine) else engine
+    fused = isinstance(engine, (EpochScanEngine, PipelinedScanEngine))
+    sim = engine.sim if fused else engine
     server_state = sim.init_server_state(params)
     key = jax.random.key(spec.seed + 1)
     stream = iter(batches)
     t0 = time.perf_counter()
-    if isinstance(engine, EpochScanEngine):
+    if fused:
         params, server_state, metrics, _ = engine.run_schedule(
             key,
             params,
@@ -126,6 +149,7 @@ class _MeshStep:
         )
         round_fn = build_round_step(bundle.loss_fn, **kw)
         scan_fn = build_scan_round_step(bundle.loss_fn, **kw)
+        fused_fn = build_fused_scan_round_step(bundle.loss_fn, **kw)
 
         def counted_round(params, ss, batch, tau, lr, A):
             self.trace_count += 1
@@ -135,15 +159,23 @@ class _MeshStep:
             self.trace_count += 1
             return scan_fn(params, ss, batches, taus, lr, A)
 
+        def counted_fused(key, params, ss, batches, p, lr, A):
+            self.trace_count += 1
+            return fused_fn(key, params, ss, batches, p, lr, A)
+
         self.round = jax.jit(counted_round)
         self.scan = jax.jit(counted_scan)
+        self.fused = jax.jit(counted_fused)
 
 
 def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: list):
-    """One full mesh-path pass; returns (wall_s, losses, params).  Walks
-    ``schedule.segments()`` exactly like ``EpochScanEngine.run_schedule``:
-    one OPT-α solve and one τ block per epoch, with the τ key chain advanced
-    once per round so loop and scan consume identical randomness."""
+    """One full mesh-path pass; returns (wall_s, losses, params, n_segments,
+    prefetch_stats).  Walks ``schedule.segments()`` exactly like
+    ``EpochScanEngine.run_schedule``: one OPT-α solve and one τ block per
+    epoch, with the τ key chain advanced once per round so every engine
+    consumes identical randomness.  The ``pipelined`` engine stages whole
+    segments through a :class:`SegmentPrefetcher` and dispatches the τ-fused
+    epoch scan — the key chain advances on device, identically."""
     spec = bundle.spec
     schedule = bundle.make_schedule()
     policy = bundle.make_policy()
@@ -155,48 +187,82 @@ def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: 
     stream = iter(batches)
     losses = []
     n_segments = 0
+    prefetch_stats = None
     t0 = time.perf_counter()
-    for seg in schedule.segments(spec.rounds):
-        if seg.active is not None:
-            raise ValueError("mesh bench path does not drive churn masks")
-        n_segments += 1
-        A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
-        p = jnp.asarray(seg.p, jnp.float32)
-        taus = []
-        for _ in range(seg.n_rounds):
-            key, sub = jax.random.split(key)
-            taus.append(jax.random.bernoulli(sub, p).astype(jnp.float32))
-        seg_batches = [next(stream) for _ in range(seg.n_rounds)]
-        if name == "loop":
-            for r in range(seg.n_rounds):
-                batch = jax.tree.map(jnp.asarray, seg_batches[r])
-                params, server_state, loss = step.round(
-                    params, server_state, batch, taus[r], spec.lr, A
+    if name == "pipelined":
+        # chunk=spec.rounds ⇒ one staged item per segment: the mesh scan
+        # path dispatches whole epochs, so the pipelined variant must too
+        # for the dispatch counts to be comparable
+        prefetcher = SegmentPrefetcher(
+            schedule,
+            spec.rounds,
+            chunk=spec.rounds,
+            next_batch=lambda: next(stream),
+            policy=policy,
+        )
+        try:
+            for item in prefetcher:
+                seg = item.segment
+                if seg.active is not None:
+                    raise ValueError("mesh bench path does not drive churn masks")
+                n_segments += 1
+                A = jnp.asarray(item.A, jnp.float32)
+                p = jnp.asarray(seg.p, jnp.float32)
+                # item.batches is already device-resident (staged transfer)
+                key, params, server_state, seg_losses = step.fused(
+                    key, params, server_state, item.batches, p, spec.lr, A
                 )
-                # the per-round host sync every loop driver models (see
-                # run_rounds_loop) — without it async dispatch pipelines the
-                # round calls and the loop baseline measures the wrong thing
-                losses.append(float(loss))
-        else:
-            stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *seg_batches)
-            params, server_state, seg_losses = step.scan(
-                params, server_state, stacked, jnp.stack(taus), spec.lr, A
-            )
-            losses.append(seg_losses)
+                prefetcher.note_inflight(seg_losses)
+                losses.append(seg_losses)
+        finally:
+            prefetcher.close()
+        prefetch_stats = prefetcher.stats
+    else:
+        for seg in schedule.segments(spec.rounds):
+            if seg.active is not None:
+                raise ValueError("mesh bench path does not drive churn masks")
+            n_segments += 1
+            A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
+            p = jnp.asarray(seg.p, jnp.float32)
+            taus = []
+            for _ in range(seg.n_rounds):
+                key, sub = jax.random.split(key)
+                taus.append(jax.random.bernoulli(sub, p).astype(jnp.float32))
+            seg_batches = [next(stream) for _ in range(seg.n_rounds)]
+            if name == "loop":
+                for r in range(seg.n_rounds):
+                    batch = jax.tree.map(jnp.asarray, seg_batches[r])
+                    params, server_state, loss = step.round(
+                        params, server_state, batch, taus[r], spec.lr, A
+                    )
+                    # the per-round host sync every loop driver models (see
+                    # run_rounds_loop) — without it async dispatch pipelines
+                    # the round calls and the loop baseline measures the
+                    # wrong thing
+                    losses.append(float(loss))
+            else:
+                stacked = jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(xs)), *seg_batches
+                )
+                params, server_state, seg_losses = step.scan(
+                    params, server_state, stacked, jnp.stack(taus), spec.lr, A
+                )
+                losses.append(seg_losses)
     jax.block_until_ready(params)
     wall = time.perf_counter() - t0
     losses = jnp.asarray(losses) if name == "loop" else jnp.concatenate(losses)
-    return wall, losses, params, n_segments
+    return wall, losses, params, n_segments, prefetch_stats
 
 
 def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list):
     """Cold + warm mesh-path pass; mirrors :func:`run_engine`."""
     spec = bundle.spec
-    if name not in ("loop", "scan"):
+    if name not in ("loop", "scan", "pipelined"):
         raise ValueError(f"unknown engine: {name!r}")
     step = _MeshStep(bundle)
-    cold_s, _, _, _ = _run_mesh_once(bundle, step, name, batches)
-    warm_s, losses, params, n_segments = _run_mesh_once(bundle, step, name, batches)
+    cold_s, _, _, _, _ = _run_mesh_once(bundle, step, name, batches)
+    warm = _run_mesh_once(bundle, step, name, batches)
+    warm_s, losses, params, n_segments, overlap = warm
     dispatches = spec.rounds if name == "loop" else n_segments
     run = EngineRun(
         engine=name,
@@ -206,6 +272,9 @@ def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list):
         trace_count=step.trace_count,
         dispatches=dispatches,
         final_loss=float(losses[-1]),
+        overlap_fraction=None if overlap is None else overlap.overlap_fraction,
+        host_prep_s=None if overlap is None else overlap.prep_s,
+        host_wait_s=None if overlap is None else overlap.wait_s,
     )
     return run, params
 
@@ -218,8 +287,9 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list):
     if spec.step != "sim":
         raise ValueError(f"unknown step: {spec.step!r}")
     sim = bundle.make_sim()
-    if name == "scan":
-        engine = EpochScanEngine(sim, chunk=spec.chunk)
+    if name in ("scan", "pipelined"):
+        cls = EpochScanEngine if name == "scan" else PipelinedScanEngine
+        engine = cls(sim, chunk=spec.chunk)
         dispatches = sum(
             -(-seg.n_rounds // spec.chunk)
             for seg in bundle.make_schedule().segments(spec.rounds)
@@ -231,11 +301,8 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list):
         raise ValueError(f"unknown engine: {name!r}")
     cold_s, _, _ = _run_once(bundle, engine, batches)
     warm_s, metrics, params = _run_once(bundle, engine, batches)
-    trace_count = (
-        engine.trace_count
-        if isinstance(engine, EpochScanEngine)
-        else sim.trace_count
-    )
+    trace_count = engine.trace_count  # engine == sim on the loop path
+    overlap = getattr(engine, "prefetch_stats", None)  # warm run's stats
     run = EngineRun(
         engine=name,
         wall_s=warm_s,
@@ -244,6 +311,9 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list):
         trace_count=trace_count,
         dispatches=dispatches,
         final_loss=float(metrics["loss"][-1]),
+        overlap_fraction=None if overlap is None else overlap.overlap_fraction,
+        host_prep_s=None if overlap is None else overlap.prep_s,
+        host_wait_s=None if overlap is None else overlap.wait_s,
     )
     return run, params
 
@@ -251,17 +321,19 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list):
 def run_scenario(
     spec: ScenarioSpec | str,
     *,
-    engines=("loop", "scan"),
+    engines=("loop", "scan", "pipelined"),
     check_bitwise: bool = True,
 ) -> dict:
     """Run ``spec`` under every engine; returns
     ``{"runs": {name: EngineRun}, "speedup": float | None,
-    "bitwise_match": bool | None}``.
+    "speedups": {name: float}, "bitwise_match": bool | None}``.
 
-    ``speedup`` is scan rounds/sec over loop rounds/sec (None unless both
-    ran).  ``bitwise_match`` asserts the engines' final parameters are
-    bit-identical — a benchmark whose fast path diverges from the reference
-    is measuring the wrong thing, so a mismatch raises.
+    ``speedups[name]`` is that engine's rounds/sec over the loop's (absent
+    unless the loop ran); ``speedup`` remains the scan/loop headline for
+    schema continuity.  ``bitwise_match`` asserts every fused engine's final
+    parameters are bit-identical to the per-round reference — a benchmark
+    whose fast path diverges from the reference is measuring the wrong
+    thing, so a mismatch raises.
     """
     if isinstance(spec, str):
         from repro.bench.scenarios import get_scenario
@@ -273,20 +345,33 @@ def run_scenario(
     finals = {}
     for name in engines:
         runs[name], finals[name] = run_engine(bundle, name, batches)
-    speedup = None
-    if "loop" in runs and "scan" in runs:
-        speedup = runs["scan"].rounds_per_sec / runs["loop"].rounds_per_sec
+    speedups = {}
+    if "loop" in runs:
+        speedups = {
+            name: runs[name].rounds_per_sec / runs["loop"].rounds_per_sec
+            for name in runs
+            if name != "loop"
+        }
+    speedup = speedups.get("scan")
     bitwise = None
-    if check_bitwise and "loop" in runs and "scan" in runs:
+    if check_bitwise and "loop" in runs and len(runs) > 1:
         leaves_l = jax.tree.leaves(finals["loop"])
-        leaves_s = jax.tree.leaves(finals["scan"])
-        bitwise = all(
-            np.array_equal(np.asarray(a), np.asarray(b))
-            for a, b in zip(leaves_l, leaves_s)
-        )
-        if not bitwise:
-            raise AssertionError(
-                f"{spec.name}: scan engine diverged bitwise from the "
-                "per-round reference"
+        for name, final in finals.items():
+            if name == "loop":
+                continue
+            leaves_e = jax.tree.leaves(final)
+            bitwise = len(leaves_l) == len(leaves_e) and all(
+                np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(leaves_l, leaves_e)
             )
-    return {"runs": runs, "speedup": speedup, "bitwise_match": bitwise}
+            if not bitwise:
+                raise AssertionError(
+                    f"{spec.name}: {name} engine diverged bitwise from the "
+                    "per-round reference"
+                )
+    return {
+        "runs": runs,
+        "speedup": speedup,
+        "speedups": speedups,
+        "bitwise_match": bitwise,
+    }

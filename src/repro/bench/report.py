@@ -12,12 +12,20 @@ Report schema (``schema_version`` 1)::
       "spec": { ...ScenarioSpec fields... },
       "engines": {
         "loop": {"wall_s": ..., "compile_s": ..., "rounds_per_sec": ...,
-                 "trace_count": ..., "dispatches": ..., "final_loss": ...},
-        "scan": { ... }
+                 "trace_count": ..., "dispatches": ..., "final_loss": ...,
+                 "overlap_fraction": null, "host_prep_s": null,
+                 "host_wait_s": null},
+        "scan": { ... },
+        "pipelined": { ...incl. the measured overlap metrics... }
       },
       "speedup_rounds_per_sec": 6.2,
+      "speedups_vs_loop": {"scan": 6.2, "pipelined": 7.4},
       "bitwise_match": true
     }
+
+The overlap metrics and ``speedups_vs_loop`` are additive v1 fields (older
+readers ignore them; older reports read back with them absent) — see
+``docs/benchmarks.md`` for the field-by-field reading guide.
 
 The gate (:func:`check_regression`) compares per-engine ``rounds_per_sec``
 against a checked-in baseline report and fails when throughput regresses by
@@ -55,6 +63,7 @@ def make_report(spec: ScenarioSpec, result: dict) -> dict:
         "spec": dataclasses.asdict(spec),
         "engines": {name: run.as_dict() for name, run in runs.items()},
         "speedup_rounds_per_sec": result["speedup"],
+        "speedups_vs_loop": result.get("speedups", {}),
         "bitwise_match": result["bitwise_match"],
     }
 

@@ -29,12 +29,25 @@ def format_scenario_line(spec) -> str:
 def format_summary(rep: dict) -> str:
     lines = [f"scenario {rep['scenario']}: {rep['description']}"]
     for name, run in sorted(rep["engines"].items()):
-        lines.append(
-            f"  {name:>4}: {run['rounds_per_sec']:>8.1f} rounds/s  "
+        line = (
+            f"  {name:>9}: {run['rounds_per_sec']:>8.1f} rounds/s  "
             f"wall {run['wall_s']:.3f}s  compile {run['compile_s']:.3f}s  "
             f"traces {run['trace_count']}  dispatches {run['dispatches']}"
         )
-    if rep.get("speedup_rounds_per_sec"):
+        if run.get("overlap_fraction") is not None:
+            line += (
+                f"  overlap {run['overlap_fraction']:.0%} "
+                f"(prep {run['host_prep_s']:.3f}s, "
+                f"wait {run['host_wait_s']:.3f}s)"
+            )
+        lines.append(line)
+    speedups = rep.get("speedups_vs_loop") or {}
+    if speedups:
+        pairs = "  ".join(
+            f"{name}/loop {ratio:.2f}x" for name, ratio in sorted(speedups.items())
+        )
+        lines.append(f"  speedups: {pairs}  (bitwise_match={rep['bitwise_match']})")
+    elif rep.get("speedup_rounds_per_sec"):
         lines.append(
             f"  scan/loop speedup: {rep['speedup_rounds_per_sec']:.2f}x  "
             f"(bitwise_match={rep['bitwise_match']})"
@@ -60,8 +73,8 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--engines",
-        default="loop,scan",
-        help="comma-separated engines to run (loop, scan)",
+        default="loop,scan,pipelined",
+        help="comma-separated engines to run (loop, scan, pipelined)",
     )
     ap.add_argument(
         "--out-dir",

@@ -14,6 +14,10 @@ The registered scenarios:
                   25-round coherence time (the Fig. 5 channel at paper-scale
                   horizon, bench-scale model so the engine — not the matmul —
                   is what's measured)
+  fig5_chunk5 / fig5_chunk125
+                  chunk-size-vs-coherence-time sweep around fig5_500's
+                  matched chunk=25: under-chunked (5, dispatch-bound) and
+                  over-chunked (125, padding-bound)
   fig6_500        fig5_500 plus rotating-cohort churn over the padded client
                   dimension (the Fig. 6 setting)
   static_500      single-epoch control: the seed paper's static channel,
@@ -110,9 +114,7 @@ class ScenarioSpec:
             # recorded in the report but not what was measured
             raise ValueError("mesh scenarios bench the fused relay only")
         if self.fading == "corr_uplink" and self.drift != "static":
-            raise ValueError(
-                "corr_uplink couples p to the fade; set drift='static'"
-            )
+            raise ValueError("corr_uplink couples p to the fade; set drift='static'")
 
 
 def _make_mlp(dim: int, width: int, n_classes: int):
@@ -310,7 +312,7 @@ register(
     )
 )
 
-register(
+_FIG5_500 = register(
     ScenarioSpec(
         name="fig5_500",
         description=(
@@ -331,6 +333,26 @@ register(
         chunk=25,
     )
 )
+
+# chunk-size vs coherence-time sweep: the fig5 channel holds (adj, p) for 25
+# rounds, so chunk=25 is the matched point (== fig5_500).  chunk=5 splits
+# every epoch into 5 dispatches (dispatch-bound again); chunk=125 pads every
+# 25-round epoch to 125 scanned rounds — 5x dead compute per chunk.  The
+# recorded trio quantifies the "chunk should track the coherence time" rule
+# from the engine docstrings (see docs/benchmarks.md).
+for _chunk in (5, 125):
+    register(
+        dataclasses.replace(
+            _FIG5_500,
+            name=f"fig5_chunk{_chunk}",
+            description=(
+                f"chunk sweep: the fig5_500 channel (25-round coherence) "
+                f"run at chunk={_chunk} "
+                f"({'dispatch-bound' if _chunk < 25 else 'padding-bound'})"
+            ),
+            chunk=_chunk,
+        )
+    )
 
 register(
     ScenarioSpec(

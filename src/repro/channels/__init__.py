@@ -48,6 +48,20 @@ subsystem is three layers, consumed in order every round:
    channel-oblivious ablation (round-0 A forever, projected onto the live
    topology and membership).
 
+4. **Prefetching** (`scheduler`) — the host half of the pipelined execution
+   path.  :class:`SegmentPrefetcher` walks ``segments()``, resolves the
+   relay matrix once per segment and stages per-chunk batch stacks
+   (:class:`StagedChunk` items), so the OPT-α re-solve and data staging for
+   epoch k+1 overlap the device's in-flight chunk of epoch k
+   (:class:`repro.fl.engine.PipelinedScanEngine` is the consumer).  Two
+   modes: by default staging runs *inline* right after the previous chunk's
+   async dispatch (double buffering with no second thread); with
+   ``threaded=True`` a worker thread fills a bounded queue instead.  Either
+   way schedule/policy/batches are touched in the serial driver's exact
+   order, so the staged stream — and therefore the training trajectory —
+   is bit-identical to unpipelined execution; :class:`PrefetchStats`
+   reports the measured host/device overlap.
+
 Lifecycle per round::
 
     state = schedule.next_round()            # (adj, p, active, epoch_id)
@@ -55,7 +69,9 @@ Lifecycle per round::
     sim.run_round(key, ..., A=A, p=state.p, active=state.active)
 
 The simulator's ``trace_count`` stays at 1 across epochs *and* membership
-changes: A, p and the mask are values, never shapes.
+changes: A, p and the mask are values, never shapes.  The dataflow from
+here to the compiled round engines (and the dispatch-timeline picture) is
+narrated in ``docs/architecture.md``.
 """
 from repro.channels.churn import (
     ChurnSchedule,
@@ -87,7 +103,10 @@ from repro.channels.schedule import (
 )
 from repro.channels.scheduler import (
     AdaptiveOptAlpha,
+    PrefetchStats,
     SchedulerStats,
+    SegmentPrefetcher,
+    StagedChunk,
     StaleOptAlpha,
     project_to_support,
 )
@@ -103,12 +122,15 @@ __all__ = [
     "MarkovChurn",
     "MarkovLinkProcess",
     "PiecewiseConstantDrift",
+    "PrefetchStats",
     "RandomWalkDrift",
     "RandomWaypointMobility",
     "RotatingCohorts",
     "SchedulerStats",
+    "SegmentPrefetcher",
     "ShadowedLinkProcess",
     "ShadowingField",
+    "StagedChunk",
     "StaleOptAlpha",
     "StaticChannel",
     "StaticMembership",

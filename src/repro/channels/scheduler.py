@@ -15,16 +15,32 @@ realizable on the *current* graph (a down link carries nothing), stale
 matrices must be projected onto the live topology at use time —
 :func:`project_to_support` — which is exactly where the staleness penalty
 (lost mass ⇒ bias) comes from.
+
+``SegmentPrefetcher`` is the host side of the pipelined execution path
+(:class:`repro.fl.engine.PipelinedScanEngine`): it walks
+``ChannelSchedule.segments()``, solves the relay matrix per segment and
+stages per-chunk batch stacks, so that all host work for epoch k+1 (OPT-α
+re-solve, batch stacking, segment sampling) overlaps the device's
+in-flight chunk of epoch k instead of serializing with it.  Staging runs
+inline behind JAX's async dispatch by default (no extra thread), or on a
+background worker thread feeding a small bounded queue
+(``threaded=True``).
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import sys
+import threading
+import time
+import weakref
 from collections import OrderedDict
+from typing import Any, Callable
 
 import numpy as np
 
 from repro.core import opt_alpha, topology
-from repro.channels.schedule import ChannelState
+from repro.channels.schedule import ChannelSegment, ChannelState
 
 
 def project_to_support(
@@ -133,6 +149,323 @@ class AdaptiveOptAlpha:
             self._cache.popitem(last=False)
         self._last_A = res.A
         return res.A
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedChunk:
+    """One unit of prefetched work: at most ``chunk`` rounds of a single
+    channel segment, with everything the device dispatch needs already
+    materialized on the host.
+
+    ``segment`` is the *snapshot* the schedule emitted — ``ChannelSchedule.
+    _emit`` copies (adj, p, active), so a staged chunk can never observe a
+    post-dated field state even though the worker thread has advanced the
+    underlying channel processes several epochs past it (tested:
+    ``test_prefetched_segments_never_use_postdated_state``).
+    """
+
+    segment: ChannelSegment
+    A: np.ndarray | None  # the segment's relay matrix (None ⇒ no relaying)
+    batches: Any  # pytree, leaves stacked (n_rounds, ...), already on device
+    start: int  # offset of this chunk within the segment
+    n_rounds: int  # real rounds in this chunk (≤ chunk)
+    last_in_segment: bool
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Measured host/device overlap of one prefetched run.
+
+    ``prep_s`` is the total staging time (OPT-α solves, ``next_batch``
+    calls, stacking, the H2D transfer); ``wait_s`` is the part of it that
+    stayed on the consumer's critical path — in threaded mode, how long the
+    consumer actually blocked on the queue; in inline mode, staging time
+    during which the device had no dispatch in flight to hide it behind.
+    ``overlap_fraction = 1 - wait_s / prep_s`` (clamped to [0, 1]) is the
+    fraction of host work the pipeline removed from the critical path.  The
+    first chunk can never overlap (pipeline fill), so the fraction is < 1
+    even at perfect steady-state overlap.
+    """
+
+    chunks: int = 0
+    segments: int = 0
+    prep_s: float = 0.0
+    wait_s: float = 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        if self.prep_s <= 0.0:
+            return 0.0
+        return min(1.0, max(0.0, 1.0 - self.wait_s / self.prep_s))
+
+
+class _Failure:
+    """Worker-thread exception, re-raised on the consumer side."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_DONE = object()
+
+# Process-global, refcounted guard around the GIL switch interval: while any
+# threaded prefetcher is alive the interval is shortened once, and the saved
+# value is restored only when the last one closes — overlapping prefetchers
+# must not restore each other's setting mid-run or leave the shortened
+# interval behind.
+_fast_switch_lock = threading.Lock()
+_fast_switch_depth = 0
+_fast_switch_saved: float | None = None
+
+
+def _acquire_fast_switch_interval() -> None:
+    global _fast_switch_depth, _fast_switch_saved
+    with _fast_switch_lock:
+        if _fast_switch_depth == 0:
+            _fast_switch_saved = sys.getswitchinterval()
+            sys.setswitchinterval(min(_fast_switch_saved, 1e-3))
+        _fast_switch_depth += 1
+
+
+def _release_fast_switch_interval() -> None:
+    global _fast_switch_depth, _fast_switch_saved
+    with _fast_switch_lock:
+        if _fast_switch_depth == 0:
+            return
+        _fast_switch_depth -= 1
+        if _fast_switch_depth == 0 and _fast_switch_saved is not None:
+            sys.setswitchinterval(_fast_switch_saved)
+            _fast_switch_saved = None
+
+
+def _shutdown_worker(stop: threading.Event, q: queue.Queue, thread) -> None:
+    """Stop a threaded prefetcher's worker and restore the switch interval.
+
+    Module-level so ``weakref.finalize`` can hold it without keeping the
+    prefetcher alive: a threaded prefetcher that is abandoned un-iterated
+    (e.g. its consumer raised before the loop) must not leave a polling
+    daemon thread and a shortened GIL switch interval behind for the rest
+    of the process.  (The worker itself holds no reference to the
+    prefetcher either — see :func:`_worker_loop` — or the abandoned object
+    could never be collected and this finalizer would never fire.)
+    """
+    stop.set()
+    while True:  # unblock a worker stuck on a full queue
+        try:
+            q.get_nowait()
+        except queue.Empty:
+            break
+    try:
+        thread.join(timeout=5.0)
+    finally:
+        _release_fast_switch_interval()
+
+
+def _worker_loop(gen, stats: PrefetchStats, q: queue.Queue, stop: threading.Event):
+    """Threaded-mode staging loop (module-level: must not close over the
+    prefetcher, only over its long-lived pieces)."""
+
+    def put(item) -> bool:
+        # blocking put that aborts promptly when the consumer closed
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    try:
+        while True:
+            t0 = time.perf_counter()
+            try:
+                item = next(gen)
+            except StopIteration:
+                break
+            stats.prep_s += time.perf_counter() - t0
+            if not put(item):
+                return
+        put(_DONE)
+    except BaseException as exc:  # noqa: BLE001 — relayed to the consumer
+        put(_Failure(exc))
+
+
+def _staged_items(stats, schedule, rounds, chunk, next_batch, policy, pad_to_chunk):
+    """The staging stream both modes share (module-level: the generator's
+    frame must not pin the prefetcher — see :func:`_worker_loop`)."""
+    for seg in schedule.segments(rounds):
+        A = policy.relay_matrix(seg.state) if policy is not None else None
+        stats.segments += 1
+        for start in range(0, seg.n_rounds, chunk):
+            window = min(chunk, seg.n_rounds - start)
+            batches = [next_batch() for _ in range(window)]
+            pad = chunk - window if pad_to_chunk else 0
+            yield StagedChunk(
+                segment=seg,
+                A=A,
+                batches=_stack_staged(batches, pad),
+                start=start,
+                n_rounds=window,
+                last_in_segment=start + window >= seg.n_rounds,
+            )
+
+
+class SegmentPrefetcher:
+    """Double-buffered staging of per-chunk work items, in one of two modes.
+
+    Both modes walk ``schedule.segments(rounds)`` in order and, per segment,
+    (1) resolve the relay matrix once via ``policy.relay_matrix`` (the
+    adaptive OPT-α re-solve — the dominant host cost under fast-varying
+    channels), then (2) split the segment into ``chunk``-round windows,
+    drawing ``next_batch()`` once per round in round order, stacking the
+    window (optionally zero-padded to ``chunk``) and transferring it to the
+    device.  The staged stream (segments, relay matrices, warm-start chain,
+    batch stream) follows the serial driver's exact order in either mode, so
+    the training trajectory is bit-identical to inline execution.
+
+    **Inline mode** (``threaded=False``, the default) stages on demand from
+    the consuming thread: because JAX dispatch is asynchronous, the consumer
+    dispatches chunk k and immediately resumes this iterator, which stages
+    chunk k+1 *while the device executes chunk k* — software double
+    buffering with no second thread, no GIL contention, no handoff latency.
+    Overlap is measured directly: staging time during which the previous
+    dispatch was still in flight (``jax.Array.is_ready`` on the handle
+    passed to :meth:`note_inflight`) was hidden; the rest is ``wait_s``.
+
+    **Threaded mode** (``threaded=True``) runs staging on a worker thread
+    feeding a bounded queue of ``depth`` items (the worker blocks when it is
+    ``depth`` chunks ahead, bounding memory to ``depth + 1`` chunks).  This
+    buys true host/host parallelism — worth it when staging is dominated by
+    GIL-released native code and the backend is a real accelerator — at the
+    price of GIL handoffs with the dispatch thread, which on few-core CPU
+    hosts usually costs more than it hides.  The worker is the only thread
+    touching schedule/policy/batches; compiled dispatches stay on the
+    consumer thread.
+
+    Iterate to consume; call :meth:`close` (or exhaust the iterator) to shut
+    down.  Staging exceptions re-raise on the consumer side in both modes.
+    """
+
+    def __init__(
+        self,
+        schedule,
+        rounds: int,
+        *,
+        chunk: int,
+        next_batch: Callable[[], Any],
+        policy=None,
+        depth: int = 2,
+        pad_to_chunk: bool = False,
+        threaded: bool = False,
+    ):
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.stats = PrefetchStats()
+        self.threaded = bool(threaded)
+        self._inflight = None
+        self._gen = _staged_items(
+            self.stats,
+            schedule,
+            int(rounds),
+            int(chunk),
+            next_batch,
+            policy,
+            bool(pad_to_chunk),
+        )
+        self._thread = None
+        self._finalizer = None
+        if self.threaded:
+            self._queue: queue.Queue = queue.Queue(maxsize=depth)
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=_worker_loop,
+                args=(self._gen, self.stats, self._queue, self._stop),
+                daemon=True,
+            )
+            self._thread.start()
+            # While the worker is alive, shorten the interpreter's GIL
+            # switch interval: staging runs long GIL-holding numpy/python
+            # stretches, and at the default 5 ms the consumer thread can
+            # stall that long before it gets to enqueue the next device
+            # chunk.  1 ms bounds that dispatch latency; released by
+            # _shutdown_worker via a process-global refcount (acquired only
+            # after start() succeeded, so a failed __init__ cannot leak the
+            # shortened interval; the finalizer covers a consumer that
+            # abandons the prefetcher without closing it).
+            _acquire_fast_switch_interval()
+            self._finalizer = weakref.finalize(
+                self, _shutdown_worker, self._stop, self._queue, self._thread
+            )
+
+    def note_inflight(self, handle) -> None:
+        """Inline-mode overlap probe: the consumer passes any output array
+        of its latest dispatch; staging time that elapses while this handle
+        is not yet ready was hidden behind device execution."""
+        self._inflight = handle
+
+    # -------------------------------------------------- consumer thread side
+    def __iter__(self):
+        if self.threaded:
+            try:
+                while True:
+                    t0 = time.perf_counter()
+                    item = self._queue.get()
+                    self.stats.wait_s += time.perf_counter() - t0
+                    if item is _DONE:
+                        break
+                    if isinstance(item, _Failure):
+                        raise item.exc
+                    self.stats.chunks += 1
+                    yield item
+            finally:
+                self.close()
+            return
+        while True:
+            t0 = time.perf_counter()
+            try:
+                item = next(self._gen)
+            except StopIteration:
+                break
+            dt = time.perf_counter() - t0
+            self.stats.prep_s += dt
+            hidden = self._inflight is not None and not self._inflight.is_ready()
+            if not hidden:
+                self.stats.wait_s += dt
+            self.stats.chunks += 1
+            yield item
+
+    def close(self) -> None:
+        """Stop the worker and release the queue (idempotent; no-op in
+        inline mode).  Also runs via ``weakref.finalize`` if the prefetcher
+        is garbage-collected without an explicit close."""
+        if self._finalizer is not None:
+            self._finalizer()  # runs _shutdown_worker at most once
+            self._thread = None
+
+
+def _stack_staged(batches: list, pad: int) -> Any:
+    """Stack per-round batch pytrees along a new leading axis (zero-padding
+    ``pad`` dead rounds when asked) and move them to the device — all on the
+    worker thread, all in numpy until the final transfer.  Two reasons this
+    lives here and not on the consumer: the multi-MB memcpys happen in the
+    worker's largely GIL-released numpy stretches, and — decisive on the CPU
+    backend — ``jnp.asarray`` of a numpy array never blocks behind an
+    in-flight compiled computation, whereas *eager jnp ops* (a device-side
+    pad/concatenate) queue behind it and would stall the consumer for a full
+    chunk's compute time."""
+    import jax  # deferred: everything else in this package is jax-free
+    import jax.numpy as jnp
+
+    def leaf(*xs):
+        out = np.stack(xs)
+        if pad:
+            zeros = np.zeros((pad,) + out.shape[1:], out.dtype)
+            out = np.concatenate([out, zeros])
+        return jnp.asarray(out)
+
+    return jax.tree.map(leaf, *batches)
 
 
 class StaleOptAlpha:

@@ -1,4 +1,9 @@
-from repro.fl.engine import EpochScanEngine, run_rounds_loop
+from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
 from repro.fl.simulator import FLSimulator
 
-__all__ = ["EpochScanEngine", "FLSimulator", "run_rounds_loop"]
+__all__ = [
+    "EpochScanEngine",
+    "FLSimulator",
+    "PipelinedScanEngine",
+    "run_rounds_loop",
+]

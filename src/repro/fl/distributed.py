@@ -14,7 +14,11 @@ Two relay schedules compute the identical PS update (DESIGN.md §2):
     per-client full-parameter tensor ever exists.  Beyond-paper optimization.
 
 τ is sampled on the host per round and passed in — the step itself is
-deterministic and identity-blind (OAC-compatible).
+deterministic and identity-blind (OAC-compatible).  The exception is
+:func:`build_fused_scan_round_step`, the pipelined engine's mesh analogue:
+it takes the RNG key instead and draws the epoch's τ stream inside the scan
+body (key chain in the carry), so a whole epoch — τ draws included — is one
+device dispatch.
 """
 from __future__ import annotations
 
@@ -61,8 +65,7 @@ def build_round_step(
     def round(params, server_state, batch, tau, lr, A=None, active=None):
         A = A_static if A is None else A
         if A is None:
-            raise ValueError("no relay matrix: bind A at build time or pass "
-                             "it to the round step")
+            raise ValueError("no relay matrix: bind A at build time or pass it")
         w = active_weight(active, n=n_clients)
         if active is not None:
             a = jnp.asarray(active, jnp.float32)
@@ -74,17 +77,18 @@ def build_round_step(
                 return jnp.mean(losses)
             a_ = jnp.asarray(active, jnp.float32)
             return jnp.sum(losses * a_) / jnp.maximum(a_.sum(), 1.0)
+
         if T == 1:
             # deltas_g: stacked decayed grads (n, ...); Δ_i = -lr · g_i
             def one(client_batch):
                 sq = jax.tree.map(lambda x: x[0], client_batch)
                 loss, g = jax.value_and_grad(loss_fn)(params, sq)
-                gd = jax.tree.map(
-                    lambda ge, pe: ge.astype(jnp.float32)
-                    + client_opt.weight_decay * pe.astype(jnp.float32),
-                    g, params,
-                )
-                return gd, loss
+
+                def _decayed(ge, pe):
+                    wd = client_opt.weight_decay
+                    return ge.astype(jnp.float32) + wd * pe.astype(jnp.float32)
+
+                return jax.tree.map(_decayed, g, params), loss
 
             if relay_mode == "fused":
                 # never materialize per-client deltas: weighted loss trick —
@@ -96,17 +100,16 @@ def build_round_step(
                     losses = jax.vmap(lambda b_: loss_fn(p, b_))(sq)
                     return jnp.sum(c * losses), losses
 
-                (_, losses), gsum = jax.value_and_grad(
-                    weighted_loss, has_aux=True
-                )(params)
-                csum = jnp.sum(c)
-                inc = jax.tree.map(
-                    lambda gs, pe: -lr * w * (
-                        gs.astype(jnp.float32)
-                        + csum * client_opt.weight_decay * pe.astype(jnp.float32)
-                    ),
-                    gsum, params,
+                (_, losses), gsum = jax.value_and_grad(weighted_loss, has_aux=True)(
+                    params
                 )
+                csum = jnp.sum(c)
+
+                def _fused_inc(gs, pe):
+                    wd = csum * client_opt.weight_decay * pe.astype(jnp.float32)
+                    return -lr * w * (gs.astype(jnp.float32) + wd)
+
+                inc = jax.tree.map(_fused_inc, gsum, params)
                 mean_loss = _mean_loss(losses)
             else:
                 deltas_g, losses = jax.vmap(one)(batch)
@@ -115,6 +118,7 @@ def build_round_step(
                 inc = relay_lib.masked_aggregate(tau, relayed, w=w)
                 mean_loss = _mean_loss(losses)
         else:
+
             def client_update(client_batch):
                 opt_state = client_opt.init(params)
 
@@ -124,7 +128,9 @@ def build_round_step(
                     p, s = client_opt.step(p, g, s, lr)
                     return (p, s), loss
 
-                (new_p, _), losses = jax.lax.scan(step, (params, opt_state), client_batch)
+                (new_p, _), losses = jax.lax.scan(
+                    step, (params, opt_state), client_batch
+                )
                 return tree_sub(new_p, params), losses[0]
 
             deltas, losses = jax.vmap(client_update)(batch)
@@ -163,12 +169,16 @@ def build_scan_round_step(
     per-round function produce bit-identical results.
     """
     round = build_round_step(
-        loss_fn, n_clients=n_clients, local_steps=local_steps, A=A,
-        relay_mode=relay_mode, client_opt=client_opt, server_opt=server_opt,
+        loss_fn,
+        n_clients=n_clients,
+        local_steps=local_steps,
+        A=A,
+        relay_mode=relay_mode,
+        client_opt=client_opt,
+        server_opt=server_opt,
     )
 
-    def scan_rounds(params, server_state, batches, taus, lr, A=None,
-                    active=None):
+    def scan_rounds(params, server_state, batches, taus, lr, A=None, active=None):
         def body(carry, xs):
             p, s = carry
             batch, tau = xs
@@ -179,5 +189,54 @@ def build_scan_round_step(
             body, (params, server_state), (batches, taus)
         )
         return params, server_state, losses
+
+    return scan_rounds
+
+
+def build_fused_scan_round_step(
+    loss_fn: Callable[[Any, dict], jax.Array],
+    *,
+    n_clients: int,
+    local_steps: int,
+    A=None,
+    relay_mode: str = "faithful",
+    client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
+    server_opt: ServerOpt = ServerOpt(),
+):
+    """τ-in-body variant of :func:`build_scan_round_step` (the pipelined
+    engine's mesh analogue): returns ``scan_rounds(key, params,
+    server_state, batches, p, lr, A=None, active=None) -> (key', params',
+    state', losses)``.
+
+    Instead of a host-sampled ``taus`` block, the step takes the RNG key and
+    the uplink marginals ``p`` and draws each round's τ inside the scan body
+    — per round: split the chain, ``Bernoulli(p)`` on the subkey — exactly
+    the per-round driver's op order, so the realized τ stream (and the
+    returned advanced key) are bit-identical to R sequential host draws.
+    One device dispatch covers the whole epoch, τ included, and the key
+    chain never leaves the device between epochs.
+    """
+    round = build_round_step(
+        loss_fn,
+        n_clients=n_clients,
+        local_steps=local_steps,
+        A=A,
+        relay_mode=relay_mode,
+        client_opt=client_opt,
+        server_opt=server_opt,
+    )
+
+    def scan_rounds(key, params, server_state, batches, p, lr, A=None, active=None):
+        def body(carry, batch):
+            k, pr, s = carry
+            k, sub = jax.random.split(k)
+            tau = jax.random.bernoulli(sub, p).astype(jnp.float32)
+            pr, s, loss = round(pr, s, batch, tau, lr, A=A, active=active)
+            return (k, pr, s), loss
+
+        (key, params, server_state), losses = jax.lax.scan(
+            body, (key, params, server_state), batches
+        )
+        return key, params, server_state, losses
 
     return scan_rounds

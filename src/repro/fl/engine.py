@@ -31,6 +31,19 @@ Epoch orchestration lives on the host: ``run_schedule`` walks
 (the adaptive policy), materializes the segment's τ/batch streams with
 exactly the loop driver's RNG order, and issues one ``run_segment`` per
 epoch.
+
+Pipelined path
+--------------
+:class:`PipelinedScanEngine` is the next rung: the chunk body *also* draws
+the τ stream (the key chain becomes part of the scan carry, so the separate
+per-chunk τ dispatch disappears — exactly one device dispatch per chunk),
+and all host work for the next segment (adaptive OPT-α re-solve, batch
+stacking, segment sampling) runs on a background worker
+(:class:`repro.channels.scheduler.SegmentPrefetcher`) while the device
+executes the current chunk — JAX's async dispatch returns control to the
+host immediately, so the consumer thread keeps feeding the device without
+ever blocking on results.  Still bit-identical to the loop driver (same
+gated key chain, same batch order, same policy call order — tested).
 """
 from __future__ import annotations
 
@@ -55,11 +68,31 @@ def _pad_leading(tree: Any, pad: int) -> Any:
     if pad == 0:
         return tree
     return jax.tree.map(
-        lambda x: jnp.concatenate(
-            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]
-        ),
+        lambda x: jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)]),
         tree,
     )
+
+
+def _concat_metrics(parts: list) -> Any:
+    """Concatenate per-chunk metric pytrees along the round axis."""
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *ms: jnp.concatenate(ms), *parts)
+
+
+def _trim_concat(parts: list, chunk: int) -> Any:
+    """Concatenate (metrics, real_rounds) chunk pairs, trimming the padding
+    off remainder chunks.  The pipelined engine defers this to segment/run
+    boundaries: the slice and concatenate are *eager* device ops, and on the
+    CPU backend an eager op queues behind the in-flight chunk computation —
+    running them per chunk would stall the feeding thread for a full chunk's
+    compute time and serialize the pipeline."""
+    trimmed = []
+    for metrics, real in parts:
+        if real < chunk:
+            metrics = jax.tree.map(lambda m, n=real: m[:n], metrics)
+        trimmed.append(metrics)
+    return _concat_metrics(trimmed)
 
 
 class EpochScanEngine:
@@ -94,16 +127,13 @@ class EpochScanEngine:
         return self._scan_traces + self.sim.trace_count
 
     # -- one compiled call: scan `chunk` rounds under a fixed channel -------
-    def _chunk_impl(self, params, server_state, batches, taus, valid, A, lr,
-                    active):
+    def _chunk_impl(self, params, server_state, batches, taus, valid, A, lr, active):
         self._scan_traces += 1  # python-side: runs only when jit retraces
 
         def body(carry, xs):
             p0, s0 = carry
             batch, tau, v = xs
-            p1, s1, metrics = self.sim._round_math(
-                p0, s0, batch, tau, A, lr, active
-            )
+            p1, s1, metrics = self.sim._round_math(p0, s0, batch, tau, A, lr, active)
             # padded rounds: keep the old carry bit-exactly (v is a scalar
             # bool; where(True, new, old) passes `new` through unchanged)
             p1 = jax.tree.map(lambda a, b: jnp.where(v, a, b), p1, p0)
@@ -126,6 +156,7 @@ class EpochScanEngine:
             # has to equal the loop driver's after exactly R splits
             k = jax.tree.map(lambda a, b: jnp.where(v, a, b), k2, k)
             return k, tau
+
         return jax.lax.scan(body, key, valid)
 
     def sample_taus(self, key, p, n_rounds: int):
@@ -142,8 +173,9 @@ class EpochScanEngine:
             parts.append(taus[:real] if real < C else taus)
         return key, (parts[0] if len(parts) == 1 else jnp.concatenate(parts))
 
-    def run_segment(self, params, server_state, batches, taus, lr, *,
-                    A=None, active=None):
+    def run_segment(
+        self, params, server_state, batches, taus, lr, *, A=None, active=None
+    ):
         """Run one channel epoch: ``R`` rounds under a fixed (A, active).
 
         ``batches``: pytree with leaves (R, n, T, b, ...) — the epoch's data
@@ -156,8 +188,7 @@ class EpochScanEngine:
         A_seg = self.sim.A if A is None else jnp.asarray(A, jnp.float32)
         if A_seg is None and self.sim.strategy in ("colrel", "colrel_fused"):
             raise ValueError("colrel strategies need a relay matrix A")
-        active_seg = (None if active is None
-                      else jnp.asarray(active, jnp.float32))
+        active_seg = None if active is None else jnp.asarray(active, jnp.float32)
         taus = jnp.asarray(taus, jnp.float32)
         R, C = int(taus.shape[0]), self.chunk
         if R == 0:
@@ -166,9 +197,7 @@ class EpochScanEngine:
         for start in range(0, R, C):
             stop = min(start + C, R)
             pad = C - (stop - start)
-            bs = _pad_leading(
-                jax.tree.map(lambda x: x[start:stop], batches), pad
-            )
+            bs = _pad_leading(jax.tree.map(lambda x: x[start:stop], batches), pad)
             ts = _pad_leading(taus[start:stop], pad)
             valid = jnp.arange(C) < (stop - start)
             params, server_state, metrics = self._chunk_fn(
@@ -177,14 +206,21 @@ class EpochScanEngine:
             if pad:
                 metrics = jax.tree.map(lambda m: m[: stop - start], metrics)
             parts.append(metrics)
-        metrics = (parts[0] if len(parts) == 1
-                   else jax.tree.map(
-                       lambda *ms: jnp.concatenate(ms), *parts))
-        return params, server_state, metrics
+        return params, server_state, _concat_metrics(parts)
 
-    def run_schedule(self, key, params, server_state, *, schedule, rounds,
-                     next_batch: Callable[[], Any], lr, policy=None,
-                     on_segment: Callable | None = None):
+    def run_schedule(
+        self,
+        key,
+        params,
+        server_state,
+        *,
+        schedule,
+        rounds,
+        next_batch: Callable[[], Any],
+        lr,
+        policy=None,
+        on_segment: Callable | None = None,
+    ):
         """Drive a :class:`ChannelSchedule` for ``rounds`` rounds, one
         ``run_segment`` per channel epoch.
 
@@ -214,25 +250,243 @@ class EpochScanEngine:
                 key, taus = self.sample_taus(key, seg.p, window)
                 batches = [next_batch() for _ in range(window)]
                 params, server_state, metrics = self.run_segment(
-                    params, server_state, _stack_rounds(batches), taus, lr,
-                    A=A, active=seg.active,
+                    params,
+                    server_state,
+                    _stack_rounds(batches),
+                    taus,
+                    lr,
+                    A=A,
+                    active=seg.active,
                 )
                 seg_metrics.append(metrics)
-            metrics = (seg_metrics[0] if len(seg_metrics) == 1
-                       else jax.tree.map(
-                           lambda *ms: jnp.concatenate(ms), *seg_metrics))
+            metrics = _concat_metrics(seg_metrics)
             all_metrics.append(metrics)
             if on_segment is not None:
                 on_segment(seg, params, metrics)
-        metrics = (all_metrics[0] if len(all_metrics) == 1
-                   else jax.tree.map(
-                       lambda *ms: jnp.concatenate(ms), *all_metrics))
-        return params, server_state, metrics, key
+        return params, server_state, _concat_metrics(all_metrics), key
 
 
-def run_rounds_loop(sim: FLSimulator, key, params, server_state, *, schedule,
-                    rounds, next_batch: Callable[[], Any], lr, policy=None,
-                    on_round: Callable | None = None):
+class PipelinedScanEngine:
+    """Pipelined epoch execution: fused chunk body + async host/device
+    overlap.
+
+    Two changes over :class:`EpochScanEngine`, one on each side of the
+    dispatch boundary:
+
+    * **Device** — the τ stream is drawn *inside* the chunk scan: the RNG
+      key chain joins the carry, each round splits it, samples
+      ``Bernoulli(p)`` and gates the advance on the round's valid flag
+      (padded rounds leave the chain untouched, exactly like the loop
+      driver's ``split``-per-round order).  The separate per-chunk
+      ``_taus_fn`` dispatch is gone — **one compiled dispatch per chunk**,
+      counted by ``dispatches``.
+    * **Host** — the schedule walk, the adaptive OPT-α re-solves and the
+      per-chunk batch staging (stack + zero-pad + H2D, all numpy-side) run
+      through a :class:`~repro.channels.scheduler.SegmentPrefetcher`.
+      Because a chunk dispatch returns before the device finishes (async
+      dispatch), staging epoch k+1 overlaps the device's in-flight chunk of
+      epoch k — double-buffered inline by default, or ``prefetch_depth``
+      chunks ahead on a worker thread (``prefetch="thread"``).  Epoch k+1's
+      host work hides behind epoch k's device work; measured as
+      ``prefetch_stats.overlap_fraction``.  The consumer loop itself runs
+      no eager jnp ops — on the CPU backend those queue behind the
+      in-flight computation and would re-serialize the pipeline (padding
+      and valid masks are built host-side; metric trims/concats are
+      deferred to segment/run boundaries).
+
+    Everything that makes the scan engine trustworthy carries over
+    unchanged: the body calls ``sim._round_math`` (bit-identity with the
+    loop by construction and by test), fixed-size chunks with valid-masked
+    zero padding keep ``trace_count ≤ 2``, and the key chain, batch order
+    and policy call order are the serial driver's exactly.
+    """
+
+    def __init__(
+        self,
+        sim: FLSimulator,
+        *,
+        chunk: int = 32,
+        prefetch: str = "inline",
+        prefetch_depth: int = 2,
+    ):
+        """``prefetch`` picks the staging mode (see
+        :class:`~repro.channels.scheduler.SegmentPrefetcher`): ``"inline"``
+        (default) software-pipelines staging behind async dispatch on one
+        thread — the right choice on CPU hosts, where a staging thread
+        mostly fights the dispatch thread for the GIL; ``"thread"`` stages
+        on a worker thread ``prefetch_depth`` chunks ahead — worth trying
+        on real accelerators."""
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if prefetch not in ("inline", "thread"):
+            raise ValueError(f"unknown prefetch mode: {prefetch!r}")
+        self.sim = sim
+        self.chunk = int(chunk)
+        self.prefetch = prefetch
+        self.prefetch_depth = int(prefetch_depth)
+        self._scan_traces = 0
+        # per-run counters (reset by run_schedule, like prefetch_stats):
+        # compiled chunk calls — exactly one per chunk
+        self.dispatches = 0
+        self.prefetch_stats = None  # PrefetchStats of the latest run
+        self._chunk_fn = jax.jit(self._chunk_impl)
+
+    @property
+    def trace_count(self) -> int:
+        return self._scan_traces + self.sim.trace_count
+
+    # -- the fully-fused chunk: τ draw + A apply + round math, one dispatch --
+    def _chunk_impl(self, key, params, server_state, batches, valid, A, p, lr, active):
+        self._scan_traces += 1  # python-side: runs only when jit retraces
+
+        # the loop driver's per-round draw is split-then-Bernoulli(p) on the
+        # subkey.  Only the *split chain* is inherently sequential, so run it
+        # as a (cheap, key-only) scan and draw all rounds' τ in one batched
+        # Bernoulli over the stacked subkeys — vmap of a PRNG draw over
+        # distinct keys produces bit-identical samples to sequential calls,
+        # and keeping the draws out of the round scan keeps them off its
+        # serial critical path.  Still a single compiled dispatch.
+        def key_step(k, v):
+            k2, sub = jax.random.split(k)
+            # padded rounds must not advance the chain — the final key has
+            # to equal the loop driver's after exactly R splits
+            k = jax.tree.map(lambda a, b: jnp.where(v, a, b), k2, k)
+            return k, sub
+
+        key, subs = jax.lax.scan(key_step, key, valid)
+        taus = jax.vmap(lambda s: jax.random.bernoulli(s, p))(subs)
+        taus = taus.astype(jnp.float32)
+        if self.sim.strategy == "no_dropout":
+            taus = jnp.ones_like(taus)
+
+        def body(carry, xs):
+            p0, s0 = carry
+            batch, tau, v = xs
+            p1, s1, metrics = self.sim._round_math(p0, s0, batch, tau, A, lr, active)
+            # padded rounds: keep the old carry bit-exactly
+            p1 = jax.tree.map(lambda a, b: jnp.where(v, a, b), p1, p0)
+            s1 = jax.tree.map(lambda a, b: jnp.where(v, a, b), s1, s0)
+            return (p1, s1), metrics
+
+        (params, server_state), metrics = jax.lax.scan(
+            body, (params, server_state), (batches, taus, valid)
+        )
+        return key, params, server_state, metrics
+
+    def run_schedule(
+        self,
+        key,
+        params,
+        server_state,
+        *,
+        schedule,
+        rounds,
+        next_batch: Callable[[], Any],
+        lr,
+        policy=None,
+        on_segment: Callable | None = None,
+    ):
+        """Drive a ``ChannelSchedule`` for ``rounds`` rounds — same contract
+        and bit-identical trajectory as :meth:`EpochScanEngine.run_schedule`
+        and the per-round loop, but with host staging prefetched and τ fused
+        into the chunk dispatch.  ``on_segment(segment, params, metrics)``
+        forces a device sync per epoch (it hands over concrete params), so
+        leave it unset on pure-throughput runs.  Returns
+        ``(params, server_state, metrics, key)``.
+        """
+        from repro.channels.scheduler import SegmentPrefetcher
+
+        C = self.chunk
+        self.dispatches = 0
+        prefetcher = SegmentPrefetcher(
+            schedule,
+            rounds,
+            chunk=C,
+            next_batch=next_batch,
+            policy=policy,
+            depth=self.prefetch_depth,
+            pad_to_chunk=True,  # remainder chunks arrive zero-padded (numpy)
+            threaded=self.prefetch == "thread",
+        )
+        # The consumer loop must never run an *eager* jnp op: on the CPU
+        # backend those queue behind the in-flight chunk and would stall the
+        # pipeline for a full chunk's compute.  Everything here is either
+        # jnp.asarray of host data (non-blocking) or the compiled dispatch
+        # itself; metric trimming/concatenation is deferred (_trim_concat).
+        all_parts: list = []  # (metrics, real_rounds) per chunk, in order
+        seg_parts: list = []
+        seg_id = A_seg = p_seg = active_seg = None
+        valid_cache: dict = {}
+        try:
+            for item in prefetcher:
+                seg = item.segment
+                if seg.epoch_id != seg_id:
+                    # channel values are loop-invariant within a segment:
+                    # one device conversion per epoch, not per chunk
+                    seg_id = seg.epoch_id
+                    A_seg = (
+                        self.sim.A
+                        if item.A is None
+                        else jnp.asarray(item.A, jnp.float32)
+                    )
+                    if A_seg is None and self.sim.strategy in (
+                        "colrel",
+                        "colrel_fused",
+                    ):
+                        raise ValueError("colrel strategies need a relay matrix A")
+                    active_seg = (
+                        None
+                        if seg.active is None
+                        else jnp.asarray(seg.active, jnp.float32)
+                    )
+                    p_seg = jnp.asarray(seg.p, jnp.float32)
+                real = item.n_rounds
+                valid = valid_cache.get(real)
+                if valid is None:
+                    valid = valid_cache[real] = jnp.asarray(np.arange(C) < real)
+                key, params, server_state, metrics = self._chunk_fn(
+                    key,
+                    params,
+                    server_state,
+                    item.batches,
+                    valid,
+                    A_seg,
+                    p_seg,
+                    lr,
+                    active_seg,
+                )
+                self.dispatches += 1
+                prefetcher.note_inflight(metrics["loss"])
+                seg_parts.append((metrics, real))
+                if item.last_in_segment:
+                    if on_segment is not None:
+                        seg_metrics = _trim_concat(seg_parts, C)
+                        on_segment(seg, params, seg_metrics)
+                        # already trimmed: the final _trim_concat must not
+                        # re-slice it (its round count may exceed C)
+                        all_parts.append((seg_metrics, C))
+                    else:
+                        all_parts.extend(seg_parts)
+                    seg_parts = []
+        finally:
+            prefetcher.close()
+            self.prefetch_stats = prefetcher.stats
+        return params, server_state, _trim_concat(all_parts, C), key
+
+
+def run_rounds_loop(
+    sim: FLSimulator,
+    key,
+    params,
+    server_state,
+    *,
+    schedule,
+    rounds,
+    next_batch: Callable[[], Any],
+    lr,
+    policy=None,
+    on_round: Callable | None = None,
+):
     """The per-round reference driver: the exact loop the figure benchmarks
     run — one dispatch per round and, like every existing driver, a host
     read of the round's loss (``float(...)``, a device sync per round: the
@@ -245,8 +499,14 @@ def run_rounds_loop(sim: FLSimulator, key, params, server_state, *, schedule,
         key, sub = jax.random.split(key)
         batch = jax.tree.map(jnp.asarray, next_batch())
         params, server_state, m = sim.run_round(
-            sub, params, server_state, batch, lr,
-            A=A, p=state.p, active=state.active,
+            sub,
+            params,
+            server_state,
+            batch,
+            lr,
+            A=A,
+            p=state.p,
+            active=state.active,
         )
         float(m["loss"])  # the per-round host sync the loop driver models
         all_metrics.append(m)

@@ -14,7 +14,6 @@ equal to the einsum relay on a real mesh.
 """
 from __future__ import annotations
 
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -41,9 +40,7 @@ def ring_relay_local(A, delta_local, axis_names: tuple):
 
     def step(s, carry):
         buf, acc = carry
-        buf = jax.tree.map(
-            lambda x: jax.lax.ppermute(x, axis_names, perm), buf
-        )
+        buf = jax.tree.map(lambda x: jax.lax.ppermute(x, axis_names, perm), buf)
         origin = (r - s) % n
         acc = tree_axpy(A[r, origin], buf, acc)
         return buf, acc
@@ -70,25 +67,20 @@ def make_ring_round_mixer(A, *, w: float, mesh, client_axes: tuple):
 
     def local(tau, deltas_stacked):
         delta_local = jax.tree.map(lambda x: x[0], deltas_stacked)
-        return ring_colrel_increment(
-            A, tau, delta_local, w=w, axis_names=client_axes
-        )
+        return ring_colrel_increment(A, tau, delta_local, w=w, axis_names=client_axes)
 
     def in_specs(deltas):
         return (
             P(),
-            jax.tree.map(
-                lambda x: P(client_axes, *([None] * (x.ndim - 1))), deltas
-            ),
+            jax.tree.map(lambda x: P(client_axes, *([None] * (x.ndim - 1))), deltas),
         )
 
     def mixer(tau, deltas_stacked):
         spec_tau, spec_d = in_specs(deltas_stacked)
-        out_spec = jax.tree.map(
-            lambda x: P(*([None] * (x.ndim - 1))), deltas_stacked
-        )
+        out_spec = jax.tree.map(lambda x: P(*([None] * (x.ndim - 1))), deltas_stacked)
         return shard_map(
-            local, mesh=mesh,
+            local,
+            mesh=mesh,
             in_specs=(spec_tau, spec_d),
             out_specs=out_spec,
             check_rep=False,

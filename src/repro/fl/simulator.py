@@ -48,8 +48,10 @@ class FLSimulator:
 
     ``run_round`` is the per-round reference path (one dispatch per round).
     For long horizons, :class:`repro.fl.engine.EpochScanEngine` fuses whole
-    channel epochs into ``lax.scan`` calls over the same ``_round_math``,
-    bit-identical to calling ``run_round`` round by round.
+    channel epochs into ``lax.scan`` calls over the same ``_round_math``
+    (and :class:`repro.fl.engine.PipelinedScanEngine` additionally draws τ
+    inside the chunk and prefetches the host work), bit-identical to calling
+    ``run_round`` round by round.
     """
 
     def __init__(
@@ -70,7 +72,9 @@ class FLSimulator:
         self.client_opt = client_opt
         self.server_opt = server_opt
         self.strategy = strategy
-        self.p = jnp.asarray(p, jnp.float32) if p is not None else jnp.ones((n_clients,))
+        self.p = (
+            jnp.asarray(p, jnp.float32) if p is not None else jnp.ones((n_clients,))
+        )
         self.A = jnp.asarray(A, jnp.float32) if A is not None else None
         self.aggregator = aggregation.make_aggregator(strategy, n=n_clients)
         self.trace_count = 0
@@ -86,9 +90,7 @@ class FLSimulator:
             p, s = self.client_opt.step(p, g, s, lr)
             return (p, s), loss
 
-        (new_params, _), losses = jax.lax.scan(
-            step, (params, opt_state), client_batch
-        )
+        (new_params, _), losses = jax.lax.scan(step, (params, opt_state), client_batch)
         return tree_sub(new_params, params), losses[0]
 
     def _round_impl(self, params, server_state, batch, tau, A, lr, active):
@@ -97,18 +99,21 @@ class FLSimulator:
 
     def _round_math(self, params, server_state, batch, tau, A, lr, active):
         """The round as a pure function — traced both by the per-round jit
-        (``run_round``) and by the epoch-segmented scan engine
-        (``repro.fl.engine``), so the two paths share one definition and
+        (``run_round``) and by the epoch-segmented scan engines
+        (``repro.fl.engine``), so all paths share one definition and
         stay bit-identical by construction."""
-        deltas, losses = jax.vmap(
-            self._client_update, in_axes=(None, 0, None)
-        )(params, batch, lr)
+        deltas, losses = jax.vmap(self._client_update, in_axes=(None, 0, None))(
+            params, batch, lr
+        )
         increment = self.aggregator.fn(tau, deltas, A, active)
         new_params, new_state = self.server_opt.apply(params, server_state, increment)
-        per_client_dn = jax.vmap(
-            lambda i: sum(jnp.sum(l[i].astype(jnp.float32) ** 2)
-                          for l in jax.tree.leaves(deltas))
-        )(jnp.arange(self.n))
+
+        def _client_sq_norm(i):
+            return sum(
+                jnp.sum(l[i].astype(jnp.float32) ** 2) for l in jax.tree.leaves(deltas)
+            )
+
+        per_client_dn = jax.vmap(_client_sq_norm)(jnp.arange(self.n))
         if active is None:
             mean_loss, dn = jnp.mean(losses), jnp.mean(per_client_dn)
         else:
@@ -121,8 +126,9 @@ class FLSimulator:
             tau = tau * a
         return new_params, new_state, _metrics(mean_loss, tau, jnp.sqrt(dn))
 
-    def run_round(self, key, params, server_state, batch, lr, *, A=None, p=None,
-                  active=None):
+    def run_round(
+        self, key, params, server_state, batch, lr, *, A=None, p=None, active=None
+    ):
         """batch: pytree with leaves (n, T, b, ...).
 
         ``A`` / ``p`` override the construction-time channel for this round
@@ -132,10 +138,8 @@ class FLSimulator:
         """
         tau = self.sample_tau(key, p)
         A_round = self.A if A is None else jnp.asarray(A, jnp.float32)
-        active_round = (None if active is None
-                        else jnp.asarray(active, jnp.float32))
-        return self._round(params, server_state, batch, tau, A_round, lr,
-                           active_round)
+        active_round = None if active is None else jnp.asarray(active, jnp.float32)
+        return self._round(params, server_state, batch, tau, A_round, lr, active_round)
 
     def sample_tau(self, key, p=None):
         """One round's uplink mask, exactly as ``run_round`` draws it.  The

@@ -60,12 +60,13 @@ def test_acceptance_scenario_is_fig5_at_paper_scale():
 # ---------------------------------------------------------------- harness
 
 
-def test_harness_runs_both_engines_bitwise_identical():
+def test_harness_runs_all_engines_bitwise_identical():
     result = harness.run_scenario(TINY)
     runs = result["runs"]
-    assert set(runs) == {"loop", "scan"}
+    assert set(runs) == {"loop", "scan", "pipelined"}
     assert result["bitwise_match"] is True
     assert result["speedup"] > 0
+    assert set(result["speedups"]) == {"scan", "pipelined"}
     for run in runs.values():
         assert run.wall_s > 0
         assert run.rounds_per_sec > 0
@@ -73,6 +74,14 @@ def test_harness_runs_both_engines_bitwise_identical():
     assert runs["loop"].trace_count == 1
     assert runs["scan"].trace_count <= 2
     assert runs["scan"].dispatches < runs["loop"].dispatches
+    # the pipelined engine fuses τ into the chunk: same dispatch count as
+    # scan, plus measured overlap stats (loop/scan report None there)
+    assert runs["pipelined"].trace_count <= 2
+    assert runs["pipelined"].dispatches == runs["scan"].dispatches
+    assert 0.0 <= runs["pipelined"].overlap_fraction <= 1.0
+    assert runs["pipelined"].host_prep_s > 0
+    assert runs["loop"].overlap_fraction is None
+    assert runs["scan"].overlap_fraction is None
 
 
 TINY_CORR = dataclasses.replace(
@@ -85,12 +94,13 @@ TINY_CORR = dataclasses.replace(
 
 
 def test_harness_correlated_scenario_bitwise_identical():
-    """Jointly-sampled (adj, p) through both engines: the scan path must
+    """Jointly-sampled (adj, p) through every engine: the fused paths must
     still reproduce the loop bit-for-bit."""
     result = harness.run_scenario(TINY_CORR)
     assert result["bitwise_match"] is True
     assert result["runs"]["loop"].trace_count == 1
     assert result["runs"]["scan"].trace_count <= 2
+    assert result["runs"]["pipelined"].trace_count <= 2
 
 
 def test_mesh_step_bitwise_and_trace_bound_under_correlated_schedule():
@@ -106,6 +116,11 @@ def test_mesh_step_bitwise_and_trace_bound_under_correlated_schedule():
     assert runs["scan"].trace_count <= 2
     assert runs["scan"].dispatches == spec.rounds // spec.adj_every
     assert runs["loop"].dispatches == spec.rounds
+    # the τ-fused mesh step: same per-epoch dispatch grid as scan, overlap
+    # measured, and still bit-identical (checked above for all engines)
+    assert runs["pipelined"].trace_count <= 2
+    assert runs["pipelined"].dispatches == runs["scan"].dispatches
+    assert 0.0 <= runs["pipelined"].overlap_fraction <= 1.0
 
 
 # ---------------------------------------------------------- report + gate

@@ -1,0 +1,432 @@
+"""Pipelined epoch engine (ISSUE 5): the four load-bearing invariants.
+
+  * **staleness ordering** — a prefetched segment never observes a
+    post-dated field state: the worker thread runs the channel processes
+    several epochs ahead of the consumer, and what the consumer eventually
+    dequeues must equal what a serial walk of an identical schedule yields;
+  * **bitwise parity** — the pipelined path reproduces the per-round loop
+    bit for bit (params, server state, metrics, final key) under churn and
+    under correlated shadowing with a coupled uplink;
+  * **compile discipline** — ``trace_count ≤ 2`` across many epochs of a
+    fixed client dimension;
+  * **single dispatch per chunk** — the τ draw is fused into the chunk
+    body, so the engine issues exactly ⌈len/chunk⌉ compiled calls per epoch
+    and nothing else.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.core import opt_alpha, topology
+from repro.core.aggregation import ServerOpt
+from repro.channels.scheduler import SegmentPrefetcher
+from repro.fl.distributed import (
+    build_fused_scan_round_step,
+    build_scan_round_step,
+)
+from repro.fl.engine import PipelinedScanEngine, run_rounds_loop
+from repro.fl.simulator import FLSimulator
+
+
+def _quad_loss(params, batch):
+    diff = params["x"][None, :] - batch["c"]
+    return 0.5 * jnp.mean(jnp.sum(diff**2, axis=-1))
+
+
+def _batch_stream(n, T=2, b=4, dim=4, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        return {"c": rng.standard_normal((n, T, b, dim)).astype(np.float32)}
+
+    return next_batch
+
+
+def _churn_drift_schedule(n=6, seed=0):
+    link = channels.MarkovLinkProcess(
+        topology.ring(n, 2), p_up_to_down=0.4, p_down_to_up=0.6, seed=seed
+    )
+    drift = channels.PiecewiseConstantDrift(
+        np.linspace(0.2, 0.9, n), hold=1, low=0.1, high=0.9, seed=seed + 1
+    )
+    member = channels.RotatingCohorts(n, n_cohorts=3, hold=5)
+    return channels.ChurnSchedule(
+        membership=member,
+        link_process=link,
+        p_process=drift,
+        adj_every=3,
+        p_every=4,
+    )
+
+
+def _correlated_schedule(n=6, seed=0):
+    """Jointly-sampled (adj, p) from one shadowing field — the schedule whose
+    in-place samplers originally corrupted lookahead consumers (PR 4), i.e.
+    the hardest case for a prefetcher that runs several epochs ahead."""
+    return channels.CorrelatedChannel(
+        topology.ring(n, 2),
+        np.linspace(0.3, 0.9, n),
+        corr_length=0.5,
+        rho=0.9,
+        blockage_threshold=0.8,
+        couple_uplink=True,
+        uplink_gain=2.0,
+        hold=2,
+        seed=seed,
+    )
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+# ------------------------------------------------------------- prefetcher
+
+
+def test_prefetched_segments_never_use_postdated_state():
+    """Staleness ordering: the worker advances the channel processes far
+    ahead of the consumer; every dequeued chunk must still carry the channel
+    value its segment had when emitted, not the (mutated) current one."""
+    n, rounds, chunk = 6, 24, 2
+    reference = [
+        (seg.adj.copy(), seg.p.copy(), seg.epoch_id, seg.start_round, seg.n_rounds)
+        for seg in _correlated_schedule(n=n, seed=5).segments(rounds)
+    ]
+    pf = SegmentPrefetcher(
+        _correlated_schedule(n=n, seed=5),
+        rounds,
+        chunk=chunk,
+        next_batch=lambda: {"x": np.zeros((n, 1))},
+        depth=64,  # hold the whole run: the worker finishes before we read
+        threaded=True,
+    )
+    time.sleep(0.3)  # let the worker run all the way ahead
+    items = list(pf)
+    ref_iter = iter(reference)
+    seen_rounds = 0
+    for item in items:
+        if item.start == 0:
+            adj, p, epoch_id, start_round, n_rounds = next(ref_iter)
+            assert np.array_equal(item.segment.adj, adj)
+            assert np.array_equal(item.segment.p, p)
+            assert item.segment.epoch_id == epoch_id
+            assert item.segment.start_round == start_round
+        seen_rounds += item.n_rounds
+    assert seen_rounds == rounds
+    assert next(ref_iter, None) is None  # every reference segment consumed
+
+
+def test_prefetcher_batch_and_policy_order_match_serial_driver():
+    """The worker must call next_batch() once per round in round order and
+    the policy once per segment in segment order — the serial contract."""
+    n, rounds = 6, 17
+
+    calls = []
+
+    def next_batch():
+        calls.append(len(calls))
+        return {"c": np.full((n, 1), float(len(calls)), np.float32)}
+
+    class RecordingPolicy:
+        def __init__(self):
+            self.keys = []
+
+        def relay_matrix(self, state):
+            self.keys.append(state.key())
+            return np.eye(n)
+
+    policy = RecordingPolicy()
+    pf = SegmentPrefetcher(
+        _churn_drift_schedule(n=n, seed=3),
+        rounds,
+        chunk=4,
+        next_batch=next_batch,
+        policy=policy,
+        threaded=True,
+    )
+    staged = []
+    for item in pf:
+        staged.append(item)
+    assert calls == list(range(rounds))  # one call per round, in order
+    ref_keys = [
+        seg.state.key() for seg in _churn_drift_schedule(n=n, seed=3).segments(rounds)
+    ]
+    assert policy.keys == ref_keys  # one solve per segment, in order
+    # the staged batch stream is the calls replayed in order
+    flat = np.concatenate([np.asarray(item.batches["c"])[:, 0, 0] for item in staged])
+    assert np.array_equal(flat, np.arange(1, rounds + 1, dtype=np.float32))
+
+
+@pytest.mark.parametrize("threaded", [False, True])
+def test_prefetcher_propagates_staging_exceptions(threaded):
+    def bad_batch():
+        raise RuntimeError("loader died")
+
+    pf = SegmentPrefetcher(
+        _churn_drift_schedule(),
+        8,
+        chunk=4,
+        next_batch=bad_batch,
+        threaded=threaded,
+    )
+    with pytest.raises(RuntimeError, match="loader died"):
+        list(pf)
+    pf.close()  # idempotent after failure
+
+
+def test_prefetcher_close_unblocks_worker():
+    """close() must release a worker blocked on a full queue (no thread
+    leak, no deadlock) even when the consumer abandons mid-stream."""
+    n = 6
+    pf = SegmentPrefetcher(
+        _churn_drift_schedule(n=n),
+        64,
+        chunk=1,
+        next_batch=lambda: {"x": np.zeros((n, 1))},
+        depth=1,
+        threaded=True,
+    )
+    it = iter(pf)
+    next(it)  # consume one chunk, leave the rest staged/blocked
+    pf.close()
+    assert pf._thread is None  # joined and released
+    assert threading.active_count() < 50  # sanity: no runaway threads
+
+
+def test_prefetcher_overlap_stats_populated():
+    pf = SegmentPrefetcher(
+        _churn_drift_schedule(),
+        12,
+        chunk=4,
+        next_batch=_batch_stream(6),
+        policy=channels.AdaptiveOptAlpha(sweeps=10),
+    )
+    list(pf)
+    assert pf.stats.chunks > 0
+    assert pf.stats.segments > 0
+    assert pf.stats.prep_s > 0
+    assert 0.0 <= pf.stats.overlap_fraction <= 1.0
+
+
+# --------------------------- full-schedule bit-equivalence (the tentpole)
+
+
+@pytest.mark.parametrize(
+    "strategy,prefetch",
+    [
+        ("colrel_fused", "inline"),
+        ("colrel_fused", "thread"),
+        ("fedavg_blind", "inline"),
+    ],
+)
+def test_pipelined_bit_identical_to_loop_under_churn(strategy, prefetch):
+    """Pipelined run_schedule == per-round loop, bit for bit, over a
+    schedule where adjacency, p and membership all change — including the
+    on-device τ key chain's final value.  Both prefetch modes must hold it:
+    the staging mode may change timing, never the trajectory."""
+    n, rounds = 6, 17
+    params0 = {"x": jnp.ones((4,))}
+
+    def make_policy():
+        if strategy == "fedavg_blind":
+            return None
+        return channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+
+    runs = {}
+    for engine_name in ("loop", "pipelined"):
+        next_batch = _batch_stream(n, seed=42)
+        sim = FLSimulator(
+            loss_fn=_quad_loss,
+            n_clients=n,
+            strategy=strategy,
+            server_opt=ServerOpt(momentum=0.5),  # nontrivial carried state
+        )
+        ss = sim.init_server_state(params0)
+        key = jax.random.key(7)
+        schedule = _churn_drift_schedule(n=n, seed=3)
+        policy = make_policy()
+        if engine_name == "loop":
+            out = run_rounds_loop(
+                sim,
+                key,
+                params0,
+                ss,
+                schedule=schedule,
+                rounds=rounds,
+                next_batch=next_batch,
+                lr=0.1,
+                policy=policy,
+            )
+        else:
+            eng = PipelinedScanEngine(sim, chunk=4, prefetch=prefetch)
+            out = eng.run_schedule(
+                key,
+                params0,
+                ss,
+                schedule=schedule,
+                rounds=rounds,
+                next_batch=next_batch,
+                lr=0.1,
+                policy=policy,
+            )
+        runs[engine_name] = out
+
+    (lp, ls, lm, lk), (sp, ss_, sm, sk) = runs["loop"], runs["pipelined"]
+    assert _tree_equal(lp, sp)
+    assert _tree_equal(ls, ss_)
+    assert _tree_equal(lm, sm)  # per-round loss/tau/delta_norm streams
+    assert np.array_equal(jax.random.key_data(lk), jax.random.key_data(sk))
+
+
+def test_pipelined_bit_identical_under_correlated_shadowing():
+    """Same parity bar under the jointly-sampled (adj, p) channel — the
+    prefetcher consumes snapshots while the field mutates ahead of it."""
+    n, rounds = 6, 20
+    params0 = {"x": jnp.ones((4,))}
+    runs = {}
+    for engine_name in ("loop", "pipelined"):
+        next_batch = _batch_stream(n, seed=13)
+        sim = FLSimulator(loss_fn=_quad_loss, n_clients=n, strategy="colrel_fused")
+        ss = sim.init_server_state(params0)
+        key = jax.random.key(11)
+        schedule = _correlated_schedule(n=n, seed=9)
+        policy = channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+        if engine_name == "loop":
+            out = run_rounds_loop(
+                sim,
+                key,
+                params0,
+                ss,
+                schedule=schedule,
+                rounds=rounds,
+                next_batch=next_batch,
+                lr=0.1,
+                policy=policy,
+            )
+        else:
+            eng = PipelinedScanEngine(sim, chunk=3)
+            out = eng.run_schedule(
+                key,
+                params0,
+                ss,
+                schedule=schedule,
+                rounds=rounds,
+                next_batch=next_batch,
+                lr=0.1,
+                policy=policy,
+            )
+        runs[engine_name] = out
+    (lp, ls, lm, lk), (sp, ss_, sm, sk) = runs["loop"], runs["pipelined"]
+    assert _tree_equal(lp, sp)
+    assert _tree_equal(ls, ss_)
+    assert _tree_equal(lm, sm)
+    assert np.array_equal(jax.random.key_data(lk), jax.random.key_data(sk))
+
+
+# -------------------------------------------------- compile + dispatch caps
+
+
+def test_pipelined_trace_count_bound():
+    """≤ 2 compiles across many epochs of fixed n — fixed-size fused chunks,
+    never a per-epoch-length (or per-τ-stream) retrace."""
+    n, rounds = 6, 29
+    params0 = {"x": jnp.ones((4,))}
+    sim = FLSimulator(loss_fn=_quad_loss, n_clients=n, strategy="colrel_fused")
+    engine = PipelinedScanEngine(sim, chunk=4)
+    schedule = _churn_drift_schedule(n=n, seed=9)
+    assert len(list(_churn_drift_schedule(n=n, seed=9).segments(rounds))) > 4
+    engine.run_schedule(
+        jax.random.key(0),
+        params0,
+        sim.init_server_state(params0),
+        schedule=schedule,
+        rounds=rounds,
+        next_batch=_batch_stream(n, seed=1),
+        lr=0.1,
+        policy=channels.AdaptiveOptAlpha(sweeps=10),
+    )
+    assert engine.trace_count <= 2
+
+
+def test_single_device_dispatch_per_chunk():
+    """The τ draw is folded into the chunk body: the engine's only compiled
+    callable fires exactly ⌈len/chunk⌉ times per epoch — there is no
+    separate τ dispatch (the EpochScanEngine's ``_taus_fn`` is gone)."""
+    n, rounds, chunk = 6, 23, 4
+    params0 = {"x": jnp.ones((4,))}
+    sim = FLSimulator(loss_fn=_quad_loss, n_clients=n, strategy="colrel_fused")
+    engine = PipelinedScanEngine(sim, chunk=chunk)
+    assert not hasattr(engine, "_taus_fn")
+
+    calls = []
+    inner = engine._chunk_fn
+
+    def counting_chunk(*args, **kwargs):
+        calls.append(1)
+        return inner(*args, **kwargs)
+
+    engine._chunk_fn = counting_chunk
+    engine.run_schedule(
+        jax.random.key(0),
+        params0,
+        sim.init_server_state(params0),
+        schedule=_churn_drift_schedule(n=n, seed=9),
+        rounds=rounds,
+        next_batch=_batch_stream(n, seed=1),
+        lr=0.1,
+        policy=channels.AdaptiveOptAlpha(sweeps=10),
+    )
+    expected = sum(
+        -(-seg.n_rounds // chunk)
+        for seg in _churn_drift_schedule(n=n, seed=9).segments(rounds)
+    )
+    assert len(calls) == expected
+    assert engine.dispatches == expected
+
+
+# ------------------------------------------------- fused mesh scan wrapper
+
+
+def test_fused_mesh_scan_matches_host_sampled_scan():
+    """build_fused_scan_round_step (τ in the scan body, key in the carry)
+    reproduces build_scan_round_step driven by host-side per-round draws —
+    params, losses and the advanced key all bit-equal."""
+    n, T, R = 4, 2, 6
+    rng = np.random.default_rng(1)
+    p = np.linspace(0.4, 0.9, n).astype(np.float32)
+    A = opt_alpha.optimize(p, topology.ring(n, 1), sweeps=20).A
+    params0 = {"x": jnp.ones((4,))}
+    batches = [
+        {"c": rng.standard_normal((n, T, 4, 4)).astype(np.float32)} for _ in range(R)
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *batches)
+    A_j = jnp.asarray(A, jnp.float32)
+    p_j = jnp.asarray(p)
+    kw = dict(n_clients=n, local_steps=T, relay_mode="fused")
+
+    # reference: host-side key chain + the τ-as-input scan step
+    key = jax.random.key(3)
+    taus = []
+    for _ in range(R):
+        key, sub = jax.random.split(key)
+        taus.append(jax.random.bernoulli(sub, p_j).astype(jnp.float32))
+    scan_fn = jax.jit(build_scan_round_step(_quad_loss, **kw))
+    ref_params, ref_ss, ref_losses = scan_fn(
+        params0, None, stacked, jnp.stack(taus), 0.1, A_j
+    )
+
+    fused_fn = jax.jit(build_fused_scan_round_step(_quad_loss, **kw))
+    got_key, got_params, got_ss, got_losses = fused_fn(
+        jax.random.key(3), params0, None, stacked, p_j, 0.1, A_j
+    )
+    assert _tree_equal(ref_params, got_params)
+    assert np.array_equal(np.asarray(ref_losses), np.asarray(got_losses))
+    assert np.array_equal(jax.random.key_data(key), jax.random.key_data(got_key))

@@ -1,0 +1,108 @@
+"""Spot-check the docs against the live code (CI: ``make docs-check``).
+
+Two checks, both cheap enough for the lint job:
+
+1. **Runnable snippets** — every fenced ``bash`` block in the given docs
+   whose command line carries ``--list`` is executed verbatim from the repo
+   root, with ``PYTHONPATH`` stripped from the inherited environment so a
+   snippet only works if it sets it itself (exactly what a reader
+   copy-pasting it gets); a non-zero exit or empty output fails.
+   ``--list`` commands are read-only by construction, so running them is
+   safe anywhere.
+2. **Scenario references** — every ``--scenario <name>`` occurrence and
+   every ``BENCH_<name>.json`` mention in the docs must name a scenario
+   that exists in the live ``repro.bench.scenarios`` registry (or be the
+   documented ``<scenario>``/``<name>`` placeholder).
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py docs/benchmarks.md [more.md ...]
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SNIPPET_RE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+SCENARIO_REF_RE = re.compile(r"(?:--scenario\s+|BENCH_)([A-Za-z0-9_<>]+)")
+
+
+def _snippet_commands(text: str) -> list[str]:
+    """Full (possibly line-continued) commands from bash blocks that carry
+    --list — the read-only subset we can always execute."""
+    commands = []
+    for block in SNIPPET_RE.findall(text):
+        joined = block.replace("\\\n", " ")
+        for line in joined.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#") and "--list" in line:
+                commands.append(line)
+    return commands
+
+
+def _scenario_refs(text: str) -> set[str]:
+    refs = set()
+    for m in SCENARIO_REF_RE.finditer(text):
+        name = m.group(1)
+        if name and not name.startswith("<"):  # skip <scenario>-style holes
+            refs.add(name)
+    return refs
+
+
+def check_file(path: pathlib.Path, known: set[str]) -> list[str]:
+    failures = []
+    text = path.read_text()
+
+    env = {k: v for k, v in os.environ.items() if k != "PYTHONPATH"}
+    for cmd in _snippet_commands(text):
+        proc = subprocess.run(
+            cmd,
+            shell=True,
+            capture_output=True,
+            text=True,
+            cwd=REPO_ROOT,
+            env=env,
+        )
+        if proc.returncode != 0:
+            failures.append(
+                f"{path}: snippet failed ({proc.returncode}): {cmd}\n"
+                f"  stderr: {proc.stderr.strip()[:500]}"
+            )
+        elif not proc.stdout.strip():
+            failures.append(f"{path}: snippet produced no output: {cmd}")
+        else:
+            print(f"ok: {cmd}  [{len(proc.stdout.splitlines())} lines]")
+
+    for name in sorted(_scenario_refs(text)):
+        if name not in known:
+            failures.append(f"{path}: references scenario {name!r} not in registry")
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    from repro.bench import scenarios
+
+    known = {s.name for s in scenarios.list_scenarios()}
+    paths = [pathlib.Path(a) for a in argv] or [
+        pathlib.Path("docs/benchmarks.md"),
+        pathlib.Path("docs/architecture.md"),
+    ]
+    failures: list[str] = []
+    for path in paths:
+        if not path.exists():
+            failures.append(f"missing docs file: {path}")
+            continue
+        failures.extend(check_file(path, known))
+    for f in failures:
+        print(f"DOCS CHECK FAIL: {f}", file=sys.stderr)
+    if not failures:
+        print(f"docs check: OK ({len(paths)} files)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
