@@ -27,13 +27,16 @@ FIGURES = {
 }
 
 
-def run_bench_scenarios(names: list[str], out_dir: str = ".") -> None:
-    """Run registered bench scenarios and print their CSV rows."""
+def run_bench_scenarios(
+    names: list[str], out_dir: str = ".", trace: bool = False
+) -> None:
+    """Run registered bench scenarios and print their CSV rows.  ``trace``
+    adds a traced pass per engine (TRACE_*.json in ``out_dir``)."""
     from repro.bench import harness, report as report_lib, scenarios
 
     for name in names:
         spec = scenarios.get_scenario(name)
-        result = harness.run_scenario(spec)
+        result = harness.run_scenario(spec, trace_dir=out_dir if trace else None)
         rep = report_lib.make_report(spec, result)
         path = report_lib.write_report(rep, out_dir)
         for eng, run in sorted(rep["engines"].items()):
@@ -69,6 +72,9 @@ def main() -> None:
     ap.add_argument("--bench", action="append", default=[],
                     help="also run a registered repro.bench scenario "
                          "(repeatable); writes BENCH_<name>.json")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --bench: record traced passes "
+                         "(TRACE_<scenario>_<engine>.json)")
     args = ap.parse_args()
 
     if args.list:
@@ -100,7 +106,7 @@ def main() -> None:
                            engine=args.engine)
 
     if args.bench:
-        run_bench_scenarios(args.bench)
+        run_bench_scenarios(args.bench, trace=args.trace)
 
     from benchmarks import bench_opt_alpha, bench_relay_kernel, roofline
 

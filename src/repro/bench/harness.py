@@ -34,6 +34,7 @@ assertion.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
 import time
 
 import jax
@@ -49,6 +50,13 @@ from repro.fl.distributed import (
     build_scan_round_step,
 )
 from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
+from repro.obs import (
+    NULL_TRACER,
+    Tracer,
+    phase_attribution,
+    write_chrome_trace,
+    write_jsonl,
+)
 from repro.optim.sgd import ClientOpt
 
 
@@ -75,11 +83,23 @@ class EngineRun:
     dispatches: int
     final_loss: float
     overlap_fraction: float | None = None
+    steady_overlap_fraction: float | None = None
     host_prep_s: float | None = None
     host_wait_s: float | None = None
+    chunks_staged: int | None = None
+    # traced-pass artifacts (``trace_dir`` runs only): the Chrome trace on
+    # disk and the per-phase attribution summary.  The traced pass is a
+    # *third* run — its fences serialize the pipeline (observer effect), so
+    # the perf numbers above always come from the untraced warm run.
+    trace_path: str | None = None
+    telemetry: dict | None = None
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # the telemetry block is aggregated once at the report's top level
+        # (make_report), not duplicated per engine entry
+        d.pop("telemetry")
+        return d
 
 
 def _pregenerate_batches(bundle: ScenarioBundle) -> list:
@@ -93,11 +113,15 @@ def _pregenerate_batches(bundle: ScenarioBundle) -> list:
     ]
 
 
-def _run_once(bundle: ScenarioBundle, engine, batches: list):
-    """One full pass over the scenario; returns (wall_s, metrics, params)."""
+def _run_once(bundle: ScenarioBundle, engine, batches: list, tracer=None):
+    """One full pass over the scenario; returns (wall_s, metrics, params).
+    ``tracer`` threads telemetry through every layer of the pass (schedule
+    instants, policy solve spans, engine dispatch/fence spans)."""
     spec = bundle.spec
     schedule = bundle.make_schedule()
-    policy = bundle.make_policy()
+    policy = bundle.make_policy(tracer=tracer)
+    if tracer is not None:
+        schedule.tracer = tracer
     params = bundle.init_fn(jax.random.key(spec.seed))
     fused = isinstance(engine, (EpochScanEngine, PipelinedScanEngine))
     sim = engine.sim if fused else engine
@@ -127,9 +151,37 @@ def _run_once(bundle: ScenarioBundle, engine, batches: list):
             next_batch=lambda: next(stream),
             lr=spec.lr,
             policy=policy,
+            tracer=tracer,
         )
-    jax.block_until_ready(params)
+    if tracer is not None:
+        # the trailing drain belongs to the device phase too
+        with tracer.span("run.finalize", cat="device", track="device"):
+            jax.block_until_ready(params)
+    else:
+        jax.block_until_ready(params)
     return time.perf_counter() - t0, metrics, params
+
+
+def _finish_trace(tracer: Tracer, trace_dir, scenario: str, engine: str):
+    """Export a traced pass (Chrome trace + JSONL) and distill its telemetry
+    block: per-phase attribution plus counters.  ``attributed_fraction`` is
+    the share of the trace's wall span covered by phase spans — the rest is
+    untraced host glue."""
+    trace_dir = pathlib.Path(trace_dir)
+    path = trace_dir / f"TRACE_{scenario}_{engine}.json"
+    write_chrome_trace(tracer, path)
+    write_jsonl(tracer, path.with_suffix(".jsonl"))
+    phases = phase_attribution(tracer.events)
+    wall = tracer.wall_seconds()
+    telemetry = {
+        "wall_s": wall,
+        "phases": phases,
+        "attributed_fraction": sum(phases.values()) / wall if wall > 0 else 0.0,
+        "counters": dict(tracer.counters),
+        "events": len(tracer.events),
+        "dropped": tracer.dropped,
+    }
+    return str(path), telemetry
 
 
 class _MeshStep:
@@ -168,17 +220,23 @@ class _MeshStep:
         self.fused = jax.jit(counted_fused)
 
 
-def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: list):
+def _run_mesh_once(
+    bundle: ScenarioBundle, step: _MeshStep, name: str, batches: list, tracer=None
+):
     """One full mesh-path pass; returns (wall_s, losses, params, n_segments,
     prefetch_stats).  Walks ``schedule.segments()`` exactly like
     ``EpochScanEngine.run_schedule``: one OPT-α solve and one τ block per
     epoch, with the τ key chain advanced once per round so every engine
     consumes identical randomness.  The ``pipelined`` engine stages whole
     segments through a :class:`SegmentPrefetcher` and dispatches the τ-fused
-    epoch scan — the key chain advances on device, identically."""
+    epoch scan — the key chain advances on device, identically.  ``tracer``
+    adds the same span set as the sim path (stage/dispatch/device)."""
     spec = bundle.spec
     schedule = bundle.make_schedule()
-    policy = bundle.make_policy()
+    policy = bundle.make_policy(tracer=tracer)
+    tr = NULL_TRACER if tracer is None else tracer
+    if tracer is not None:
+        schedule.tracer = tracer
     if policy is None:
         raise ValueError("the mesh round step needs a relay policy")
     params = bundle.init_fn(jax.random.key(spec.seed))
@@ -199,6 +257,7 @@ def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: 
             chunk=spec.rounds,
             next_batch=lambda: next(stream),
             policy=policy,
+            tracer=tracer,
         )
         try:
             for item in prefetcher:
@@ -209,10 +268,26 @@ def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: 
                 A = jnp.asarray(item.A, jnp.float32)
                 p = jnp.asarray(seg.p, jnp.float32)
                 # item.batches is already device-resident (staged transfer)
-                key, params, server_state, seg_losses = step.fused(
-                    key, params, server_state, item.batches, p, spec.lr, A
-                )
+                if tr.enabled:
+                    with tr.span(
+                        "mesh.fused", cat="dispatch", epoch=seg.epoch_id
+                    ):
+                        key, params, server_state, seg_losses = step.fused(
+                            key, params, server_state, item.batches, p, spec.lr, A
+                        )
+                else:
+                    key, params, server_state, seg_losses = step.fused(
+                        key, params, server_state, item.batches, p, spec.lr, A
+                    )
                 prefetcher.note_inflight(seg_losses)
+                if tr.enabled:
+                    with tr.span(
+                        "mesh.device",
+                        cat="device",
+                        track="device",
+                        epoch=seg.epoch_id,
+                    ):
+                        jax.block_until_ready(seg_losses)
                 losses.append(seg_losses)
         finally:
             prefetcher.close()
@@ -231,6 +306,20 @@ def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: 
             seg_batches = [next(stream) for _ in range(seg.n_rounds)]
             if name == "loop":
                 for r in range(seg.n_rounds):
+                    if tr.enabled:
+                        with tr.span("mesh.stage", cat="stage", epoch=seg.epoch_id):
+                            batch = jax.tree.map(jnp.asarray, seg_batches[r])
+                        with tr.span(
+                            "mesh.round", cat="dispatch", epoch=seg.epoch_id
+                        ):
+                            params, server_state, loss = step.round(
+                                params, server_state, batch, taus[r], spec.lr, A
+                            )
+                        with tr.span(
+                            "mesh.sync", cat="device", track="device"
+                        ):
+                            losses.append(float(loss))
+                        continue
                     batch = jax.tree.map(jnp.asarray, seg_batches[r])
                     params, server_state, loss = step.round(
                         params, server_state, batch, taus[r], spec.lr, A
@@ -241,20 +330,38 @@ def _run_mesh_once(bundle: ScenarioBundle, step: _MeshStep, name: str, batches: 
                     # wrong thing
                     losses.append(float(loss))
             else:
-                stacked = jax.tree.map(
-                    lambda *xs: jnp.asarray(np.stack(xs)), *seg_batches
-                )
-                params, server_state, seg_losses = step.scan(
-                    params, server_state, stacked, jnp.stack(taus), spec.lr, A
-                )
+                if tr.enabled:
+                    with tr.span("mesh.stage", cat="stage", epoch=seg.epoch_id):
+                        stacked = jax.tree.map(
+                            lambda *xs: jnp.asarray(np.stack(xs)), *seg_batches
+                        )
+                    with tr.span("mesh.scan", cat="dispatch", epoch=seg.epoch_id):
+                        params, server_state, seg_losses = step.scan(
+                            params, server_state, stacked, jnp.stack(taus), spec.lr, A
+                        )
+                    with tr.span(
+                        "mesh.device", cat="device", track="device"
+                    ):
+                        jax.block_until_ready(seg_losses)
+                else:
+                    stacked = jax.tree.map(
+                        lambda *xs: jnp.asarray(np.stack(xs)), *seg_batches
+                    )
+                    params, server_state, seg_losses = step.scan(
+                        params, server_state, stacked, jnp.stack(taus), spec.lr, A
+                    )
                 losses.append(seg_losses)
-    jax.block_until_ready(params)
+    if tr.enabled:
+        with tr.span("run.finalize", cat="device", track="device"):
+            jax.block_until_ready(params)
+    else:
+        jax.block_until_ready(params)
     wall = time.perf_counter() - t0
     losses = jnp.asarray(losses) if name == "loop" else jnp.concatenate(losses)
     return wall, losses, params, n_segments, prefetch_stats
 
 
-def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list):
+def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None):
     """Cold + warm mesh-path pass; mirrors :func:`run_engine`."""
     spec = bundle.spec
     if name not in ("loop", "scan", "pipelined"):
@@ -263,6 +370,11 @@ def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list):
     cold_s, _, _, _, _ = _run_mesh_once(bundle, step, name, batches)
     warm = _run_mesh_once(bundle, step, name, batches)
     warm_s, losses, params, n_segments, overlap = warm
+    trace_path = telemetry = None
+    if trace_dir is not None:
+        tracer = Tracer()
+        _run_mesh_once(bundle, step, name, batches, tracer=tracer)
+        trace_path, telemetry = _finish_trace(tracer, trace_dir, spec.name, name)
     dispatches = spec.rounds if name == "loop" else n_segments
     run = EngineRun(
         engine=name,
@@ -273,17 +385,29 @@ def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list):
         dispatches=dispatches,
         final_loss=float(losses[-1]),
         overlap_fraction=None if overlap is None else overlap.overlap_fraction,
+        steady_overlap_fraction=(
+            None if overlap is None else overlap.steady_overlap_fraction
+        ),
         host_prep_s=None if overlap is None else overlap.prep_s,
         host_wait_s=None if overlap is None else overlap.wait_s,
+        chunks_staged=None if overlap is None else overlap.chunks_staged,
+        trace_path=trace_path,
+        telemetry=telemetry,
     )
     return run, params
 
 
-def run_engine(bundle: ScenarioBundle, name: str, batches: list):
-    """Cold + warm pass of one engine; returns (EngineRun, final params)."""
+def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None):
+    """Cold + warm pass of one engine; returns (EngineRun, final params).
+
+    ``trace_dir`` adds a third, *traced* pass on the already-compiled engine
+    and writes ``TRACE_<scenario>_<engine>.json`` (+ ``.jsonl``) there.  The
+    traced pass fences the device per chunk, so its wall time is not the
+    warm measurement — the ``wall_s``/``overlap_fraction`` numbers always
+    come from the untraced warm run."""
     spec = bundle.spec
     if spec.step == "mesh":
-        return _run_mesh_engine(bundle, name, batches)
+        return _run_mesh_engine(bundle, name, batches, trace_dir)
     if spec.step != "sim":
         raise ValueError(f"unknown step: {spec.step!r}")
     sim = bundle.make_sim()
@@ -303,6 +427,17 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list):
     warm_s, metrics, params = _run_once(bundle, engine, batches)
     trace_count = engine.trace_count  # engine == sim on the loop path
     overlap = getattr(engine, "prefetch_stats", None)  # warm run's stats
+    trace_path = telemetry = None
+    if trace_dir is not None:
+        tracer = Tracer()
+        if name in ("scan", "pipelined"):
+            engine.tracer = tracer
+        try:
+            _run_once(bundle, engine, batches, tracer=tracer)
+        finally:
+            if name in ("scan", "pipelined"):
+                engine.tracer = NULL_TRACER
+        trace_path, telemetry = _finish_trace(tracer, trace_dir, spec.name, name)
     run = EngineRun(
         engine=name,
         wall_s=warm_s,
@@ -312,8 +447,14 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list):
         dispatches=dispatches,
         final_loss=float(metrics["loss"][-1]),
         overlap_fraction=None if overlap is None else overlap.overlap_fraction,
+        steady_overlap_fraction=(
+            None if overlap is None else overlap.steady_overlap_fraction
+        ),
         host_prep_s=None if overlap is None else overlap.prep_s,
         host_wait_s=None if overlap is None else overlap.wait_s,
+        chunks_staged=None if overlap is None else overlap.chunks_staged,
+        trace_path=trace_path,
+        telemetry=telemetry,
     )
     return run, params
 
@@ -323,6 +464,7 @@ def run_scenario(
     *,
     engines=("loop", "scan", "pipelined"),
     check_bitwise: bool = True,
+    trace_dir=None,
 ) -> dict:
     """Run ``spec`` under every engine; returns
     ``{"runs": {name: EngineRun}, "speedup": float | None,
@@ -344,7 +486,7 @@ def run_scenario(
     runs: dict[str, EngineRun] = {}
     finals = {}
     for name in engines:
-        runs[name], finals[name] = run_engine(bundle, name, batches)
+        runs[name], finals[name] = run_engine(bundle, name, batches, trace_dir)
     speedups = {}
     if "loop" in runs:
         speedups = {

@@ -20,12 +20,19 @@ Report schema (``schema_version`` 1)::
       },
       "speedup_rounds_per_sec": 6.2,
       "speedups_vs_loop": {"scan": 6.2, "pipelined": 7.4},
-      "bitwise_match": true
+      "bitwise_match": true,
+      "telemetry": {            // --trace runs only; null otherwise
+        "pipelined": {"wall_s": ..., "phases": {"solve": ..., ...},
+                      "attributed_fraction": ..., "counters": {...},
+                      "events": ..., "dropped": ...},
+        ...
+      }
     }
 
-The overlap metrics and ``speedups_vs_loop`` are additive v1 fields (older
-readers ignore them; older reports read back with them absent) — see
-``docs/benchmarks.md`` for the field-by-field reading guide.
+The overlap metrics, ``speedups_vs_loop`` and the ``telemetry`` block are
+additive v1 fields (older readers ignore them; older reports read back with
+them absent) — see ``docs/benchmarks.md`` for the field-by-field reading
+guide and ``docs/observability.md`` for the telemetry block.
 
 The gate (:func:`check_regression`) compares per-engine ``rounds_per_sec``
 against a checked-in baseline report and fails when throughput regresses by
@@ -53,6 +60,9 @@ SCHEMA_VERSION = 1
 def make_report(spec: ScenarioSpec, result: dict) -> dict:
     """Assemble the JSON payload from a :func:`run_scenario` result."""
     runs: dict[str, EngineRun] = result["runs"]
+    telemetry = {
+        name: run.telemetry for name, run in runs.items() if run.telemetry is not None
+    }
     return {
         "schema_version": SCHEMA_VERSION,
         "scenario": spec.name,
@@ -65,6 +75,7 @@ def make_report(spec: ScenarioSpec, result: dict) -> dict:
         "speedup_rounds_per_sec": result["speedup"],
         "speedups_vs_loop": result.get("speedups", {}),
         "bitwise_match": result["bitwise_match"],
+        "telemetry": telemetry or None,
     }
 
 

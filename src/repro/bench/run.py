@@ -7,6 +7,11 @@ optionally gate against a checked-in baseline.
         --baseline benchmarks/baselines/BENCH_bench_smoke.json \\
         --max-regression 2.0
 
+``--trace`` adds a third, instrumented pass per engine and writes
+``TRACE_<scenario>_<engine>.json`` (Perfetto-loadable) + ``.jsonl`` next to
+the report; the report gains a ``telemetry`` block and the summary prints
+each engine's per-phase attribution (see ``docs/observability.md``).
+
 Exit status is non-zero when the regression gate fails (CI wires this into
 the ``bench-smoke`` job; see ``make bench-smoke``).
 """
@@ -16,6 +21,7 @@ import argparse
 import sys
 
 from repro.bench import harness, report as report_lib, scenarios
+from repro.obs.summary import format_attribution
 
 
 def format_scenario_line(spec) -> str:
@@ -41,6 +47,13 @@ def format_summary(rep: dict) -> str:
                 f"wait {run['host_wait_s']:.3f}s)"
             )
         lines.append(line)
+    for name, tele in sorted((rep.get("telemetry") or {}).items()):
+        lines.append(
+            f"  {name} telemetry (traced pass, {tele['events']} events, "
+            f"attributed {tele['attributed_fraction']:.0%} of "
+            f"{tele['wall_s']:.3f}s):"
+        )
+        lines.append(format_attribution(tele["phases"], tele["wall_s"]))
     speedups = rep.get("speedups_vs_loop") or {}
     if speedups:
         pairs = "  ".join(
@@ -82,6 +95,12 @@ def main(argv=None) -> int:
         help="directory for BENCH_<scenario>.json reports",
     )
     ap.add_argument(
+        "--trace",
+        action="store_true",
+        help="record a traced pass per engine: TRACE_<scenario>_<engine>.json"
+        " (+ .jsonl) in --out-dir and a telemetry block in the report",
+    )
+    ap.add_argument(
         "--baseline",
         default=None,
         help="baseline BENCH_*.json to gate against",
@@ -105,7 +124,9 @@ def main(argv=None) -> int:
     status = 0
     for name in names:
         spec = scenarios.get_scenario(name)
-        result = harness.run_scenario(spec, engines=engines)
+        result = harness.run_scenario(
+            spec, engines=engines, trace_dir=args.out_dir if args.trace else None
+        )
         rep = report_lib.make_report(spec, result)
         path = report_lib.write_report(rep, args.out_dir)
         print(format_summary(rep))

@@ -224,13 +224,14 @@ class ScenarioBundle:
             return channels.StaticChannel(adj, p0)
         return channels.TimeVaryingChannel(**kw)
 
-    def make_policy(self):
+    def make_policy(self, tracer=None):
         spec = self.spec
         if spec.policy == "adaptive":
             return channels.AdaptiveOptAlpha(
                 sweeps=spec.opt_sweeps,
                 warm_sweeps=spec.warm_sweeps,
                 method=spec.opt_method,
+                tracer=tracer,
             )
         if spec.policy == "stale":
             return channels.StaleOptAlpha(

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import topology
 from repro.channels.drift import StaticP
+from repro.obs import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +98,10 @@ class ChannelSchedule:
         self._round = 0
         self._epoch = -1
         self._last_key = None
+        # Telemetry sink: segments() marks every epoch boundary with an
+        # instant event.  Plain attribute (not a ctor param) so the bench
+        # harness can attach a tracer to an already-built schedule.
+        self.tracer = NULL_TRACER
 
     def _emit(
         self, adj: np.ndarray, p: np.ndarray, active: np.ndarray | None = None
@@ -146,10 +151,26 @@ class ChannelSchedule:
         buf: list[ChannelState] = []
         for state in self.rounds(n_rounds):
             if buf and state.epoch_id != buf[0].epoch_id:
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "segment",
+                        cat="schedule",
+                        epoch=buf[0].epoch_id,
+                        start_round=buf[0].round,
+                        n_rounds=len(buf),
+                    )
                 yield ChannelSegment(buf[0].epoch_id, buf[0].round, tuple(buf))
                 buf = []
             buf.append(state)
         if buf:
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "segment",
+                    cat="schedule",
+                    epoch=buf[0].epoch_id,
+                    start_round=buf[0].round,
+                    n_rounds=len(buf),
+                )
             yield ChannelSegment(buf[0].epoch_id, buf[0].round, tuple(buf))
 
 

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import opt_alpha, topology
 from repro.channels.schedule import ChannelSegment, ChannelState
+from repro.obs import NULL_TRACER
 
 
 def project_to_support(
@@ -59,11 +60,18 @@ def project_to_support(
 
 @dataclasses.dataclass
 class SchedulerStats:
+    """Per-policy counters.  ``rounds == cache_hits + cache_misses`` always
+    (every ``relay_matrix`` call is exactly one or the other), and
+    ``cache_misses == solves`` (a miss is what triggers a solve);
+    ``evictions`` counts entries the LRU bound pushed out."""
+
     rounds: int = 0
     cache_hits: int = 0
+    cache_misses: int = 0
     solves: int = 0
     warm_solves: int = 0
     sweeps_total: int = 0
+    evictions: int = 0
 
     @property
     def mean_sweeps(self) -> float:
@@ -82,6 +90,7 @@ class AdaptiveOptAlpha:
         cache_size: int = 64,
         warm_start: bool = True,
         method: str = "bisect",
+        tracer=None,
     ):
         if cache_size < 1:
             raise ValueError("cache_size must be >= 1")
@@ -92,6 +101,10 @@ class AdaptiveOptAlpha:
         self.warm_start = warm_start
         self.method = method
         self.stats = SchedulerStats()
+        # telemetry (repro.obs): cache hit/miss/eviction counters plus one
+        # span per solve, keyed by the masked client count — the NULL_TRACER
+        # default keeps the untraced path to a single attribute check
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self._last_A: np.ndarray | None = None
 
@@ -102,8 +115,13 @@ class AdaptiveOptAlpha:
         if hit is not None:
             self._cache.move_to_end(key)
             self.stats.cache_hits += 1
+            if self.tracer.enabled:
+                self.tracer.count("opt_alpha.cache_hits")
             self._last_A = hit
             return hit
+        self.stats.cache_misses += 1
+        if self.tracer.enabled:
+            self.tracer.count("opt_alpha.cache_misses")
         A0 = None
         sweeps = self.sweeps
         masked = state.active is not None and not state.active.all()
@@ -120,25 +138,39 @@ class AdaptiveOptAlpha:
             A0 = opt_alpha.warm_start_weights(p_eff, adj_eff, self._last_A)
             sweeps = self.warm_sweeps
             self.stats.warm_solves += 1
-        if masked:
-            res = opt_alpha.optimize_masked(
+        def _solve():
+            if masked:
+                return opt_alpha.optimize_masked(
+                    state.p,
+                    state.adj,
+                    state.active,
+                    sweeps=sweeps,
+                    tol=self.tol,
+                    A0=A0,
+                    method=self.method,
+                )
+            return opt_alpha.optimize(
                 state.p,
                 state.adj,
-                state.active,
                 sweeps=sweeps,
                 tol=self.tol,
                 A0=A0,
                 method=self.method,
             )
+
+        if self.tracer.enabled:
+            with self.tracer.span(
+                "opt_alpha.solve",
+                cat="solve",
+                epoch=state.epoch_id,
+                n_active=state.n_active,
+                warm=A0 is not None,
+            ):
+                res = _solve()
+            self.tracer.count("opt_alpha.solves")
+            self.tracer.count("opt_alpha.sweeps", res.sweeps)
         else:
-            res = opt_alpha.optimize(
-                state.p,
-                state.adj,
-                sweeps=sweeps,
-                tol=self.tol,
-                A0=A0,
-                method=self.method,
-            )
+            res = _solve()
         self.stats.solves += 1
         self.stats.sweeps_total += res.sweeps
         # the cache and the warm-start seed alias the returned array; freeze
@@ -147,6 +179,9 @@ class AdaptiveOptAlpha:
         self._cache[key] = res.A
         if len(self._cache) > self.cache_size:
             self._cache.popitem(last=False)
+            self.stats.evictions += 1
+            if self.tracer.enabled:
+                self.tracer.count("opt_alpha.evictions")
         self._last_A = res.A
         return res.A
 
@@ -182,21 +217,42 @@ class PrefetchStats:
     consumer actually blocked on the queue; in inline mode, staging time
     during which the device had no dispatch in flight to hide it behind.
     ``overlap_fraction = 1 - wait_s / prep_s`` (clamped to [0, 1]) is the
-    fraction of host work the pipeline removed from the critical path.  The
-    first chunk can never overlap (pipeline fill), so the fraction is < 1
-    even at perfect steady-state overlap.
+    fraction of host work the pipeline removed from the critical path.
+
+    The first chunk can never overlap (pipeline fill: there is no dispatch
+    in flight yet), so ``overlap_fraction`` is < 1 even at perfect
+    steady-state overlap — and on short runs the fill chunk biases it badly
+    low.  ``first_prep_s`` / ``first_wait_s`` isolate that chunk, and
+    ``steady_overlap_fraction`` is the same ratio with it excluded — the
+    number that actually answers "does the pipeline hide host work once
+    running".  ``chunks`` counts chunks the consumer dequeued,
+    ``chunks_staged`` chunks the staging side produced (equal after a full
+    run; staged may lead consumed mid-run in threaded mode).
     """
 
     chunks: int = 0
+    chunks_staged: int = 0
     segments: int = 0
     prep_s: float = 0.0
     wait_s: float = 0.0
+    first_prep_s: float = 0.0
+    first_wait_s: float = 0.0
 
     @property
     def overlap_fraction(self) -> float:
         if self.prep_s <= 0.0:
             return 0.0
         return min(1.0, max(0.0, 1.0 - self.wait_s / self.prep_s))
+
+    @property
+    def steady_overlap_fraction(self) -> float:
+        """``overlap_fraction`` excluding the pipeline-fill chunk (0.0 when
+        the run had no steady-state chunks to measure)."""
+        prep = self.prep_s - self.first_prep_s
+        wait = self.wait_s - self.first_wait_s
+        if prep <= 0.0:
+            return 0.0
+        return min(1.0, max(0.0, 1.0 - wait / prep))
 
 
 class _Failure:
@@ -276,13 +332,18 @@ def _worker_loop(gen, stats: PrefetchStats, q: queue.Queue, stop: threading.Even
         return False
 
     try:
+        first = True
         while True:
             t0 = time.perf_counter()
             try:
                 item = next(gen)
             except StopIteration:
                 break
-            stats.prep_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            stats.prep_s += dt
+            if first:
+                stats.first_prep_s += dt
+                first = False
             if not put(item):
                 return
         put(_DONE)
@@ -290,20 +351,44 @@ def _worker_loop(gen, stats: PrefetchStats, q: queue.Queue, stop: threading.Even
         put(_Failure(exc))
 
 
-def _staged_items(stats, schedule, rounds, chunk, next_batch, policy, pad_to_chunk):
+def _staged_items(stats, schedule, rounds, chunk, next_batch, policy, pad_to_chunk, tracer):
     """The staging stream both modes share (module-level: the generator's
-    frame must not pin the prefetcher — see :func:`_worker_loop`)."""
+    frame must not pin the prefetcher — see :func:`_worker_loop`).
+
+    Telemetry: one ``stage`` span per chunk (batch draws + host stacking)
+    and one ``h2d`` span per chunk (the device transfer), both on the
+    logical ``prefetcher`` track — in threaded mode that is the worker
+    thread's real timeline, in inline mode it is the staging work
+    interleaved on the consumer, either way its own Perfetto row.  The
+    policy's ``solve`` spans fire from inside ``relay_matrix``.
+    """
     for seg in schedule.segments(rounds):
         A = policy.relay_matrix(seg.state) if policy is not None else None
         stats.segments += 1
         for start in range(0, seg.n_rounds, chunk):
             window = min(chunk, seg.n_rounds - start)
-            batches = [next_batch() for _ in range(window)]
             pad = chunk - window if pad_to_chunk else 0
+            if tracer.enabled:
+                with tracer.span(
+                    "prefetch.stage",
+                    cat="stage",
+                    track="prefetcher",
+                    epoch=seg.epoch_id,
+                    rounds=window,
+                ):
+                    host = _stack_host([next_batch() for _ in range(window)], pad)
+                with tracer.span(
+                    "prefetch.h2d", cat="h2d", track="prefetcher", epoch=seg.epoch_id
+                ):
+                    staged = _to_device(host)
+            else:
+                host = _stack_host([next_batch() for _ in range(window)], pad)
+                staged = _to_device(host)
+            stats.chunks_staged += 1
             yield StagedChunk(
                 segment=seg,
                 A=A,
-                batches=_stack_staged(batches, pad),
+                batches=staged,
                 start=start,
                 n_rounds=window,
                 last_in_segment=start + window >= seg.n_rounds,
@@ -357,6 +442,7 @@ class SegmentPrefetcher:
         depth: int = 2,
         pad_to_chunk: bool = False,
         threaded: bool = False,
+        tracer=None,
     ):
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
@@ -365,6 +451,8 @@ class SegmentPrefetcher:
         self.stats = PrefetchStats()
         self.threaded = bool(threaded)
         self._inflight = None
+        self._tracer = NULL_TRACER if tracer is None else tracer
+        self._counters_folded = False
         self._gen = _staged_items(
             self.stats,
             schedule,
@@ -373,6 +461,7 @@ class SegmentPrefetcher:
             next_batch,
             policy,
             bool(pad_to_chunk),
+            self._tracer,
         )
         self._thread = None
         self._finalizer = None
@@ -412,7 +501,10 @@ class SegmentPrefetcher:
                 while True:
                     t0 = time.perf_counter()
                     item = self._queue.get()
-                    self.stats.wait_s += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    self.stats.wait_s += dt
+                    if self.stats.chunks == 0:
+                        self.stats.first_wait_s += dt
                     if item is _DONE:
                         break
                     if isinstance(item, _Failure):
@@ -433,39 +525,62 @@ class SegmentPrefetcher:
             hidden = self._inflight is not None and not self._inflight.is_ready()
             if not hidden:
                 self.stats.wait_s += dt
+            if self.stats.chunks == 0:
+                # pipeline fill: the first chunk has nothing to hide behind,
+                # so its prep/wait is excluded from steady_overlap_fraction
+                self.stats.first_prep_s += dt
+                if not hidden:
+                    self.stats.first_wait_s += dt
             self.stats.chunks += 1
             yield item
 
     def close(self) -> None:
         """Stop the worker and release the queue (idempotent; no-op in
         inline mode).  Also runs via ``weakref.finalize`` if the prefetcher
-        is garbage-collected without an explicit close."""
+        is garbage-collected without an explicit close.  When tracing, the
+        final :class:`PrefetchStats` fold onto the tracer's counters here —
+        once, whichever of close/exhaustion runs first."""
         if self._finalizer is not None:
             self._finalizer()  # runs _shutdown_worker at most once
             self._thread = None
+        if self._tracer.enabled and not self._counters_folded:
+            self._counters_folded = True
+            self._tracer.count("prefetch.chunks", self.stats.chunks)
+            self._tracer.count("prefetch.chunks_staged", self.stats.chunks_staged)
+            self._tracer.count("prefetch.segments", self.stats.segments)
+            self._tracer.count("prefetch.prep_s", self.stats.prep_s)
+            self._tracer.count("prefetch.wait_s", self.stats.wait_s)
 
 
-def _stack_staged(batches: list, pad: int) -> Any:
+def _stack_host(batches: list, pad: int) -> Any:
     """Stack per-round batch pytrees along a new leading axis (zero-padding
-    ``pad`` dead rounds when asked) and move them to the device — all on the
-    worker thread, all in numpy until the final transfer.  Two reasons this
-    lives here and not on the consumer: the multi-MB memcpys happen in the
-    worker's largely GIL-released numpy stretches, and — decisive on the CPU
-    backend — ``jnp.asarray`` of a numpy array never blocks behind an
-    in-flight compiled computation, whereas *eager jnp ops* (a device-side
-    pad/concatenate) queue behind it and would stall the consumer for a full
-    chunk's compute time."""
+    ``pad`` dead rounds when asked), entirely in numpy — the host half of
+    staging, split from :func:`_to_device` so tracing can bill stacking as
+    ``stage`` and the transfer as ``h2d`` without nesting the categories.
+    Both halves run on the staging side (worker thread in threaded mode):
+    the multi-MB memcpys happen in largely GIL-released numpy stretches."""
     import jax  # deferred: everything else in this package is jax-free
-    import jax.numpy as jnp
 
     def leaf(*xs):
         out = np.stack(xs)
         if pad:
             zeros = np.zeros((pad,) + out.shape[1:], out.dtype)
             out = np.concatenate([out, zeros])
-        return jnp.asarray(out)
+        return out
 
     return jax.tree.map(leaf, *batches)
+
+
+def _to_device(host: Any) -> Any:
+    """Move a host-stacked pytree to the device.  ``jnp.asarray`` of a numpy
+    array never blocks behind an in-flight compiled computation — decisive on
+    the CPU backend, where *eager jnp ops* (a device-side pad/concatenate)
+    would queue behind the previous chunk and stall staging for a full
+    chunk's compute time."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree.map(jnp.asarray, host)
 
 
 class StaleOptAlpha:

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.simulator import FLSimulator
+from repro.obs import NULL_TRACER
 
 
 def _stack_rounds(batches: list) -> Any:
@@ -108,16 +109,24 @@ class EpochScanEngine:
     ``FLSimulator.trace_count``.
     """
 
-    def __init__(self, sim: FLSimulator, *, chunk: int = 32):
+    def __init__(self, sim: FLSimulator, *, chunk: int = 32, tracer=None):
         """``chunk`` is the scan length per compiled call and should track
         the channel's coherence time: a padded chunk computes ``chunk``
         rounds regardless of how many are real, so ``chunk`` far above the
         typical epoch length trades dead compute for nothing (e.g. 2-round
-        epochs under ``chunk=32`` cost 16× the math of the loop path)."""
+        epochs under ``chunk=32`` cost 16× the math of the loop path).
+
+        ``tracer`` (a :class:`repro.obs.Tracer`) records per-chunk dispatch
+        spans plus explicit blocked-on-device fences; the fences change the
+        async-dispatch overlap (observer effect), so they — like every other
+        traced extra — run only when ``tracer.enabled``.  Also settable
+        after construction via the ``tracer`` attribute.
+        """
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
         self.sim = sim
         self.chunk = int(chunk)
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._scan_traces = 0
         self._chunk_fn = jax.jit(self._chunk_impl)
         self._taus_fn = jax.jit(self._taus_impl)
@@ -169,7 +178,11 @@ class EpochScanEngine:
         for start in range(0, n_rounds, C):
             real = min(C, n_rounds - start)
             valid = jnp.arange(C) < real
-            key, taus = self._taus_fn(key, p, valid)
+            if self.tracer.enabled:
+                with self.tracer.span("scan.taus", cat="dispatch", rounds=real):
+                    key, taus = self._taus_fn(key, p, valid)
+            else:
+                key, taus = self._taus_fn(key, p, valid)
             parts.append(taus[:real] if real < C else taus)
         return key, (parts[0] if len(parts) == 1 else jnp.concatenate(parts))
 
@@ -200,9 +213,21 @@ class EpochScanEngine:
             bs = _pad_leading(jax.tree.map(lambda x: x[start:stop], batches), pad)
             ts = _pad_leading(taus[start:stop], pad)
             valid = jnp.arange(C) < (stop - start)
-            params, server_state, metrics = self._chunk_fn(
-                params, server_state, bs, ts, valid, A_seg, lr, active_seg
-            )
+            if self.tracer.enabled:
+                with self.tracer.span(
+                    "scan.chunk", cat="dispatch", rounds=stop - start
+                ):
+                    params, server_state, metrics = self._chunk_fn(
+                        params, server_state, bs, ts, valid, A_seg, lr, active_seg
+                    )
+                # explicit fence: bills the in-flight chunk to the device
+                # phase (untraced runs never block here — async dispatch)
+                with self.tracer.span("scan.device", cat="device", track="device"):
+                    jax.block_until_ready(metrics)
+            else:
+                params, server_state, metrics = self._chunk_fn(
+                    params, server_state, bs, ts, valid, A_seg, lr, active_seg
+                )
             if pad:
                 metrics = jax.tree.map(lambda m: m[: stop - start], metrics)
             parts.append(metrics)
@@ -248,11 +273,22 @@ class EpochScanEngine:
             for start in range(0, seg.n_rounds, self.chunk):
                 window = min(self.chunk, seg.n_rounds - start)
                 key, taus = self.sample_taus(key, seg.p, window)
-                batches = [next_batch() for _ in range(window)]
+                if self.tracer.enabled:
+                    with self.tracer.span(
+                        "scan.stage",
+                        cat="stage",
+                        epoch=seg.epoch_id,
+                        rounds=window,
+                    ):
+                        stacked = _stack_rounds(
+                            [next_batch() for _ in range(window)]
+                        )
+                else:
+                    stacked = _stack_rounds([next_batch() for _ in range(window)])
                 params, server_state, metrics = self.run_segment(
                     params,
                     server_state,
-                    _stack_rounds(batches),
+                    stacked,
                     taus,
                     lr,
                     A=A,
@@ -308,6 +344,7 @@ class PipelinedScanEngine:
         chunk: int = 32,
         prefetch: str = "inline",
         prefetch_depth: int = 2,
+        tracer=None,
     ):
         """``prefetch`` picks the staging mode (see
         :class:`~repro.channels.scheduler.SegmentPrefetcher`): ``"inline"``
@@ -315,7 +352,14 @@ class PipelinedScanEngine:
         thread — the right choice on CPU hosts, where a staging thread
         mostly fights the dispatch thread for the GIL; ``"thread"`` stages
         on a worker thread ``prefetch_depth`` chunks ahead — worth trying
-        on real accelerators."""
+        on real accelerators.
+
+        ``tracer`` flows to the prefetcher (stage/h2d spans on the
+        ``prefetcher`` track) and adds per-chunk dispatch + device-fence
+        spans on the consumer side.  The fences serialize the pipeline
+        (observer effect): traced runs show *where* time goes, untraced
+        runs measure how fast it is.  Also settable after construction via
+        the ``tracer`` attribute."""
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
         if prefetch not in ("inline", "thread"):
@@ -324,6 +368,7 @@ class PipelinedScanEngine:
         self.chunk = int(chunk)
         self.prefetch = prefetch
         self.prefetch_depth = int(prefetch_depth)
+        self.tracer = NULL_TRACER if tracer is None else tracer
         self._scan_traces = 0
         # per-run counters (reset by run_schedule, like prefetch_stats):
         # compiled chunk calls — exactly one per chunk
@@ -407,6 +452,7 @@ class PipelinedScanEngine:
             depth=self.prefetch_depth,
             pad_to_chunk=True,  # remainder chunks arrive zero-padded (numpy)
             threaded=self.prefetch == "thread",
+            tracer=self.tracer,
         )
         # The consumer loop must never run an *eager* jnp op: on the CPU
         # backend those queue behind the in-flight chunk and would stall the
@@ -444,19 +490,50 @@ class PipelinedScanEngine:
                 valid = valid_cache.get(real)
                 if valid is None:
                     valid = valid_cache[real] = jnp.asarray(np.arange(C) < real)
-                key, params, server_state, metrics = self._chunk_fn(
-                    key,
-                    params,
-                    server_state,
-                    item.batches,
-                    valid,
-                    A_seg,
-                    p_seg,
-                    lr,
-                    active_seg,
-                )
+                if self.tracer.enabled:
+                    with self.tracer.span(
+                        "pipelined.chunk",
+                        cat="dispatch",
+                        epoch=seg.epoch_id,
+                        rounds=real,
+                    ):
+                        key, params, server_state, metrics = self._chunk_fn(
+                            key,
+                            params,
+                            server_state,
+                            item.batches,
+                            valid,
+                            A_seg,
+                            p_seg,
+                            lr,
+                            active_seg,
+                        )
+                else:
+                    key, params, server_state, metrics = self._chunk_fn(
+                        key,
+                        params,
+                        server_state,
+                        item.batches,
+                        valid,
+                        A_seg,
+                        p_seg,
+                        lr,
+                        active_seg,
+                    )
                 self.dispatches += 1
                 prefetcher.note_inflight(metrics["loss"])
+                if self.tracer.enabled:
+                    # explicit fence: serializes the pipeline (observer
+                    # effect — traced runs show *where* time goes, not how
+                    # fast the untraced overlap is), but makes blocked-on-
+                    # device time a first-class phase on its own track
+                    with self.tracer.span(
+                        "pipelined.device",
+                        cat="device",
+                        track="device",
+                        epoch=seg.epoch_id,
+                    ):
+                        jax.block_until_ready(metrics["loss"])
                 seg_parts.append((metrics, real))
                 if item.last_in_segment:
                     if on_segment is not None:
@@ -471,6 +548,8 @@ class PipelinedScanEngine:
         finally:
             prefetcher.close()
             self.prefetch_stats = prefetcher.stats
+        if self.tracer.enabled:
+            self.tracer.count("pipelined.dispatches", self.dispatches)
         return params, server_state, _trim_concat(all_parts, C), key
 
 
@@ -486,29 +565,52 @@ def run_rounds_loop(
     lr,
     policy=None,
     on_round: Callable | None = None,
+    tracer=None,
 ):
     """The per-round reference driver: the exact loop the figure benchmarks
     run — one dispatch per round and, like every existing driver, a host
     read of the round's loss (``float(...)``, a device sync per round: the
     dispatch-bound regime the scan engine exists to remove).  Factored out
-    so loop-vs-scan comparisons share one definition.
+    so loop-vs-scan comparisons share one definition.  ``tracer`` records
+    per-round stage/dispatch/sync spans (the loop already syncs per round,
+    so tracing adds no extra fence here).
     Returns ``(params, server_state, per_round_metrics, key)``."""
+    tracer = NULL_TRACER if tracer is None else tracer
     all_metrics = []
     for state in schedule.rounds(rounds):
         A = policy.relay_matrix(state) if policy is not None else None
         key, sub = jax.random.split(key)
-        batch = jax.tree.map(jnp.asarray, next_batch())
-        params, server_state, m = sim.run_round(
-            sub,
-            params,
-            server_state,
-            batch,
-            lr,
-            A=A,
-            p=state.p,
-            active=state.active,
-        )
-        float(m["loss"])  # the per-round host sync the loop driver models
+        if tracer.enabled:
+            with tracer.span("loop.stage", cat="stage", round=state.round):
+                batch = jax.tree.map(jnp.asarray, next_batch())
+            with tracer.span("loop.round", cat="dispatch", round=state.round):
+                params, server_state, m = sim.run_round(
+                    sub,
+                    params,
+                    server_state,
+                    batch,
+                    lr,
+                    A=A,
+                    p=state.p,
+                    active=state.active,
+                )
+            with tracer.span(
+                "loop.sync", cat="device", track="device", round=state.round
+            ):
+                float(m["loss"])  # the loop driver's per-round host sync
+        else:
+            batch = jax.tree.map(jnp.asarray, next_batch())
+            params, server_state, m = sim.run_round(
+                sub,
+                params,
+                server_state,
+                batch,
+                lr,
+                A=A,
+                p=state.p,
+                active=state.active,
+            )
+            float(m["loss"])  # the per-round host sync the loop driver models
         all_metrics.append(m)
         if on_round is not None:
             on_round(state.round, params)

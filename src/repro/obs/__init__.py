@@ -1,0 +1,45 @@
+"""Runtime telemetry: structured spans, counters, and trace export.
+
+The observability layer for the execution stack — one :class:`Tracer`
+threads through the engines (`repro.fl.engine`), the scheduler/prefetcher
+(`repro.channels.scheduler`), the schedule (`repro.channels.schedule`) and
+the bench harness (`repro.bench`), recording nested spans, instants and
+monotonic counters into a bounded in-memory buffer.  Exporters turn a run
+into a Perfetto-loadable Chrome trace (host/device overlap visible as
+parallel tracks) or a JSONL stream; ``python -m repro.obs.summary`` prints
+the per-phase time attribution table.  Disabled tracing is the
+:data:`NULL_TRACER` singleton — a single-attribute-check no-op, so
+untraced runs stay bit- and perf-identical.
+
+See ``docs/observability.md`` for the span model, the track/category
+conventions, and how to read a traced pipelined-engine timeline.
+"""
+from repro.obs.export import (
+    chrome_trace,
+    load_trace_file,
+    phase_attribution,
+    phase_attribution_loaded,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    InstantEvent,
+    NullTracer,
+    SpanEvent,
+    Tracer,
+)
+
+__all__ = [
+    "InstantEvent",
+    "NULL_TRACER",
+    "NullTracer",
+    "SpanEvent",
+    "Tracer",
+    "chrome_trace",
+    "load_trace_file",
+    "phase_attribution",
+    "phase_attribution_loaded",
+    "write_chrome_trace",
+    "write_jsonl",
+]

@@ -148,6 +148,9 @@ def test_adaptive_scheduler_lru_cache_and_warm_stats():
     A1_again = pol.relay_matrix(s1)
     np.testing.assert_array_equal(A1, A1_again)  # served from cache
     assert pol.stats.solves == 2 and pol.stats.cache_hits == 1
+    assert pol.stats.cache_misses == 2  # every solve was a miss
+    assert pol.stats.cache_hits + pol.stats.cache_misses == pol.stats.rounds
+    assert pol.stats.evictions == 0  # cache_size=4 holds both entries
     assert pol.stats.warm_solves == 1  # second solve warm-started off A1
     assert not np.array_equal(A1, A2)
 
@@ -161,6 +164,9 @@ def test_adaptive_scheduler_cache_eviction():
         pol.relay_matrix(s)
     pol.relay_matrix(states[0])  # evicted by the 2-deep LRU → re-solved
     assert pol.stats.solves == 4 and pol.stats.cache_hits == 0
+    assert pol.stats.cache_misses == 4  # misses count exactly the solves
+    # 4 inserts into a 2-deep cache ⇒ 2 evictions (states[0] then states[1])
+    assert pol.stats.evictions == 2
 
 
 def test_stale_policy_projects_onto_live_topology():

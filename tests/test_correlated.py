@@ -299,6 +299,10 @@ def test_adaptive_policy_caches_recurring_blockage_patterns():
         assert np.all(A >= -1e-12)
     assert pol.stats.cache_hits > 0
     assert pol.stats.solves + pol.stats.cache_hits == pol.stats.rounds
+    # hit/miss accounting partitions the rounds; misses are exactly solves
+    assert pol.stats.cache_hits + pol.stats.cache_misses == pol.stats.rounds
+    assert pol.stats.cache_misses == pol.stats.solves
+    assert pol.stats.evictions == 0  # cache_size=32 never overflows here
 
 
 def _quad_setting(n, dim=4, T=2, b=4, seed=0):

@@ -216,6 +216,34 @@ def test_prefetcher_overlap_stats_populated():
     assert 0.0 <= pf.stats.overlap_fraction <= 1.0
 
 
+@pytest.mark.parametrize("threaded", [False, True])
+def test_prefetcher_steady_state_overlap_stats(threaded):
+    """chunks_staged counts every staged chunk, and the steady-state overlap
+    fraction excludes exactly the pipeline-fill first chunk's prep/wait —
+    the first chunk has nothing in flight to hide behind, so counting it
+    systematically understates a short run's overlap."""
+    pf = SegmentPrefetcher(
+        _churn_drift_schedule(),
+        12,
+        chunk=4,
+        next_batch=_batch_stream(6),
+        policy=channels.AdaptiveOptAlpha(sweeps=10),
+        threaded=threaded,
+    )
+    items = list(pf)
+    assert pf.stats.chunks_staged == pf.stats.chunks == len(items)
+    # first-chunk accounting: a subset of the totals, never the whole of a
+    # multi-chunk run's prep
+    assert pf.stats.first_prep_s <= pf.stats.prep_s
+    assert pf.stats.first_wait_s <= pf.stats.wait_s
+    if not threaded:
+        assert pf.stats.first_prep_s > 0.0
+        assert pf.stats.first_prep_s < pf.stats.prep_s
+    assert 0.0 <= pf.stats.steady_overlap_fraction <= 1.0
+    # old field unchanged: overall overlap still includes the first chunk
+    assert 0.0 <= pf.stats.overlap_fraction <= 1.0
+
+
 # --------------------------- full-schedule bit-equivalence (the tentpole)
 
 
