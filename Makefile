@@ -14,11 +14,15 @@ test-fast:
 # test-fast plus the coverage gate (CI's test-fast job): measured over
 # src/repro per .coveragerc, failing below the checked-in floor.  The floor
 # is a ratchet — raise it as coverage grows, never lower it to make CI pass.
-# 80 = the prior floor re-ratcheted for the telemetry subsystem: repro.obs
-# ships with exhaustive unit tests, pulling the line up (previous floor: 78).
+# 81 = the PR-7 re-ratchet: the ravel layer / relay-backend / real-model
+# test net lands near-complete coverage on its new code (trees 96%,
+# kernels 98-100%), measured ≈ 83% overall — the remaining drag is the
+# not-yet-wired seed modules (launch/, fl/ring.py, sharding/rules.py), so
+# the floor moves up conservatively rather than to measured−5
+# (previous floor: 80).
 test-cov:
 	$(PYTEST) -x -q -m "not slow" --cov --cov-config=.coveragerc \
-	  --cov-report=term --cov-fail-under=80
+	  --cov-report=term --cov-fail-under=81
 
 # full suite without -x: runs past the known-failing slow convergence
 # bounds so regressions in later files stay visible
@@ -31,12 +35,17 @@ bench:
 # CI perf gate: run the tiny bench scenario (loop vs scan engine), write
 # BENCH_bench_smoke.json, fail on >2x rounds/sec regression vs the
 # checked-in baseline (benchmarks/baselines/, regenerate by copying a fresh
-# report over it when hardware or engine legitimately changes)
+# report over it when hardware or engine legitimately changes).  The second
+# run is the kernel-parity smoke: relay_sweep_smoke carries check_backend,
+# so the harness raises if the Pallas path drifts from the einsum reference
+# (no --baseline — it gates on parity, not throughput).
 bench-smoke:
 	PYTHONPATH=src $(PY) -m repro.bench.run --scenario bench_smoke \
 	  --out-dir . --trace \
 	  --baseline benchmarks/baselines/BENCH_bench_smoke.json \
 	  --max-regression 2.0
+	PYTHONPATH=src $(PY) -m repro.bench.run --scenario relay_sweep_smoke \
+	  --out-dir .
 
 # telemetry demo: traced bench_smoke run (writes TRACE_*.json — load them in
 # https://ui.perfetto.dev) + the per-phase attribution summary for the
@@ -49,8 +58,8 @@ trace-smoke:
 lint:
 	ruff check .
 	ruff format --check src/repro/bench src/repro/channels src/repro/fl \
-	  src/repro/obs tests/test_bench.py tests/test_pipelined_engine.py \
-	  tests/test_obs.py
+	  src/repro/kernels src/repro/obs src/repro/utils tests/test_bench.py \
+	  tests/test_pipelined_engine.py tests/test_obs.py
 
 # spot-check the docs against the live code: runs the --list snippets
 # embedded in the listed docs and verifies every scenario the docs

@@ -4,13 +4,23 @@ Reads benchmarks/artifacts/dryrun/<mesh>/*.json and prints, per
 (arch × shape × mesh): the three roofline terms in seconds, the dominant
 bottleneck, MODEL_FLOPS/HLO ratio, and peak per-device bytes vs the 16 GB
 v5e HBM.  This is the §Roofline source of record; EXPERIMENTS.md embeds its
-output."""
+output.
+
+:func:`relay_table` adds the measured companion: it reads the
+``BENCH_relay_sweep_*.json`` reports (repo root; see
+``repro.bench.scenarios``) and prints, per model size D, the engine
+throughputs, the relay hot spot's bytes/round and arithmetic intensity, and
+whether the scenario sits in the dispatch-bound or bandwidth-bound regime —
+the measured compute-vs-memory crossover of Δ̃ = A·Δ as D sweeps 10⁴ → 10⁷.
+"""
 from __future__ import annotations
 
+import glob
 import json
 import os
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 HBM_PER_CHIP = 16e9  # v5e
 
 
@@ -57,10 +67,75 @@ def table(mesh: str = "pod16x16", *, csv: bool = True) -> list[str]:
     return lines
 
 
+def load_relay_reports(root: str = REPO_ROOT) -> list[dict]:
+    reports = []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_relay_sweep_*.json"))):
+        with open(path) as fh:
+            reports.append(json.load(fh))
+    return sorted(reports, key=lambda r: r.get("model_params") or 0)
+
+
+def relay_table(root: str = REPO_ROOT, *, csv: bool = True) -> list[str]:
+    """Measured relay-sweep roofline: one row per recorded D point.
+
+    Per row: D, n, the engine rounds/sec (reference backend + the kernel
+    check's backend), the fused reduction's HBM traffic per round
+    (read n·D·4 + write D·4 bytes — coeffs and A are noise at these shapes),
+    its arithmetic intensity (2·n·D flops over those bytes — the constant
+    ≈ 0.5 flop/byte that makes the reduction memory-bound at every D), the
+    achieved GB/s implied by the kernel pass, and the regime: rows whose
+    per-round time tracks the smallest-D row's are **dispatch-bound** (fixed
+    overhead dominates); rows whose time scales with D are
+    **traffic-bound** — the crossover is where the regime flips.
+    """
+    reports = load_relay_reports(root)
+    lines = []
+    base_round_s = None
+    for rep in reports:
+        spec = rep.get("spec", {})
+        n = spec.get("n_clients", 0)
+        D = rep.get("model_params") or 0
+        engines = rep.get("engines", {})
+        check = rep.get("kernel_check") or {}
+        kname = f"scan_{check['backend']}" if check else None
+        krps = engines.get(kname, {}).get("rounds_per_sec") if kname else None
+        scan_rps = engines.get("scan", {}).get("rounds_per_sec")
+        loop_rps = engines.get("loop", {}).get("rounds_per_sec")
+        rps = krps or scan_rps or loop_rps
+        if not rps or not D or not n:
+            continue
+        round_s = 1.0 / rps
+        if base_round_s is None:
+            base_round_s = round_s
+        bytes_round = 4.0 * (n * D + D)  # fused reduce: read Δ, write u
+        flops_round = 2.0 * n * D
+        intensity = flops_round / bytes_round
+        gbs = bytes_round * rps / 1e9
+        regime = (
+            "dispatch-bound" if round_s < 3.0 * base_round_s else "traffic-bound"
+        )
+        lines.append(
+            f"relay/{rep['scenario']},D={D},n={n},"
+            f"loop_rps={0.0 if loop_rps is None else loop_rps:.1f},"
+            f"scan_rps={0.0 if scan_rps is None else scan_rps:.1f},"
+            f"kernel_rps={0.0 if krps is None else krps:.1f},"
+            f"bytes_per_round={bytes_round:.3e},"
+            f"intensity_flop_per_byte={intensity:.3f},"
+            f"achieved_gbs={gbs:.2f},"
+            f"max_abs_diff={check.get('max_abs_diff', 0.0):.2e},"
+            f"{regime}"
+        )
+    if csv:
+        for line in lines:
+            print(line)
+    return lines
+
+
 def run():
     out = []
     for mesh in ("pod16x16", "pod2x16x16"):
         out += table(mesh)
+    out += relay_table()
     return out
 
 

@@ -58,6 +58,13 @@ from repro.obs import (
     write_jsonl,
 )
 from repro.optim.sgd import ClientOpt
+from repro.utils import tree_size
+
+# tolerance of the mandatory kernel parity check (run_scenario): the kernel
+# backend re-runs the scan engine and its final params must match the einsum
+# reference to f32 accumulation accuracy over the scenario horizon
+KERNEL_CHECK_RTOL = 1e-5
+KERNEL_CHECK_ATOL = 1e-5
 
 
 @dataclasses.dataclass
@@ -196,6 +203,8 @@ class _MeshStep:
             n_clients=spec.n_clients,
             local_steps=spec.local_steps,
             relay_mode="fused",
+            relay_backend=spec.relay_backend,
+            block_d=spec.block_d,
             client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
             server_opt=ServerOpt(),
         )
@@ -468,7 +477,8 @@ def run_scenario(
 ) -> dict:
     """Run ``spec`` under every engine; returns
     ``{"runs": {name: EngineRun}, "speedup": float | None,
-    "speedups": {name: float}, "bitwise_match": bool | None}``.
+    "speedups": {name: float}, "bitwise_match": bool | None,
+    "model_params": int, "kernel_check": dict | None}``.
 
     ``speedups[name]`` is that engine's rounds/sec over the loop's (absent
     unless the loop ran); ``speedup`` remains the scan/loop headline for
@@ -476,17 +486,76 @@ def run_scenario(
     parameters are bit-identical to the per-round reference — a benchmark
     whose fast path diverges from the reference is measuring the wrong
     thing, so a mismatch raises.
+
+    ``spec.check_backend != "none"`` adds the **mandatory kernel parity
+    check**: the scan engine re-runs on that relay backend (same batches,
+    same randomness) and its final parameters must be allclose to the
+    reference engines' — a mismatch raises, never degrades to a warning.
+    The kernel pass is recorded in ``runs`` as ``scan_<backend>`` (so its
+    throughput lands in the report and the speedup table) but stays out of
+    the bitwise gate, which is reference-backend-only by design.
     """
     if isinstance(spec, str):
         from repro.bench.scenarios import get_scenario
 
         spec = get_scenario(spec)
     bundle = build(spec)
+    model_params = tree_size(bundle.init_fn(jax.random.key(spec.seed)))
     batches = _pregenerate_batches(bundle)
     runs: dict[str, EngineRun] = {}
     finals = {}
     for name in engines:
         runs[name], finals[name] = run_engine(bundle, name, batches, trace_dir)
+    kernel_check = None
+    if spec.check_backend != "none" and finals:
+        kspec = dataclasses.replace(
+            spec, relay_backend=spec.check_backend, check_backend="none"
+        )
+        kname = f"scan_{spec.check_backend}"
+        krun, kfinal = run_engine(build(kspec), "scan", batches)
+        ref_name = "loop" if "loop" in finals else sorted(finals)[0]
+        leaves_r = jax.tree.leaves(finals[ref_name])
+        leaves_k = jax.tree.leaves(kfinal)
+        max_abs_diff = max(
+            (
+                float(
+                    np.max(
+                        np.abs(
+                            np.asarray(a, np.float64) - np.asarray(b, np.float64)
+                        )
+                    )
+                )
+                for a, b in zip(leaves_r, leaves_k)
+            ),
+            default=0.0,
+        )
+        ok = len(leaves_r) == len(leaves_k) and all(
+            np.allclose(
+                np.asarray(a, np.float64),
+                np.asarray(b, np.float64),
+                rtol=KERNEL_CHECK_RTOL,
+                atol=KERNEL_CHECK_ATOL,
+            )
+            for a, b in zip(leaves_r, leaves_k)
+        )
+        if not ok:
+            raise AssertionError(
+                f"{spec.name}: {spec.check_backend} backend diverged from "
+                f"the {spec.relay_backend} reference "
+                f"(max |Δ| = {max_abs_diff:.3e} > "
+                f"atol {KERNEL_CHECK_ATOL:g} / rtol {KERNEL_CHECK_RTOL:g})"
+            )
+        runs[kname] = dataclasses.replace(krun, engine=kname)
+        kernel_check = {
+            "backend": spec.check_backend,
+            "reference_backend": spec.relay_backend,
+            "engine": "scan",
+            "allclose": True,
+            "rtol": KERNEL_CHECK_RTOL,
+            "atol": KERNEL_CHECK_ATOL,
+            "max_abs_diff": max_abs_diff,
+            "rounds_per_sec": krun.rounds_per_sec,
+        }
     speedups = {}
     if "loop" in runs:
         speedups = {
@@ -496,7 +565,7 @@ def run_scenario(
         }
     speedup = speedups.get("scan")
     bitwise = None
-    if check_bitwise and "loop" in runs and len(runs) > 1:
+    if check_bitwise and "loop" in runs and len(finals) > 1:
         leaves_l = jax.tree.leaves(finals["loop"])
         for name, final in finals.items():
             if name == "loop":
@@ -516,4 +585,6 @@ def run_scenario(
         "speedup": speedup,
         "speedups": speedups,
         "bitwise_match": bitwise,
+        "model_params": model_params,
+        "kernel_check": kernel_check,
     }

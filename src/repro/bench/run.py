@@ -54,6 +54,16 @@ def format_summary(rep: dict) -> str:
             f"{tele['wall_s']:.3f}s):"
         )
         lines.append(format_attribution(tele["phases"], tele["wall_s"]))
+    check = rep.get("kernel_check")
+    if check:
+        lines.append(
+            f"  kernel check [{check['backend']}]: allclose vs "
+            f"{check['reference_backend']} (max |Δ| {check['max_abs_diff']:.2e} "
+            f"≤ atol {check['atol']:g}/rtol {check['rtol']:g}), "
+            f"{check['rounds_per_sec']:.1f} rounds/s on the kernel backend"
+        )
+    if rep.get("model_params"):
+        lines.append(f"  model_params D = {rep['model_params']:,}")
     speedups = rep.get("speedups_vs_loop") or {}
     if speedups:
         pairs = "  ".join(

@@ -30,6 +30,14 @@ The registered scenarios:
   mesh_corr_500   the production mesh round step (``build_round_step`` vs
                   ``build_scan_round_step``) under the coupled correlated
                   channel — ``spec.step = "mesh"`` swaps the execution path
+  resnet20_cifar  the paper's §V model (ResNet-20/GN) on CIFAR-shaped
+                  synthetic batches through all three engines, with the
+                  pallas mix-kernel parity check on the side
+  relay_sweep_1e4 / _1e5 / _1e6 / _1e7 / _smoke
+                  the relay/aggregate hot spot swept over model size
+                  D = 10⁴ … 10⁷ (compute- vs memory-bound crossover);
+                  reference engines + the mandatory pallas_fused kernel
+                  check (see benchmarks/roofline.py)
 """
 from __future__ import annotations
 
@@ -39,12 +47,15 @@ import jax
 import jax.numpy as jnp
 
 from repro import channels
+from repro.configs.resnet20_cifar import CONFIG as _RESNET20_CONFIG
 from repro.core import connectivity, topology
 from repro.core.aggregation import ServerOpt
 from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition
-from repro.data.synthetic import gaussian_classification
+from repro.data.synthetic import cifar_like, gaussian_classification
 from repro.fl.simulator import FLSimulator
+from repro.kernels.ops import RELAY_BACKENDS
+from repro.models.resnet import init_resnet20, resnet20_loss
 from repro.optim.sgd import ClientOpt
 
 
@@ -67,11 +78,23 @@ class ScenarioSpec:
     warm_sweeps: int = 12
     lr: float = 0.1
     seed: int = 0
-    # model / data (MLP over flat gaussian features)
+    # model / data: "mlp" = spec-sized MLP over flat gaussian features
+    # (dim/width apply); "resnet20" = the paper's §V ResNet-20 over
+    # CIFAR-shaped synthetic images (dim/width ignored)
+    model: str = "mlp"
     dim: int = 64
     width: int = 32
     n_classes: int = 10
     n_train: int = 1024
+    # relay backend for the (n, D) aggregation hot spot (repro.kernels):
+    # einsum = pure-XLA reference, pallas / pallas_fused = the kernel paths.
+    # block_d sizes the kernel's Δ tile (None ⇒ kernel default).
+    # check_backend != "none" makes the harness run one extra scan pass on
+    # that backend and assert allclose against the reference engines' finals
+    # (the mandatory kernel parity check; recorded as report.kernel_check).
+    relay_backend: str = "einsum"
+    block_d: int | None = None
+    check_backend: str = "none"
     # channel composition
     topology: str = "ring"  # ring | full
     ring_k: int = 2
@@ -115,6 +138,20 @@ class ScenarioSpec:
             raise ValueError("mesh scenarios bench the fused relay only")
         if self.fading == "corr_uplink" and self.drift != "static":
             raise ValueError("corr_uplink couples p to the fade; set drift='static'")
+        if self.model not in ("mlp", "resnet20"):
+            raise ValueError(f"unknown model: {self.model!r}")
+        if self.relay_backend not in RELAY_BACKENDS:
+            raise ValueError(
+                f"unknown relay_backend: {self.relay_backend!r} "
+                f"(known: {RELAY_BACKENDS})"
+            )
+        if self.check_backend not in ("none",) + RELAY_BACKENDS:
+            raise ValueError(f"unknown check_backend: {self.check_backend!r}")
+        if self.check_backend == self.relay_backend:
+            raise ValueError(
+                "check_backend must differ from relay_backend (the parity "
+                "check compares the two)"
+            )
 
 
 def _make_mlp(dim: int, width: int, n_classes: int):
@@ -137,6 +174,20 @@ def _make_mlp(dim: int, width: int, n_classes: int):
         logz = jax.nn.logsumexp(lg, axis=-1)
         gold = jnp.take_along_axis(lg, batch["labels"][:, None], 1)[:, 0]
         return jnp.mean(logz - gold)
+
+    return init, loss
+
+
+def _make_resnet20(n_classes: int):
+    """The paper's §V model (repro.models.resnet, GN variant) bound to its
+    checked-in config; batches carry ``images``/``labels`` leaves
+    (CIFAR-shaped, see ``data.synthetic.cifar_like``)."""
+
+    def init(key):
+        return init_resnet20(key, _RESNET20_CONFIG, num_classes=n_classes)
+
+    def loss(params, batch):
+        return resnet20_loss(params, _RESNET20_CONFIG, batch)
 
     return init, loss
 
@@ -251,23 +302,36 @@ class ScenarioBundle:
             local_steps=spec.local_steps,
             client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
             server_opt=ServerOpt(),
+            relay_backend=spec.relay_backend,
+            block_d=spec.block_d,
         )
 
     def make_loader(self) -> FederatedLoader:
         spec = self.spec
-        ds = gaussian_classification(
-            spec.n_train,
-            dim=spec.dim,
-            n_classes=spec.n_classes,
-            snr=0.5,
-            seed=spec.seed,
-        )
+        if spec.model == "resnet20":
+            ds = cifar_like(
+                spec.n_train,
+                n_classes=spec.n_classes,
+                snr=0.5,
+                seed=spec.seed,
+            )
+        else:
+            ds = gaussian_classification(
+                spec.n_train,
+                dim=spec.dim,
+                n_classes=spec.n_classes,
+                snr=0.5,
+                seed=spec.seed,
+            )
         parts = iid_partition(ds, spec.n_clients, seed=spec.seed)
         return FederatedLoader(ds, parts, seed=spec.seed)
 
 
 def build(spec: ScenarioSpec) -> ScenarioBundle:
-    init_fn, loss_fn = _make_mlp(spec.dim, spec.width, spec.n_classes)
+    if spec.model == "resnet20":
+        init_fn, loss_fn = _make_resnet20(spec.n_classes)
+    else:
+        init_fn, loss_fn = _make_mlp(spec.dim, spec.width, spec.n_classes)
     return ScenarioBundle(spec, init_fn, loss_fn)
 
 
@@ -435,6 +499,95 @@ register(
         adj_every=25,
         p_every=25,
         chunk=25,
+    )
+)
+
+# ---------------------------------------------------------------- real model
+
+register(
+    ScenarioSpec(
+        name="resnet20_cifar",
+        description=(
+            "the paper's §V model: ResNet-20 (GN) on CIFAR-shaped synthetic "
+            "batches, paper-faithful relay, pallas mix-kernel parity check"
+        ),
+        n_clients=4,
+        rounds=24,
+        local_steps=1,
+        local_batch=2,
+        strategy="colrel",
+        model="resnet20",
+        n_train=256,
+        adj_every=8,
+        p_every=8,
+        drift_hold=1,
+        chunk=8,
+        lr=0.05,
+        check_backend="pallas",
+    )
+)
+
+# ------------------------------------------------------------- relay D-sweep
+# The compute-vs-memory-bound crossover of the relay/aggregate hot spot:
+# identical channel/engine setting, model size D swept 10⁴ → 10⁷ (the MLP is
+# sized so total params ≈ the target D).  Engines run the einsum reference
+# (bitwise_match gate applies); the harness's mandatory kernel check re-runs
+# the scan engine on the pallas_fused backend and asserts allclose — so every
+# recorded BENCH_relay_sweep_* report carries both the reference numbers and
+# the kernel parity/throughput (see benchmarks/roofline.py:relay_table).
+# block_d grows with D to keep the interpret-mode grid small on CPU; on TPU
+# the same specs run with interpret off.
+
+_RELAY_SWEEP = {
+    # name suffix -> (dim, width, rounds, block_d); D = dim·w + w + 10·w + 10
+    "1e4": (96, 96, 64, None),  # D ≈ 1.03e4
+    "1e5": (256, 384, 32, 16384),  # D ≈ 1.03e5
+    "1e6": (1024, 960, 16, 131072),  # D ≈ 9.9e5
+    "1e7": (3072, 3248, 8, 1048576),  # D ≈ 1.00e7
+}
+
+for _suffix, (_dim, _width, _rounds, _block) in _RELAY_SWEEP.items():
+    register(
+        ScenarioSpec(
+            name=f"relay_sweep_{_suffix}",
+            description=(
+                f"relay hot-spot sweep @ D≈{_suffix}: fused aggregation "
+                "over the raveled buffer, static channel, pallas_fused "
+                "parity check"
+            ),
+            n_clients=8,
+            rounds=_rounds,
+            local_steps=1,
+            local_batch=4,
+            dim=_dim,
+            width=_width,
+            n_train=512,
+            fading="static",
+            drift="static",
+            chunk=_rounds,
+            block_d=_block,
+            check_backend="pallas_fused",
+        )
+    )
+
+register(
+    ScenarioSpec(
+        name="relay_sweep_smoke",
+        description=(
+            "CI-sized D-sweep point (D≈1e4, 8 rounds): exercises the "
+            "pallas_fused kernel check end-to-end in seconds"
+        ),
+        n_clients=8,
+        rounds=8,
+        local_steps=1,
+        local_batch=4,
+        dim=96,
+        width=96,
+        n_train=512,
+        fading="static",
+        drift="static",
+        chunk=8,
+        check_backend="pallas_fused",
     )
 )
 

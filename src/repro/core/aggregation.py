@@ -22,6 +22,17 @@ matrix is restricted to the active block — so an inactive client contributes
 *exactly zero* to the increment and unbiasedness holds over the active set.
 ``active=None`` is the full-membership fast path: it compiles with the
 static 1/n weight and is bit-identical to the fixed-n formulation.
+
+Flat-buffer hot path (``relay_backend``)
+----------------------------------------
+Every strategy also has a ``*_flat`` variant consuming the raveled ``(n, D)``
+buffer (``repro.utils.stacked_ravel``) instead of the stacked pytree, with a
+``backend`` knob dispatching the (n,n)·(n,D) contraction to the Pallas
+kernels (``repro.kernels``): ``einsum`` is the pure-XLA reference, ``pallas``
+materializes Δ̃ = A·Δ through the mix kernel, ``pallas_fused`` runs the
+relay∘aggregate composition u = (w·τᵀA)·Δ as one kernel pass.  The pytree
+``Aggregator.fn`` is now a thin ravel → flat → unravel wrapper, so all
+callers share one math definition.
 """
 from __future__ import annotations
 
@@ -32,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import relay as relay_lib
-from repro.utils import tree_axpy, tree_scale, tree_zeros_like
+from repro.kernels import ops as kernel_ops
+from repro.utils import stacked_ravel, tree_axpy, tree_scale, tree_unravel, tree_zeros_like
 
 
 def active_weight(active, *, n: int):
@@ -92,11 +104,95 @@ def no_dropout_increment(stacked_updates, *, n: int, active=None):
     return jax.tree.map(reduce, stacked_updates)
 
 
+# --------------------------------------------------------------------------
+# Flat-buffer increments: same math on the raveled (n, D) buffer, with the
+# relay_backend dispatch to the Pallas kernels
+# --------------------------------------------------------------------------
+
+
+def colrel_increment_flat(A, tau, buf, *, n: int, fused: bool = True,
+                          active=None, backend: str = "einsum",
+                          block_d: int | None = None, interpret=None):
+    """ColRel PS increment over the (n, D) buffer → (D,).
+
+    ``fused=True`` (or ``backend='pallas_fused'``, which implies it) computes
+    u = (w·τᵀA)·Δ without materializing the relayed updates; ``fused=False``
+    materializes Δ̃ = A·Δ (paper-faithful protocol shape) then runs the blind
+    masked sum w·Σ τ_r Δ̃_r.  Churn: inactive rows/cols of A are zeroed and
+    τ intersected with the mask, so inactive slots contribute exactly zero.
+    """
+    w = active_weight(active, n=n)
+    tau = jnp.asarray(tau, jnp.float32)
+    if active is not None:
+        a = jnp.asarray(active, jnp.float32)
+        A = relay_lib.mask_relay_matrix(A, a)
+        tau = tau * a
+    if fused or backend == "pallas_fused":
+        coeffs = w * (tau @ jnp.asarray(A, jnp.float32))
+        reduce_backend = "einsum" if backend == "einsum" else "pallas_fused"
+        return kernel_ops.reduce_flat(
+            coeffs, buf, backend=reduce_backend,
+            block_d=block_d, interpret=interpret,
+        )
+    mixed = kernel_ops.mix_flat(
+        A, buf, backend=backend, block_d=block_d, interpret=interpret
+    )
+    return kernel_ops.reduce_flat(w * tau, mixed, backend="einsum")
+
+
+def fedavg_blind_increment_flat(tau, buf, *, n: int, active=None,
+                                backend: str = "einsum",
+                                block_d: int | None = None, interpret=None):
+    w = active_weight(active, n=n)
+    tau = jnp.asarray(tau, jnp.float32)
+    if active is not None:
+        tau = tau * jnp.asarray(active, jnp.float32)
+    return _coeff_reduce(w * tau, buf, backend, block_d, interpret)
+
+
+def fedavg_nonblind_increment_flat(tau, buf, *, active=None,
+                                   backend: str = "einsum",
+                                   block_d: int | None = None, interpret=None):
+    tau = jnp.asarray(tau, jnp.float32)
+    if active is not None:
+        tau = tau * jnp.asarray(active, jnp.float32)
+    coeffs = tau / jnp.maximum(tau.sum(), 1.0)
+    return _coeff_reduce(coeffs, buf, backend, block_d, interpret)
+
+
+def no_dropout_increment_flat(buf, *, n: int, active=None,
+                              backend: str = "einsum",
+                              block_d: int | None = None, interpret=None):
+    if active is None:
+        coeffs = jnp.full((n,), 1.0 / n, jnp.float32)
+    else:
+        a = jnp.asarray(active, jnp.float32)
+        coeffs = a / jnp.maximum(a.sum(), 1.0)
+    return _coeff_reduce(coeffs, buf, backend, block_d, interpret)
+
+
+def _coeff_reduce(coeffs, buf, backend, block_d, interpret):
+    # non-colrel strategies are already a single weighted reduce, so both
+    # kernel backends collapse to the fused-reduction kernel
+    reduce_backend = "einsum" if backend == "einsum" else "pallas_fused"
+    return kernel_ops.reduce_flat(
+        coeffs, buf, backend=reduce_backend, block_d=block_d,
+        interpret=interpret,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
-    """Bundles a strategy name with its increment function.
+    """Bundles a strategy name with its increment functions.
 
-    ``fn(tau, stacked_updates, A=None, active=None) -> increment pytree``.
+    ``fn(tau, stacked_updates, A=None, active=None) -> increment pytree``
+    is the structured entry point: it ravels the stacked updates to the
+    contiguous ``(n, D)`` buffer, runs ``flat_fn``, and unravels the result
+    (leaves stay in the f32 buffer dtype — the server optimizer owns the
+    cast back to the parameter dtype).  ``flat_fn(tau, buf, A=None,
+    active=None) -> (D,)`` is the raveled hot path the engines call directly
+    when they already hold the buffer.
+
     For the colrel strategies A is a *traced input* so a time-varying channel
     can swap relay matrices between rounds without retracing the jitted step;
     when omitted, the matrix bound at construction time is used
@@ -106,6 +202,8 @@ class Aggregator:
 
     name: str
     fn: Callable  # (tau, stacked_updates, A=None, active=None) -> increment
+    flat_fn: Callable  # (tau, buf, A=None, active=None) -> (D,) increment
+    relay_backend: str = "einsum"
 
 
 def make_aggregator(
@@ -113,8 +211,17 @@ def make_aggregator(
     *,
     n: int,
     A=None,
+    relay_backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
 ) -> Aggregator:
+    """``relay_backend`` ∈ ``repro.kernels.ops.RELAY_BACKENDS`` picks the
+    einsum reference or the Pallas kernel for the (n,n)·(n,D) contraction;
+    ``block_d`` / ``interpret`` tune the kernel (None ⇒ kernel defaults,
+    interpret auto-on off-TPU)."""
+    kernel_ops.validate_backend(relay_backend)
     default_A = A
+    kw = dict(backend=relay_backend, block_d=block_d, interpret=interpret)
 
     def _resolve(A_arg):
         A_eff = default_A if A_arg is None else A_arg
@@ -124,36 +231,32 @@ def make_aggregator(
         return A_eff
 
     if strategy == "colrel":
-        return Aggregator(
-            "colrel",
-            lambda tau, upd, A=None, active=None: colrel_increment(
-                _resolve(A), tau, upd, n=n, fused=False, active=active),
-        )
-    if strategy == "colrel_fused":
-        return Aggregator(
-            "colrel_fused",
-            lambda tau, upd, A=None, active=None: colrel_increment(
-                _resolve(A), tau, upd, n=n, fused=True, active=active),
-        )
-    if strategy == "fedavg_blind":
-        return Aggregator(
-            "fedavg_blind",
-            lambda tau, upd, A=None, active=None: fedavg_blind_increment(
-                tau, upd, n=n, active=active),
-        )
-    if strategy == "fedavg_nonblind":
-        return Aggregator(
-            "fedavg_nonblind",
-            lambda tau, upd, A=None, active=None: fedavg_nonblind_increment(
-                tau, upd, active=active),
-        )
-    if strategy == "no_dropout":
-        return Aggregator(
-            "no_dropout",
-            lambda tau, upd, A=None, active=None: no_dropout_increment(
-                upd, n=n, active=active),
-        )
-    raise ValueError(f"unknown aggregation strategy: {strategy!r}")
+        def flat_fn(tau, buf, A=None, active=None):
+            return colrel_increment_flat(
+                _resolve(A), tau, buf, n=n, fused=False, active=active, **kw)
+    elif strategy == "colrel_fused":
+        def flat_fn(tau, buf, A=None, active=None):
+            return colrel_increment_flat(
+                _resolve(A), tau, buf, n=n, fused=True, active=active, **kw)
+    elif strategy == "fedavg_blind":
+        def flat_fn(tau, buf, A=None, active=None):
+            return fedavg_blind_increment_flat(
+                tau, buf, n=n, active=active, **kw)
+    elif strategy == "fedavg_nonblind":
+        def flat_fn(tau, buf, A=None, active=None):
+            return fedavg_nonblind_increment_flat(
+                tau, buf, active=active, **kw)
+    elif strategy == "no_dropout":
+        def flat_fn(tau, buf, A=None, active=None):
+            return no_dropout_increment_flat(buf, n=n, active=active, **kw)
+    else:
+        raise ValueError(f"unknown aggregation strategy: {strategy!r}")
+
+    def fn(tau, upd, A=None, active=None):
+        buf, spec = stacked_ravel(upd)
+        return tree_unravel(spec, flat_fn(tau, buf, A, active), cast=False)
+
+    return Aggregator(strategy, fn, flat_fn, relay_backend)
 
 
 # --------------------------------------------------------------------------

@@ -27,10 +27,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import relay as relay_lib
+from repro.core import aggregation, relay as relay_lib
 from repro.core.aggregation import ServerOpt, active_weight
 from repro.optim.sgd import ClientOpt
-from repro.utils import tree_scale, tree_sub
+from repro.utils import stacked_ravel, tree_scale, tree_sub, tree_unravel
 
 
 def build_round_step(
@@ -40,6 +40,9 @@ def build_round_step(
     local_steps: int,
     A=None,
     relay_mode: str = "faithful",
+    relay_backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
 ):
@@ -58,19 +61,24 @@ def build_round_step(
     matrix, τ and the blind weight (1/n_active) to the live clients, so
     membership changes between calls never retrace.  ``None`` keeps the
     static-weight fixed-membership path.
+
+    ``relay_backend`` dispatches the relay∘aggregate contraction over the
+    raveled (n, D) delta buffer to the Pallas kernels (see
+    ``repro.core.aggregation.colrel_increment_flat``).  It applies wherever
+    per-client deltas are materialized — every path except T = 1 fused, whose
+    weighted-loss trick never forms an (n, D) tensor to stream (there is
+    nothing for a kernel to read, so that path stays pure XLA).
     """
     T = local_steps
     A_static = A
+    aggregation_kw = dict(
+        backend=relay_backend, block_d=block_d, interpret=interpret
+    )
 
     def round(params, server_state, batch, tau, lr, A=None, active=None):
         A = A_static if A is None else A
         if A is None:
             raise ValueError("no relay matrix: bind A at build time or pass it")
-        w = active_weight(active, n=n_clients)
-        if active is not None:
-            a = jnp.asarray(active, jnp.float32)
-            A = relay_lib.mask_relay_matrix(A, a)
-            tau = jnp.asarray(tau, jnp.float32) * a
 
         def _mean_loss(losses):
             if active is None:
@@ -78,7 +86,44 @@ def build_round_step(
             a_ = jnp.asarray(active, jnp.float32)
             return jnp.sum(losses * a_) / jnp.maximum(a_.sum(), 1.0)
 
-        if T == 1:
+        def _flat_increment(deltas):
+            # ravel → kernel-dispatched increment → structured f32 view;
+            # churn masking (A, τ, 1/n_active) happens inside the flat fn
+            buf, spec = stacked_ravel(deltas)
+            flat = aggregation.colrel_increment_flat(
+                A, tau, buf, n=n_clients, fused=(relay_mode == "fused"),
+                active=active, **aggregation_kw,
+            )
+            return tree_unravel(spec, flat, cast=False)
+
+        if T == 1 and relay_mode == "fused":
+            # never materialize per-client deltas: weighted loss trick —
+            # Σ_o c_o Δ_o = -lr · ∇ Σ_o c_o L_o(x)  (+ wd term)
+            w = active_weight(active, n=n_clients)
+            A_f, tau_f = A, tau
+            if active is not None:
+                a = jnp.asarray(active, jnp.float32)
+                A_f = relay_lib.mask_relay_matrix(A, a)
+                tau_f = jnp.asarray(tau, jnp.float32) * a
+            c = relay_lib.fused_coefficients(A_f, tau_f)  # (n,)
+
+            def weighted_loss(p):
+                sq = jax.tree.map(lambda x: x[:, 0], batch)  # (n, b, ...)
+                losses = jax.vmap(lambda b_: loss_fn(p, b_))(sq)
+                return jnp.sum(c * losses), losses
+
+            (_, losses), gsum = jax.value_and_grad(weighted_loss, has_aux=True)(
+                params
+            )
+            csum = jnp.sum(c)
+
+            def _fused_inc(gs, pe):
+                wd = csum * client_opt.weight_decay * pe.astype(jnp.float32)
+                return -lr * w * (gs.astype(jnp.float32) + wd)
+
+            inc = jax.tree.map(_fused_inc, gsum, params)
+            mean_loss = _mean_loss(losses)
+        elif T == 1:
             # deltas_g: stacked decayed grads (n, ...); Δ_i = -lr · g_i
             def one(client_batch):
                 sq = jax.tree.map(lambda x: x[0], client_batch)
@@ -90,33 +135,9 @@ def build_round_step(
 
                 return jax.tree.map(_decayed, g, params), loss
 
-            if relay_mode == "fused":
-                # never materialize per-client deltas: weighted loss trick —
-                # Σ_o c_o Δ_o = -lr · ∇ Σ_o c_o L_o(x)  (+ wd term)
-                c = relay_lib.fused_coefficients(A, tau)  # (n,)
-
-                def weighted_loss(p):
-                    sq = jax.tree.map(lambda x: x[:, 0], batch)  # (n, b, ...)
-                    losses = jax.vmap(lambda b_: loss_fn(p, b_))(sq)
-                    return jnp.sum(c * losses), losses
-
-                (_, losses), gsum = jax.value_and_grad(weighted_loss, has_aux=True)(
-                    params
-                )
-                csum = jnp.sum(c)
-
-                def _fused_inc(gs, pe):
-                    wd = csum * client_opt.weight_decay * pe.astype(jnp.float32)
-                    return -lr * w * (gs.astype(jnp.float32) + wd)
-
-                inc = jax.tree.map(_fused_inc, gsum, params)
-                mean_loss = _mean_loss(losses)
-            else:
-                deltas_g, losses = jax.vmap(one)(batch)
-                deltas = tree_scale(-lr, deltas_g)
-                relayed = relay_lib.relay(A, deltas)
-                inc = relay_lib.masked_aggregate(tau, relayed, w=w)
-                mean_loss = _mean_loss(losses)
+            deltas_g, losses = jax.vmap(one)(batch)
+            inc = _flat_increment(tree_scale(-lr, deltas_g))
+            mean_loss = _mean_loss(losses)
         else:
 
             def client_update(client_batch):
@@ -135,11 +156,7 @@ def build_round_step(
 
             deltas, losses = jax.vmap(client_update)(batch)
             mean_loss = _mean_loss(losses)
-            if relay_mode == "fused":
-                inc = relay_lib.fused_aggregate(A, tau, deltas, w=w)
-            else:
-                relayed = relay_lib.relay(A, deltas)
-                inc = relay_lib.masked_aggregate(tau, relayed, w=w)
+            inc = _flat_increment(deltas)
 
         new_params, new_state = server_opt.apply(params, server_state, inc)
         return new_params, new_state, mean_loss
@@ -154,6 +171,9 @@ def build_scan_round_step(
     local_steps: int,
     A=None,
     relay_mode: str = "faithful",
+    relay_backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
 ):
@@ -174,6 +194,9 @@ def build_scan_round_step(
         local_steps=local_steps,
         A=A,
         relay_mode=relay_mode,
+        relay_backend=relay_backend,
+        block_d=block_d,
+        interpret=interpret,
         client_opt=client_opt,
         server_opt=server_opt,
     )
@@ -200,6 +223,9 @@ def build_fused_scan_round_step(
     local_steps: int,
     A=None,
     relay_mode: str = "faithful",
+    relay_backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
 ):
@@ -222,6 +248,9 @@ def build_fused_scan_round_step(
         local_steps=local_steps,
         A=A,
         relay_mode=relay_mode,
+        relay_backend=relay_backend,
+        block_d=block_d,
+        interpret=interpret,
         client_opt=client_opt,
         server_opt=server_opt,
     )

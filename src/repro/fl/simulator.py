@@ -18,7 +18,7 @@ import numpy as np
 from repro.core import aggregation
 from repro.core.aggregation import ServerOpt
 from repro.optim.sgd import ClientOpt
-from repro.utils import tree_sub
+from repro.utils import stacked_ravel, tree_sub, tree_unravel
 
 
 def _metrics(loss, tau, delta_norm):
@@ -46,6 +46,11 @@ class FLSimulator:
     while ``trace_count`` stays at 1.  ``active=None`` (default) is the
     full-membership path, bit-identical to the fixed-n formulation.
 
+    ``relay_backend`` ∈ {einsum, pallas, pallas_fused} picks the engine for
+    the relay∘aggregate contraction over the raveled ``(n, D)`` delta buffer
+    (``repro.kernels``); einsum is the pure-XLA reference.  ``block_d`` /
+    ``interpret`` tune the Pallas kernel (None ⇒ defaults).
+
     ``run_round`` is the per-round reference path (one dispatch per round).
     For long horizons, :class:`repro.fl.engine.EpochScanEngine` fuses whole
     channel epochs into ``lax.scan`` calls over the same ``_round_math``
@@ -65,6 +70,9 @@ class FLSimulator:
         local_steps: int = 8,
         client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
         server_opt: ServerOpt = ServerOpt(),
+        relay_backend: str = "einsum",
+        block_d: int | None = None,
+        interpret=None,
     ):
         self.loss_fn = loss_fn
         self.n = n_clients
@@ -72,11 +80,18 @@ class FLSimulator:
         self.client_opt = client_opt
         self.server_opt = server_opt
         self.strategy = strategy
+        self.relay_backend = relay_backend
         self.p = (
             jnp.asarray(p, jnp.float32) if p is not None else jnp.ones((n_clients,))
         )
         self.A = jnp.asarray(A, jnp.float32) if A is not None else None
-        self.aggregator = aggregation.make_aggregator(strategy, n=n_clients)
+        self.aggregator = aggregation.make_aggregator(
+            strategy,
+            n=n_clients,
+            relay_backend=relay_backend,
+            block_d=block_d,
+            interpret=interpret,
+        )
         self.trace_count = 0
         self._round = jax.jit(self._round_impl)
 
@@ -105,15 +120,16 @@ class FLSimulator:
         deltas, losses = jax.vmap(self._client_update, in_axes=(None, 0, None))(
             params, batch, lr
         )
-        increment = self.aggregator.fn(tau, deltas, A, active)
+        # ravel the stacked deltas once: the aggregation hot spot (and the
+        # kernel backends behind it) see one contiguous (n, D) buffer, while
+        # the clients above ran on the structured view
+        buf, spec = stacked_ravel(deltas)
+        flat_inc = self.aggregator.flat_fn(tau, buf, A, active)
+        increment = tree_unravel(spec, flat_inc, cast=False)
         new_params, new_state = self.server_opt.apply(params, server_state, increment)
 
-        def _client_sq_norm(i):
-            return sum(
-                jnp.sum(l[i].astype(jnp.float32) ** 2) for l in jax.tree.leaves(deltas)
-            )
-
-        per_client_dn = jax.vmap(_client_sq_norm)(jnp.arange(self.n))
+        # per-client ‖Δ‖² falls out of the buffer for free (one row-sum)
+        per_client_dn = jnp.sum(buf * buf, axis=1)
         if active is None:
             mean_loss, dn = jnp.mean(losses), jnp.mean(per_client_dn)
         else:

@@ -12,7 +12,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import relay as relay_lib
+from repro.kernels import ref as _ref
 from repro.kernels import relay_mix as _k
+
+# the relay_backend knob (make_aggregator / build_round_step / scenarios):
+#   einsum        pure-XLA reference path (ref.py oracles on the flat buffer)
+#   pallas        kernel mix Δ̃ = A·Δ; the PS reduction stays an einsum
+#   pallas_fused  kernel u = (w·τᵀA)·Δ — relay∘aggregate in one pass, the
+#                 n×-less-write-traffic hot path
+RELAY_BACKENDS = ("einsum", "pallas", "pallas_fused")
+
+
+def validate_backend(backend: str) -> str:
+    if backend not in RELAY_BACKENDS:
+        raise ValueError(f"unknown relay_backend {backend!r} (known: {RELAY_BACKENDS})")
+    return backend
 
 
 def _default_interpret() -> bool:
@@ -27,8 +41,9 @@ def _mask_A(A, active):
     return relay_lib.mask_relay_matrix(A, active)
 
 
-def relay_mix(A, stacked, *, active=None, block_d: int = _k.DEFAULT_BLOCK_D,
-              interpret=None):
+def relay_mix(
+    A, stacked, *, active=None, block_d: int = _k.DEFAULT_BLOCK_D, interpret=None
+):
     """Δ̃ = A·Δ over a stacked pytree (leaves (n, ...)).  ``active`` is the
     optional churn mask: inactive rows/cols of A are zeroed, so a departed
     client's slot neither relays nor is relayed."""
@@ -39,7 +54,9 @@ def relay_mix(A, stacked, *, active=None, block_d: int = _k.DEFAULT_BLOCK_D,
     def mix(leaf):
         flat = leaf.reshape(n, -1)
         out = _k.relay_mix_2d(
-            jnp.asarray(A), flat, block_d=min(block_d, max(128, flat.shape[1])),
+            jnp.asarray(A),
+            flat,
+            block_d=min(block_d, max(128, flat.shape[1])),
             interpret=interpret,
         )
         return out.reshape(leaf.shape)
@@ -47,8 +64,16 @@ def relay_mix(A, stacked, *, active=None, block_d: int = _k.DEFAULT_BLOCK_D,
     return jax.tree.map(mix, stacked)
 
 
-def fused_aggregate(A, tau, stacked, *, w, active=None,
-                    block_d: int = _k.DEFAULT_BLOCK_D, interpret=None):
+def fused_aggregate(
+    A,
+    tau,
+    stacked,
+    *,
+    w,
+    active=None,
+    block_d: int = _k.DEFAULT_BLOCK_D,
+    interpret=None,
+):
     """w · Σ_r τ_r (A·Δ)_r without materializing the relayed updates.
     ``w`` may be a python float (fixed membership) or a traced scalar
     (1/n_active under churn); ``active`` masks A and τ to the live block."""
@@ -63,9 +88,73 @@ def fused_aggregate(A, tau, stacked, *, w, active=None,
     def reduce(leaf):
         flat = leaf.reshape(n, -1)
         out = _k.fused_aggregate_2d(
-            coeffs, flat, block_d=min(block_d, max(128, flat.shape[1])),
+            coeffs,
+            flat,
+            block_d=min(block_d, max(128, flat.shape[1])),
             interpret=interpret,
         )
         return out.reshape(leaf.shape[1:])
 
     return jax.tree.map(reduce, stacked)
+
+
+# --------------------------------------------------------------------------
+# Flat-buffer dispatch: the (n, D) raveled hot path (utils.stacked_ravel)
+# --------------------------------------------------------------------------
+
+
+def _block(block_d, width: int) -> int:
+    """Clamp the tile width to the buffer (tiny-D scenarios must not pad a
+    64-wide model to a 4096 tile); floor 128 = the TPU lane granule."""
+    return min(
+        _k.DEFAULT_BLOCK_D if block_d is None else block_d, max(128, width)
+    )
+
+
+def mix_flat(
+    A,
+    buf,
+    *,
+    active=None,
+    backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
+):
+    """Δ̃ = A·Δ on the contiguous (n, D) buffer.  ``backend`` picks the
+    einsum oracle or the Pallas kernel; ``active`` is the churn mask (zeroes
+    inactive rows/cols of A before dispatch, on either backend)."""
+    validate_backend(backend)
+    A = _mask_A(A, active)
+    if backend == "einsum":
+        return _ref.relay_mix_2d(A, buf)
+    interpret = _default_interpret() if interpret is None else interpret
+    return _k.relay_mix_2d(
+        jnp.asarray(A),
+        buf,
+        block_d=_block(block_d, buf.shape[1]),
+        interpret=interpret,
+    )
+
+
+def reduce_flat(
+    coeffs,
+    buf,
+    *,
+    backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
+):
+    """u = coeffs·Δ on the (n, D) buffer → (D,).  ``coeffs`` already carries
+    every weighting (w·τᵀA for the fused colrel path, w·τ for the blind
+    sum, ...), so churn masking happens in the caller's coefficients."""
+    validate_backend(backend)
+    coeffs = jnp.asarray(coeffs, jnp.float32)
+    if backend == "einsum":
+        return _ref.fused_aggregate_2d(coeffs, buf)
+    interpret = _default_interpret() if interpret is None else interpret
+    return _k.fused_aggregate_2d(
+        coeffs,
+        buf,
+        block_d=_block(block_d, buf.shape[1]),
+        interpret=interpret,
+    )

@@ -48,8 +48,8 @@ def _relay_mix_core(A, delta, block_d: int, interpret: bool):
         _mix_kernel,
         grid=(Dp // block_d,),
         in_specs=[
-            pl.BlockSpec((n, n), lambda j: (0, 0)),          # A resident
-            pl.BlockSpec((n, block_d), lambda j: (0, j)),     # Δ streamed
+            pl.BlockSpec((n, n), lambda j: (0, 0)),  # A resident
+            pl.BlockSpec((n, block_d), lambda j: (0, j)),  # Δ streamed
         ],
         out_specs=pl.BlockSpec((n, block_d), lambda j: (0, j)),
         out_shape=jax.ShapeDtypeStruct((n, Dp), delta.dtype),
@@ -67,8 +67,9 @@ def _relay_mix_bwd(block_d, interpret, res, g):
     # ∂/∂A = g Δᵀ is a small (n, n) reduction.
     A, delta = res
     ddelta = _relay_mix_core(A.T, g, block_d, interpret)
-    dA = jnp.einsum("rd,od->ro", g.astype(jnp.float32),
-                    delta.astype(jnp.float32)).astype(A.dtype)
+    dA = jnp.einsum(
+        "rd,od->ro", g.astype(jnp.float32), delta.astype(jnp.float32)
+    ).astype(A.dtype)
     return dA, ddelta
 
 

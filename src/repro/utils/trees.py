@@ -2,9 +2,17 @@
 
 All model parameters, updates and optimizer states in this framework are plain
 pytrees; these helpers implement the handful of vector-space operations the
-ColRel algebra needs (weighted sums, norms, dtype casts).
+ColRel algebra needs (weighted sums, norms, dtype casts), plus the
+raveled-view layer: :func:`tree_ravel` / :func:`tree_unravel` flatten a
+pytree to one contiguous buffer (and back) under a static :class:`TreeSpec`,
+and :func:`stacked_ravel` does the same for a stacked per-client tree —
+giving the relay/aggregate hot spot a single ``(n, D)`` operand while the
+clients' local SGD keeps the structured view.
 """
 from __future__ import annotations
+
+import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -49,3 +57,112 @@ def tree_size(a) -> int:
 
 def tree_cast(a, dtype):
     return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+# --------------------------------------------------------------------------
+# Raveled view: pytree ⇄ one contiguous buffer under a static TreeSpec
+# --------------------------------------------------------------------------
+
+# leaf dtypes a float32 buffer represents exactly (f32 has strictly more
+# mantissa/exponent bits than either half precision format, so the
+# ravel→unravel round trip is bit-exact for these)
+_F32_EXACT = ("float32", "bfloat16", "float16")
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Static description of a raveled pytree: everything needed to restore
+    the structured view from the contiguous buffer.  Hashable (treedefs are),
+    so a spec can ride through jit as a static argument."""
+
+    treedef: object
+    shapes: tuple  # per-leaf shapes, in flatten order
+    dtypes: tuple  # per-leaf dtype names, in flatten order
+
+    @property
+    def sizes(self) -> tuple:
+        return tuple(math.prod(s) for s in self.shapes)
+
+    @property
+    def total(self) -> int:
+        """D — the total scalar count of the raveled buffer."""
+        return sum(self.sizes)
+
+
+def tree_spec(tree) -> TreeSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    return TreeSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(x.shape) for x in leaves),
+        dtypes=tuple(jnp.asarray(x).dtype.name for x in leaves),
+    )
+
+
+def _check_exact(spec: TreeSpec, dtype) -> None:
+    buf = jnp.dtype(dtype).name
+    for name in spec.dtypes:
+        if name != buf and not (buf == "float32" and name in _F32_EXACT):
+            raise TypeError(
+                f"leaf dtype {name} is not exactly representable in a "
+                f"{buf} buffer — the ravel round trip would not be bit-exact"
+            )
+
+
+def tree_ravel(tree, *, dtype=jnp.float32):
+    """Flatten ``tree`` into one contiguous ``(D,)`` buffer.
+
+    Returns ``(flat, spec)``.  The buffer dtype must represent every leaf
+    dtype exactly (float32 covers f32/bf16/f16), so
+    ``tree_unravel(spec, flat)`` restores the original leaves bit-for-bit.
+    """
+    leaves, _ = jax.tree.flatten(tree)
+    spec = tree_spec(tree)
+    _check_exact(spec, dtype)
+    if not leaves:
+        return jnp.zeros((0,), dtype), spec
+    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves]), spec
+
+
+def tree_unravel(spec: TreeSpec, flat, *, cast: bool = True):
+    """Restore the structured view from a raveled ``(D,)`` buffer.
+
+    ``cast=True`` returns each leaf in its original dtype (the bit-exact
+    inverse of :func:`tree_ravel`); ``cast=False`` keeps the buffer dtype —
+    the increment path, where aggregation math stays f32 and the server
+    optimizer owns the final cast back to the parameter dtype.
+    """
+    if flat.shape != (spec.total,):
+        raise ValueError(f"buffer shape {flat.shape} != ({spec.total},)")
+    leaves = []
+    offset = 0
+    for shape, name, size in zip(spec.shapes, spec.dtypes, spec.sizes):
+        seg = jax.lax.slice_in_dim(flat, offset, offset + size).reshape(shape)
+        leaves.append(seg.astype(name) if cast else seg)
+        offset += size
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def stacked_ravel(stacked, *, dtype=jnp.float32):
+    """Ravel a stacked per-client pytree (leaves ``(n, ...)``) into one
+    contiguous ``(n, D)`` buffer.
+
+    Returns ``(buf, spec)`` where ``spec`` describes one client's tree
+    (leading dim stripped): ``buf[i]`` is exactly
+    ``tree_ravel(client_i_tree)[0]``, and ``tree_unravel(spec, buf[i])``
+    restores client i's structured view.
+    """
+    leaves, treedef = jax.tree.flatten(stacked)
+    if not leaves:
+        return jnp.zeros((0, 0), dtype), TreeSpec(treedef, (), ())
+    n = leaves[0].shape[0]
+    for x in leaves:
+        if x.shape[0] != n:
+            raise ValueError(f"inconsistent leading (client) dim: {x.shape[0]} != {n}")
+    spec = TreeSpec(
+        treedef=treedef,
+        shapes=tuple(tuple(x.shape[1:]) for x in leaves),
+        dtypes=tuple(jnp.asarray(x).dtype.name for x in leaves),
+    )
+    _check_exact(spec, dtype)
+    buf = jnp.concatenate([x.reshape(n, -1).astype(dtype) for x in leaves], axis=1)
+    return buf, spec

@@ -96,3 +96,98 @@ def test_kernel_under_jit_and_grad():
     g_ref = jax.grad(f)(d)
     g_k = jax.grad(f_kernel)(d)
     np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_ref), atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# ISSUE 7: flat-buffer dispatch parity (ops.mix_flat / ops.reduce_flat)
+# ----------------------------------------------------------------------
+
+
+def _flat_case(n, dtype, masked, salt=0):
+    """One (A, buf, active, coeffs) draw for the flat-path sweep.  D=1000 is
+    deliberately not a multiple of block_d=256 so the kernels pad a tail
+    block; A and coeffs are scaled by 1/√n to keep outputs O(1) across n."""
+    D = 1000
+    rng = np.random.default_rng(hash((n, D, masked, salt)) % 2**31)
+    scale = 1.0 / max(1.0, np.sqrt(n))
+    A = jnp.asarray(rng.standard_normal((n, n)) * scale, jnp.float32)
+    buf = jnp.asarray(rng.standard_normal((n, D)), dtype)
+    active = None
+    if masked:
+        act = rng.random(n) < 0.6
+        act[rng.integers(n)] = True  # at least one live client
+        active = jnp.asarray(act, jnp.float32)
+    coeffs = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    if active is not None:
+        coeffs = coeffs * active
+    return A, buf, active, coeffs
+
+
+@pytest.mark.parametrize("n", [1, 7, 64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("masked", [False, True])
+def test_mix_flat_backend_parity(n, dtype, masked):
+    """The streaming mix kernel vs the einsum oracle through the ops
+    dispatch: degenerate n=1 up to n=128, f32/bf16 buffers, tail padding,
+    with and without the churn active mask."""
+    A, buf, active, _ = _flat_case(n, dtype, masked)
+    got = ops.mix_flat(
+        A, buf, active=active, backend="pallas", block_d=256, interpret=True
+    )
+    want = ops.mix_flat(A, buf, active=active, backend="einsum")
+    assert got.shape == want.shape == buf.shape
+    tol = 1e-4 if dtype == jnp.float32 else 0.25
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("n", [1, 7, 64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("masked", [False, True])
+def test_reduce_flat_backend_parity(n, dtype, masked):
+    """The fused reduction kernel vs the einsum oracle on the same sweep;
+    churn masking rides in the coefficients (the reduce_flat contract)."""
+    _, buf, _, coeffs = _flat_case(n, dtype, masked, salt=1)
+    got = ops.reduce_flat(
+        coeffs, buf, backend="pallas_fused", block_d=256, interpret=True
+    )
+    want = ops.reduce_flat(coeffs, buf, backend="einsum")
+    assert got.shape == want.shape == (buf.shape[1],)
+    tol = 1e-4 if dtype == jnp.float32 else 0.25
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+def test_flat_dispatch_rejects_unknown_backend():
+    buf = jnp.zeros((2, 8))
+    with pytest.raises(ValueError, match="relay_backend"):
+        ops.mix_flat(jnp.eye(2), buf, backend="triton")
+    with pytest.raises(ValueError, match="relay_backend"):
+        ops.reduce_flat(jnp.ones(2), buf, backend="cuda")
+
+
+def test_custom_vjp_gradient_parity_vs_einsum():
+    """The mix kernel's custom_vjp must reproduce the einsum reference's
+    cotangents for BOTH operands — dΔ (the transposed kernel pass) and dA
+    (the (n, n) reduction) — through a padded tail block."""
+    n, D = 5, 700  # 700 = 2·256 + 188: the bwd kernel also crosses padding
+    rng = np.random.default_rng(17)
+    A = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+    cot = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+
+    def loss_kernel(A_, d_):
+        return jnp.vdot(k.relay_mix_2d(A_, d_, block_d=256, interpret=True), cot)
+
+    def loss_ref(A_, d_):
+        return jnp.vdot(ref.relay_mix_2d(A_, d_), cot)
+
+    np.testing.assert_allclose(
+        float(loss_kernel(A, d)), float(loss_ref(A, d)), rtol=1e-5
+    )
+    gA_k, gd_k = jax.grad(loss_kernel, argnums=(0, 1))(A, d)
+    gA_r, gd_r = jax.grad(loss_ref, argnums=(0, 1))(A, d)
+    np.testing.assert_allclose(np.asarray(gA_k), np.asarray(gA_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gd_k), np.asarray(gd_r), atol=1e-4)

@@ -1,4 +1,6 @@
 """Hypothesis property tests for the ColRel invariants."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -6,6 +8,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import opt_alpha, relay, topology
+from repro.utils import stacked_ravel, tree_dot, tree_norm, tree_ravel, tree_unravel
 
 MAX_N = 12
 
@@ -156,3 +159,97 @@ def test_relay_preserves_total_mass_expectation(n, seed):
         return
     expected_coeff = p @ res.A  # E[τ] @ A
     np.testing.assert_allclose(expected_coeff, 1.0, atol=1e-7)
+
+
+# ------------------------------------------------------------------------
+# Raveled-view layer (ISSUE 7): random pytrees through tree_ravel/unravel
+# ------------------------------------------------------------------------
+
+_LEAF_DTYPES = ("float32", "bfloat16")
+
+
+@st.composite
+def random_pytree(draw):
+    """A random nested pytree: 1-6 leaves of rank ≤ 3 (scalars included),
+    f32/bf16 dtypes, folded into a random mix of dict/list/tuple containers."""
+    n_leaves = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    nodes = []
+    for _ in range(n_leaves):
+        shape = tuple(draw(st.lists(st.integers(1, 4), min_size=0, max_size=3)))
+        dtype = draw(st.sampled_from(_LEAF_DTYPES))
+        nodes.append(jnp.asarray(rng.standard_normal(shape), dtype))
+    while len(nodes) > 1:
+        kind = draw(st.sampled_from(["dict", "list", "tuple"]))
+        a, b = nodes[0], nodes[1]
+        merged = {"a": a, "b": b} if kind == "dict" else (
+            [a, b] if kind == "list" else (a, b))
+        nodes = [merged] + nodes[2:]
+    return nodes[0]
+
+
+def _leaves_bit_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.dtype == y.dtype
+        and x.shape == y.shape
+        # the f32 view of an f32/bf16 leaf is exact, so f32 equality on
+        # finite draws is bit equality
+        and np.array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+        for x, y in zip(la, lb)
+    )
+
+
+@given(random_pytree())
+@settings(max_examples=50, deadline=None)
+def test_tree_ravel_round_trip_bit_exact(tree):
+    """tree_unravel ∘ tree_ravel = id, bit for bit, for any nesting, any
+    mix of f32/bf16 leaves, any leaf rank — the contract the flat (n, D)
+    aggregation path rests on."""
+    flat, spec = tree_ravel(tree)
+    assert flat.dtype == jnp.float32
+    assert flat.shape == (spec.total,)
+    back = tree_unravel(spec, flat)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    assert _leaves_bit_equal(tree, back)
+
+
+@given(random_pytree(), st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_stacked_ravel_rows_are_per_client_ravels(tree, n):
+    """stacked_ravel of a stacked tree is row-for-row tree_ravel of each
+    client's slice, under one shared spec."""
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * jnp.asarray(i + 1.0, x.dtype) for i in range(n)]),
+        tree,
+    )
+    buf, spec = stacked_ravel(stacked)
+    assert buf.shape == (n, spec.total)
+    for i in range(n):
+        client = jax.tree.map(lambda x: x[i], stacked)
+        row, client_spec = tree_ravel(client)
+        assert client_spec == spec
+        assert np.array_equal(np.asarray(buf[i]), np.asarray(row))
+        assert _leaves_bit_equal(client, tree_unravel(spec, buf[i]))
+
+
+@given(random_pytree(), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_tree_dot_and_norm_agree_with_raveled(tree, seed):
+    """The structured reductions and their raveled counterparts are the same
+    f32 quantity (summation order differs, so: to f32 precision)."""
+    rng = np.random.default_rng(seed)
+    other = jax.tree.map(
+        lambda x: jnp.asarray(rng.standard_normal(x.shape), x.dtype), tree
+    )
+    fa, _ = tree_ravel(tree)
+    fb, _ = tree_ravel(other)
+    np.testing.assert_allclose(
+        float(tree_dot(tree, other)), float(jnp.vdot(fa, fb)),
+        rtol=1e-5, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        float(tree_norm(tree)), float(jnp.linalg.norm(fa)),
+        rtol=1e-5, atol=1e-6,
+    )

@@ -1,0 +1,209 @@
+"""relay_backend dispatch (ISSUE 7): the flat (n, D) aggregation path.
+
+Holds the three contracts the ravel refactor introduced:
+
+  * **flat == pytree** — every strategy's ``Aggregator.fn`` (ravel → flat_fn
+    → unravel) reproduces the legacy pytree increment math;
+  * **kernel == einsum** — the pallas / pallas_fused backends match the
+    einsum oracle through ``make_aggregator``, the simulator round and the
+    mesh round step, with and without churn, with D not a block multiple;
+  * **churn stays exact** — an inactive client's (finite) garbage contributes
+    *exactly zero* through the kernel backends, not merely approximately.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, opt_alpha, topology
+from repro.fl.distributed import build_round_step
+from repro.fl.simulator import FLSimulator
+from repro.utils import stacked_ravel
+
+N = 6
+STRATEGIES = (
+    "colrel",
+    "colrel_fused",
+    "fedavg_blind",
+    "fedavg_nonblind",
+    "no_dropout",
+)
+
+
+def _setting(seed=0, n=N):
+    """(A, tau, stacked updates, active): D = 20·30 + 100 = 700, which is not
+    a multiple of the 256 test block — the kernels must pad a tail block."""
+    rng = np.random.default_rng(seed)
+    p = np.linspace(0.3, 0.9, n)
+    A = opt_alpha.optimize(p, topology.ring(n, 2), sweeps=20).A
+    upd = {
+        "w": jnp.asarray(rng.standard_normal((n, 20, 30)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((n, 100)), jnp.float32),
+    }
+    tau = jnp.asarray(rng.random(n) < p, jnp.float32)
+    act = rng.random(n) < 0.7
+    act[0] = True  # at least one live client
+    active = jnp.asarray(act, jnp.float32)
+    return jnp.asarray(A, jnp.float32), tau, upd, active
+
+
+def _legacy_increment(strategy, A, tau, upd, active):
+    """The pre-ravel pytree functions — kept exported as the oracle."""
+    if strategy == "colrel":
+        return aggregation.colrel_increment(
+            A, tau, upd, n=N, fused=False, active=active
+        )
+    if strategy == "colrel_fused":
+        return aggregation.colrel_increment(
+            A, tau, upd, n=N, fused=True, active=active
+        )
+    if strategy == "fedavg_blind":
+        return aggregation.fedavg_blind_increment(tau, upd, n=N, active=active)
+    if strategy == "fedavg_nonblind":
+        return aggregation.fedavg_nonblind_increment(tau, upd, active=active)
+    return aggregation.no_dropout_increment(upd, n=N, active=active)
+
+
+# ------------------------------------------------- flat == pytree (einsum)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("churn", [False, True])
+def test_aggregator_fn_matches_legacy_pytree_math(strategy, churn):
+    A, tau, upd, active = _setting()
+    active = active if churn else None
+    agg = aggregation.make_aggregator(strategy, n=N, A=A)
+    got = agg.fn(tau, upd, None, active)
+    want = _legacy_increment(strategy, A, tau, upd, active)
+    assert jax.tree.structure(got) == jax.tree.structure(want)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert g.shape == w.shape
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6
+        )
+
+
+def test_increment_leaves_stay_f32_for_low_precision_updates():
+    """The fn wrapper unravels with cast=False: aggregation math stays f32
+    and the *server optimizer* owns the cast back to the parameter dtype."""
+    rng = np.random.default_rng(5)
+    upd = {"w": jnp.asarray(rng.standard_normal((N, 8)), jnp.bfloat16)}
+    agg = aggregation.make_aggregator("fedavg_blind", n=N)
+    inc = agg.fn(jnp.ones(N), upd, None, None)
+    assert inc["w"].dtype == jnp.float32
+    assert inc["w"].shape == (8,)
+
+
+# ------------------------------------------------- kernel == einsum (flat)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+@pytest.mark.parametrize("churn", [False, True])
+def test_kernel_backend_matches_einsum_reference(strategy, backend, churn):
+    A, tau, upd, active = _setting(1)
+    active = active if churn else None
+    buf, _ = stacked_ravel(upd)
+    kw = dict(n=N, A=A, block_d=256, interpret=True)
+    want = aggregation.make_aggregator(strategy, **kw).flat_fn(
+        tau, buf, None, active
+    )
+    got = aggregation.make_aggregator(
+        strategy, relay_backend=backend, **kw
+    ).flat_fn(tau, buf, None, active)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("backend", ["einsum", "pallas", "pallas_fused"])
+def test_churn_contributes_exactly_zero_through_kernels(backend):
+    """Poison the inactive rows with large-but-finite garbage: the masked
+    relay matrix / coefficients must cancel it to an *exact* zero (0·x = 0
+    for finite x), so the increment is bitwise independent of dead slots."""
+    A, tau, upd, active = _setting(2)
+    buf, _ = stacked_ravel(upd)
+    poisoned = jnp.where(active[:, None] > 0, buf, jnp.float32(1e30))
+    clean = buf * active[:, None]
+    for strategy in ("colrel", "colrel_fused", "fedavg_blind"):
+        agg = aggregation.make_aggregator(
+            strategy, n=N, A=A, relay_backend=backend, block_d=256,
+            interpret=True,
+        )
+        got_p = agg.flat_fn(tau, poisoned, None, active)
+        got_c = agg.flat_fn(tau, clean, None, active)
+        assert np.isfinite(np.asarray(got_p)).all(), strategy
+        assert np.array_equal(np.asarray(got_p), np.asarray(got_c)), strategy
+
+
+def test_make_aggregator_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="relay_backend"):
+        aggregation.make_aggregator("colrel_fused", n=4, relay_backend="sm90")
+
+
+# ------------------------------------------ kernel == einsum (full rounds)
+
+
+def _quad_loss(params, batch):
+    diff = params["x"][None, :] - batch["c"]
+    return 0.5 * jnp.mean(jnp.sum(diff**2, axis=-1))
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_simulator_round_backend_parity(backend):
+    """A full simulator round (client SGD → ravel → kernel increment →
+    server opt → metrics) under churn matches the einsum reference."""
+    n, dim, T, b = 4, 5, 2, 3
+    rng = np.random.default_rng(9)
+    p = np.linspace(0.4, 0.9, n)
+    A = opt_alpha.optimize(p, topology.ring(n, 1), sweeps=15).A
+    batch = {"c": jnp.asarray(rng.standard_normal((n, T, b, dim)), jnp.float32)}
+    params = {"x": jnp.ones((dim,))}
+    active = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    outs = {}
+    for be in ("einsum", backend):
+        sim = FLSimulator(
+            _quad_loss, n_clients=n, strategy="colrel", A=A, p=p,
+            local_steps=T, relay_backend=be, block_d=128, interpret=True,
+        )
+        outs[be] = sim.run_round(
+            jax.random.key(0), params, sim.init_server_state(params),
+            batch, 0.1, active=active,
+        )
+    (pe, _, me), (pk, _, mk) = outs["einsum"], outs[backend]
+    np.testing.assert_allclose(
+        np.asarray(pe["x"]), np.asarray(pk["x"]), rtol=1e-6, atol=1e-6
+    )
+    for field in ("loss", "delta_norm"):
+        np.testing.assert_allclose(
+            float(me[field]), float(mk[field]), rtol=1e-6
+        )
+    assert np.array_equal(np.asarray(me["tau"]), np.asarray(mk["tau"]))
+
+
+@pytest.mark.parametrize("T,mode", [(1, "faithful"), (2, "faithful"), (2, "fused")])
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_mesh_round_step_backend_parity(T, mode, backend):
+    """build_round_step under each kernel backend matches its einsum twin on
+    every delta-materializing path (T=1 faithful, T>1 both relay modes)."""
+    n, dim, b = 4, 6, 3
+    rng = np.random.default_rng(21)
+    p = np.linspace(0.4, 0.9, n)
+    A = jnp.asarray(
+        opt_alpha.optimize(p, topology.ring(n, 1), sweeps=15).A, jnp.float32
+    )
+    batch = {"c": jnp.asarray(rng.standard_normal((n, T, b, dim)), jnp.float32)}
+    params = {"x": jnp.ones((dim,))}
+    tau = jnp.asarray(rng.random(n) < p, jnp.float32)
+    active = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    kw = dict(n_clients=n, local_steps=T, relay_mode=mode)
+    step_ref = build_round_step(_quad_loss, **kw)
+    step_ker = build_round_step(
+        _quad_loss, relay_backend=backend, block_d=128, interpret=True, **kw
+    )
+    p_ref, _, l_ref = step_ref(params, None, batch, tau, 0.1, A, active)
+    p_ker, _, l_ker = step_ker(params, None, batch, tau, 0.1, A, active)
+    np.testing.assert_allclose(
+        np.asarray(p_ref["x"]), np.asarray(p_ker["x"]), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_allclose(float(l_ref), float(l_ker), rtol=1e-6)

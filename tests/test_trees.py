@@ -1,0 +1,152 @@
+"""Raveled-view layer (ISSUE 7): tree_ravel / tree_unravel / stacked_ravel.
+
+The load-bearing contract: the flat (D,) / (n, D) buffer is an *exact*
+re-encoding of the structured pytree — bit-for-bit round trips for every
+dtype the f32 buffer represents exactly (f32/bf16/f16), hard errors for
+dtypes it cannot, and a spec static enough to ride through jit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils import (
+    stacked_ravel,
+    tree_dot,
+    tree_norm,
+    tree_ravel,
+    tree_size,
+    tree_spec,
+    tree_unravel,
+)
+
+
+def _nested(rng, dtype=jnp.float32):
+    """A representative nested tree: dict/list mix, rank 0-4 leaves."""
+    return {
+        "conv": {
+            "w": jnp.asarray(rng.standard_normal((3, 3, 2, 4)), dtype),
+            "b": jnp.asarray(rng.standard_normal(4), dtype),
+        },
+        "head": [
+            jnp.asarray(rng.standard_normal((4, 10)), dtype),
+            jnp.asarray(rng.standard_normal(10), dtype),
+        ],
+        "scale": jnp.asarray(rng.standard_normal(()), dtype),
+    }
+
+
+def _bit_equal_tree(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.dtype == y.dtype
+        and x.shape == y.shape
+        # f32 represents every supported leaf dtype exactly, so equality of
+        # the f32 views is bit equality (values here are finite by draw)
+        and np.array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+        for x, y in zip(la, lb)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_round_trip_bit_exact(dtype):
+    tree = _nested(np.random.default_rng(0), dtype)
+    flat, spec = tree_ravel(tree)
+    assert flat.dtype == jnp.float32
+    assert flat.shape == (spec.total,)
+    assert spec.total == tree_size(tree)
+    assert _bit_equal_tree(tree, tree_unravel(spec, flat))
+
+
+def test_round_trip_mixed_dtypes():
+    rng = np.random.default_rng(1)
+    tree = {
+        "f32": jnp.asarray(rng.standard_normal((5, 3)), jnp.float32),
+        "bf16": jnp.asarray(rng.standard_normal(7), jnp.bfloat16),
+    }
+    flat, spec = tree_ravel(tree)
+    back = tree_unravel(spec, flat)
+    assert back["f32"].dtype == jnp.float32
+    assert back["bf16"].dtype == jnp.bfloat16
+    assert _bit_equal_tree(tree, back)
+
+
+def test_unravel_cast_false_keeps_buffer_dtype():
+    """The increment path: aggregation math stays f32, the server optimizer
+    owns the cast back to the parameter dtype."""
+    tree = {"w": jnp.ones((4,), jnp.bfloat16)}
+    flat, spec = tree_ravel(tree)
+    raw = tree_unravel(spec, flat, cast=False)
+    assert raw["w"].dtype == jnp.float32
+    assert raw["w"].shape == (4,)
+
+
+def test_spec_is_static_and_hashable():
+    tree = _nested(np.random.default_rng(2))
+    spec = tree_spec(tree)
+    assert spec == tree_spec(tree)
+    assert hash(spec) == hash(tree_spec(tree))
+    assert spec.sizes == tuple(int(x.size) for x in jax.tree.leaves(tree))
+    # static enough for jit: close over the spec, trace only the buffer
+    flat, _ = tree_ravel(tree)
+    back = jax.jit(lambda f: tree_unravel(spec, f))(flat)
+    assert _bit_equal_tree(tree, back)
+
+
+def test_wrong_buffer_length_rejected():
+    tree = {"w": jnp.ones((4,))}
+    flat, spec = tree_ravel(tree)
+    with pytest.raises(ValueError, match="buffer shape"):
+        tree_unravel(spec, jnp.concatenate([flat, flat]))
+
+
+def test_inexact_leaf_dtype_rejected():
+    """An int leaf cannot round trip through the f32 buffer bit-exactly —
+    the layer must refuse rather than silently truncate."""
+    with pytest.raises(TypeError, match="not exactly representable"):
+        tree_ravel({"steps": jnp.arange(4, dtype=jnp.int32)})
+    with pytest.raises(TypeError, match="not exactly representable"):
+        stacked_ravel({"steps": jnp.zeros((3, 4), jnp.int32)})
+
+
+def test_empty_tree_round_trip():
+    flat, spec = tree_ravel({})
+    assert flat.shape == (0,)
+    assert spec.total == 0
+    assert tree_unravel(spec, flat) == {}
+
+
+def test_stacked_ravel_rows_match_per_client_ravel():
+    rng = np.random.default_rng(3)
+    n = 5
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1.0) for i in range(n)]),
+        _nested(rng),
+    )
+    buf, spec = stacked_ravel(stacked)
+    assert buf.shape == (n, spec.total)
+    for i in range(n):
+        client = jax.tree.map(lambda x: x[i], stacked)
+        row, client_spec = tree_ravel(client)
+        assert client_spec == spec
+        assert np.array_equal(np.asarray(buf[i]), np.asarray(row))
+        assert _bit_equal_tree(client, tree_unravel(spec, buf[i]))
+
+
+def test_stacked_ravel_inconsistent_leading_dim_rejected():
+    bad = {"a": jnp.zeros((3, 2)), "b": jnp.zeros((4, 2))}
+    with pytest.raises(ValueError, match="leading"):
+        stacked_ravel(bad)
+
+
+def test_tree_dot_and_norm_match_raveled():
+    rng = np.random.default_rng(4)
+    a, b = _nested(rng), _nested(rng)
+    fa, _ = tree_ravel(a)
+    fb, _ = tree_ravel(b)
+    np.testing.assert_allclose(
+        float(tree_dot(a, b)), float(jnp.vdot(fa, fb)), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        float(tree_norm(a)), float(jnp.linalg.norm(fa)), rtol=1e-6
+    )
