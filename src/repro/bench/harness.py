@@ -30,6 +30,17 @@ one :func:`build_scan_round_step` dispatch per channel epoch ("scan"), or
 one τ-fused :func:`build_fused_scan_round_step` dispatch per epoch with the
 host side prefetched ("pipelined").  Same fairness contract, same bitwise
 assertion.
+
+``spec.step = "shard"`` measures the **multi-device** path: "loop" stays
+the single-device per-round reference, while "scan" / "pipelined" run the
+`shard_map` step (:func:`build_sharded_scan_round_step`) through
+:class:`~repro.fl.engine.ShardedScanEngine` across a forced host mesh of
+``spec.devices`` devices — serial vs prefetched staging, with staged epochs
+``device_put`` directly into their sharded layout.  The bitwise assertion
+becomes the *shard gate*: sharded engines bitwise-identical to each other,
+allclose (1e-5) to the loop — the measured max |Δ| lands in the report's
+``shard_check`` block (see docs/distributed.md for why the loop comparison
+is a tolerance, not bitwise).
 """
 from __future__ import annotations
 
@@ -48,8 +59,15 @@ from repro.fl.distributed import (
     build_fused_scan_round_step,
     build_round_step,
     build_scan_round_step,
+    build_sharded_scan_round_step,
 )
-from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
+from repro.fl.engine import (
+    EpochScanEngine,
+    PipelinedScanEngine,
+    ShardedScanEngine,
+    run_rounds_loop,
+)
+from repro.launch.mesh import make_client_mesh
 from repro.obs import (
     NULL_TRACER,
     Tracer,
@@ -406,6 +424,186 @@ def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir
     return run, params
 
 
+class _ShardStep:
+    """The single-device per-round reference for the shard path — the loop
+    driver the sharded engines are gated against.  Unlike :class:`_MeshStep`
+    it threads the churn mask (shard scenarios may rotate cohorts), so the
+    trajectory is the reference for churned epochs too."""
+
+    def __init__(self, bundle: ScenarioBundle):
+        spec = bundle.spec
+        self.trace_count = 0
+        round_fn = build_round_step(
+            bundle.loss_fn,
+            n_clients=spec.n_clients,
+            local_steps=spec.local_steps,
+            relay_mode="fused",
+            relay_backend=spec.relay_backend,
+            block_d=spec.block_d,
+            client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+            server_opt=ServerOpt(),
+        )
+
+        def counted_round(params, ss, batch, tau, lr, A, active):
+            self.trace_count += 1
+            return round_fn(params, ss, batch, tau, lr, A, active=active)
+
+        self.round = jax.jit(counted_round)
+
+
+def _shard_mesh(spec: ScenarioSpec):
+    """The host mesh a shard scenario runs on: ``spec.devices`` devices on
+    one axis — the client axis in clients mode, the model axis in D mode.
+    Raises (with the XLA_FLAGS hint) when the host presents fewer devices."""
+    axis = "clients" if spec.shard == "clients" else "model"
+    return make_client_mesh(spec.devices, axis=axis)
+
+
+def _run_shard_once(bundle: ScenarioBundle, ex, name: str, batches: list, tracer=None):
+    """One full shard-path pass; returns (wall_s, losses, params, dispatches,
+    prefetch_stats).  The loop reference draws τ host-side with exactly the
+    sharded step's op order (split, then ``Bernoulli(p)`` on the subkey), so
+    every engine consumes identical randomness; churn masks flow from the
+    schedule segments on both sides."""
+    spec = bundle.spec
+    schedule = bundle.make_schedule()
+    policy = bundle.make_policy(tracer=tracer)
+    tr = NULL_TRACER if tracer is None else tracer
+    if tracer is not None:
+        schedule.tracer = tracer
+    if policy is None:
+        raise ValueError("the sharded round step needs a relay policy")
+    params = bundle.init_fn(jax.random.key(spec.seed))
+    server_state = None
+    key = jax.random.key(spec.seed + 1)
+    stream = iter(batches)
+    t0 = time.perf_counter()
+    if name == "loop":
+        losses = []
+        for seg in schedule.segments(spec.rounds):
+            A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
+            p = jnp.asarray(seg.p, jnp.float32)
+            active = (
+                None
+                if seg.active is None
+                else jnp.asarray(seg.active, jnp.float32)
+            )
+            for _ in range(seg.n_rounds):
+                key, sub = jax.random.split(key)
+                tau = jax.random.bernoulli(sub, p).astype(jnp.float32)
+                if tr.enabled:
+                    with tr.span("shard.stage", cat="stage", epoch=seg.epoch_id):
+                        batch = jax.tree.map(jnp.asarray, next(stream))
+                    with tr.span(
+                        "shard.round", cat="dispatch", epoch=seg.epoch_id
+                    ):
+                        params, server_state, loss = ex.round(
+                            params, server_state, batch, tau, spec.lr, A, active
+                        )
+                    with tr.span("shard.sync", cat="device", track="device"):
+                        losses.append(float(loss))
+                    continue
+                batch = jax.tree.map(jnp.asarray, next(stream))
+                params, server_state, loss = ex.round(
+                    params, server_state, batch, tau, spec.lr, A, active
+                )
+                # the per-round host sync every loop driver models
+                losses.append(float(loss))
+        losses = jnp.asarray(losses)
+        dispatches = spec.rounds
+        prefetch_stats = None
+    else:
+        prev = ex.tracer
+        if tracer is not None:
+            ex.tracer = tracer
+        try:
+            params, server_state, metrics, key = ex.run_schedule(
+                key,
+                params,
+                server_state,
+                schedule=schedule,
+                rounds=spec.rounds,
+                next_batch=lambda: next(stream),
+                lr=spec.lr,
+                policy=policy,
+            )
+        finally:
+            ex.tracer = prev
+        losses = metrics["loss"]
+        dispatches = ex.dispatches
+        prefetch_stats = ex.prefetch_stats
+    if tr.enabled:
+        with tr.span("run.finalize", cat="device", track="device"):
+            jax.block_until_ready(params)
+    else:
+        jax.block_until_ready(params)
+    wall = time.perf_counter() - t0
+    return wall, losses, params, dispatches, prefetch_stats
+
+
+def _run_shard_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None):
+    """Cold + warm shard-path pass; mirrors :func:`_run_mesh_engine`.  The
+    ``loop`` engine is the single-device reference; ``scan`` and
+    ``pipelined`` run the `shard_map` step through
+    :class:`~repro.fl.engine.ShardedScanEngine` (serial vs prefetched
+    staging — the prefetched variant ``device_put``s each staged epoch
+    directly into its sharded layout)."""
+    spec = bundle.spec
+    if name not in ("loop", "scan", "pipelined"):
+        raise ValueError(f"unknown engine: {name!r}")
+    if name == "loop":
+        ex = _ShardStep(bundle)
+    else:
+        mesh = _shard_mesh(spec)
+        step_fn = build_sharded_scan_round_step(
+            bundle.loss_fn,
+            n_clients=spec.n_clients,
+            local_steps=spec.local_steps,
+            mesh=mesh,
+            shard=spec.shard,
+            exchange=spec.exchange,
+            relay_mode="fused",
+            relay_backend=spec.relay_backend,
+            block_d=spec.block_d,
+            client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
+            server_opt=ServerOpt(),
+        )
+        ex = ShardedScanEngine(
+            step_fn,
+            mesh=mesh,
+            shard=spec.shard,
+            prefetch="serial" if name == "scan" else "inline",
+        )
+    cold_s, _, _, _, _ = _run_shard_once(bundle, ex, name, batches)
+    warm_s, losses, params, dispatches, overlap = _run_shard_once(
+        bundle, ex, name, batches
+    )
+    trace_path = telemetry = None
+    if trace_dir is not None:
+        tracer = Tracer()
+        _run_shard_once(bundle, ex, name, batches, tracer=tracer)
+        trace_path, telemetry = _finish_trace(tracer, trace_dir, spec.name, name)
+    run = EngineRun(
+        engine=name,
+        wall_s=warm_s,
+        compile_s=max(0.0, cold_s - warm_s),
+        rounds_per_sec=spec.rounds / warm_s,
+        trace_count=ex.trace_count,
+        dispatches=dispatches,
+        final_loss=float(losses[-1]),
+        overlap_fraction=None if overlap is None else overlap.overlap_fraction,
+        steady_overlap_fraction=(
+            None if overlap is None else overlap.steady_overlap_fraction
+        ),
+        host_prep_s=None if overlap is None else overlap.prep_s,
+        host_wait_s=None if overlap is None else overlap.wait_s,
+        chunks_staged=None if overlap is None else overlap.chunks_staged,
+        trace_path=trace_path,
+        telemetry=telemetry,
+    )
+    return run, params
+
+
 def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None):
     """Cold + warm pass of one engine; returns (EngineRun, final params).
 
@@ -417,6 +615,8 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None)
     spec = bundle.spec
     if spec.step == "mesh":
         return _run_mesh_engine(bundle, name, batches, trace_dir)
+    if spec.step == "shard":
+        return _run_shard_engine(bundle, name, batches, trace_dir)
     if spec.step != "sim":
         raise ValueError(f"unknown step: {spec.step!r}")
     sim = bundle.make_sim()
@@ -478,7 +678,14 @@ def run_scenario(
     """Run ``spec`` under every engine; returns
     ``{"runs": {name: EngineRun}, "speedup": float | None,
     "speedups": {name: float}, "bitwise_match": bool | None,
-    "model_params": int, "kernel_check": dict | None}``.
+    "model_params": int, "kernel_check": dict | None,
+    "shard_check": dict | None}``.
+
+    On the shard path (``spec.step == "shard"``) the bitwise gate is
+    replaced by the **shard gate** (``shard_check``): the sharded engines
+    must be bitwise-identical to *each other*, and allclose to the
+    single-device loop at the kernel-check tolerance (the measured
+    ``max_abs_diff`` is recorded).  Either violation raises.
 
     ``speedups[name]`` is that engine's rounds/sec over the loop's (absent
     unless the loop ran); ``speedup`` remains the scan/loop headline for
@@ -565,21 +772,83 @@ def run_scenario(
         }
     speedup = speedups.get("scan")
     bitwise = None
-    if check_bitwise and "loop" in runs and len(finals) > 1:
+    shard_check = None
+    if check_bitwise and "loop" in finals and len(finals) > 1:
         leaves_l = jax.tree.leaves(finals["loop"])
-        for name, final in finals.items():
-            if name == "loop":
-                continue
-            leaves_e = jax.tree.leaves(final)
-            bitwise = len(leaves_l) == len(leaves_e) and all(
-                np.array_equal(np.asarray(a), np.asarray(b))
-                for a, b in zip(leaves_l, leaves_e)
-            )
-            if not bitwise:
-                raise AssertionError(
-                    f"{spec.name}: {name} engine diverged bitwise from the "
-                    "per-round reference"
+        if spec.step == "shard":
+            # The shard gate: sharded engines must agree *bitwise among
+            # themselves* (same program, same collectives); against the
+            # single-device loop the bar is the documented f32 tolerance —
+            # XLA compiles the m-client local scan differently than the
+            # n-client program (gather mode), and the ring additionally
+            # reassociates the relay accumulation (docs/distributed.md).
+            sharded = sorted(k for k in finals if k != "loop")
+            ref = jax.tree.leaves(finals[sharded[0]])
+            for name in sharded[1:]:
+                leaves_e = jax.tree.leaves(finals[name])
+                same = len(ref) == len(leaves_e) and all(
+                    np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(ref, leaves_e)
                 )
+                if not same:
+                    raise AssertionError(
+                        f"{spec.name}: sharded engines {sharded[0]} and "
+                        f"{name} diverged bitwise from each other"
+                    )
+            max_abs_diff = max(
+                (
+                    float(
+                        np.max(
+                            np.abs(
+                                np.asarray(a, np.float64)
+                                - np.asarray(b, np.float64)
+                            )
+                        )
+                    )
+                    for a, b in zip(leaves_l, ref)
+                ),
+                default=0.0,
+            )
+            ok = len(leaves_l) == len(ref) and all(
+                np.allclose(
+                    np.asarray(a, np.float64),
+                    np.asarray(b, np.float64),
+                    rtol=KERNEL_CHECK_RTOL,
+                    atol=KERNEL_CHECK_ATOL,
+                )
+                for a, b in zip(leaves_l, ref)
+            )
+            if not ok:
+                raise AssertionError(
+                    f"{spec.name}: sharded engines diverged from the "
+                    f"single-device loop (max |Δ| = {max_abs_diff:.3e} > "
+                    f"atol {KERNEL_CHECK_ATOL:g} / rtol {KERNEL_CHECK_RTOL:g})"
+                )
+            shard_check = {
+                "shard": spec.shard,
+                "exchange": spec.exchange,
+                "devices": spec.devices,
+                "reference": "loop",
+                "allclose": True,
+                "bitwise_among_sharded": len(sharded) > 1,
+                "rtol": KERNEL_CHECK_RTOL,
+                "atol": KERNEL_CHECK_ATOL,
+                "max_abs_diff": max_abs_diff,
+            }
+        else:
+            for name, final in finals.items():
+                if name == "loop":
+                    continue
+                leaves_e = jax.tree.leaves(final)
+                bitwise = len(leaves_l) == len(leaves_e) and all(
+                    np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(leaves_l, leaves_e)
+                )
+                if not bitwise:
+                    raise AssertionError(
+                        f"{spec.name}: {name} engine diverged bitwise from "
+                        "the per-round reference"
+                    )
     return {
         "runs": runs,
         "speedup": speedup,
@@ -587,4 +856,5 @@ def run_scenario(
         "bitwise_match": bitwise,
         "model_params": model_params,
         "kernel_check": kernel_check,
+        "shard_check": shard_check,
     }

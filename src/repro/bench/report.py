@@ -30,14 +30,18 @@ Report schema (``schema_version`` 1)::
     }
 
 The overlap metrics, ``speedups_vs_loop``, ``model_params``,
-``kernel_check`` and the ``telemetry`` block are additive v1 fields (older
-readers ignore them; older reports read back with them absent) — see
-``docs/benchmarks.md`` for the field-by-field reading guide and
-``docs/observability.md`` for the telemetry block.  ``model_params`` is the
-model's total parameter count D (the x-axis of the relay D-sweep);
+``kernel_check``, ``shard_check`` and the ``telemetry`` block are additive
+v1 fields (older readers ignore them; older reports read back with them
+absent) — see ``docs/benchmarks.md`` for the field-by-field reading guide
+and ``docs/observability.md`` for the telemetry block.  ``model_params`` is
+the model's total parameter count D (the x-axis of the relay D-sweep);
 ``kernel_check`` records the mandatory pallas-vs-reference parity pass
 (backend, tolerances, measured max |Δ|, kernel throughput) for scenarios
-with ``check_backend`` set.
+with ``check_backend`` set.  ``shard_check`` (shard scenarios only, whose
+``spec.devices`` records the mesh size) is the multi-device gate: sharded
+engines bitwise-identical to each other, allclose to the single-device loop
+at the recorded tolerance (``max_abs_diff`` is the measured divergence —
+see docs/distributed.md).
 
 The gate (:func:`check_regression`) compares per-engine ``rounds_per_sec``
 against a checked-in baseline report and fails when throughput regresses by
@@ -82,6 +86,7 @@ def make_report(spec: ScenarioSpec, result: dict) -> dict:
         "bitwise_match": result["bitwise_match"],
         "model_params": result.get("model_params"),
         "kernel_check": result.get("kernel_check"),
+        "shard_check": result.get("shard_check"),
         "telemetry": telemetry or None,
     }
 

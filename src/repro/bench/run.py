@@ -62,6 +62,15 @@ def format_summary(rep: dict) -> str:
             f"≤ atol {check['atol']:g}/rtol {check['rtol']:g}), "
             f"{check['rounds_per_sec']:.1f} rounds/s on the kernel backend"
         )
+    scheck = rep.get("shard_check")
+    if scheck:
+        lines.append(
+            f"  shard check [{scheck['shard']}/{scheck['exchange']}, "
+            f"{scheck['devices']} devices]: allclose vs the single-device "
+            f"loop (max |Δ| {scheck['max_abs_diff']:.2e} ≤ atol "
+            f"{scheck['atol']:g}/rtol {scheck['rtol']:g}), sharded engines "
+            "bitwise-identical to each other"
+        )
     if rep.get("model_params"):
         lines.append(f"  model_params D = {rep['model_params']:,}")
     speedups = rep.get("speedups_vs_loop") or {}

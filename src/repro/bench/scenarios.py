@@ -38,6 +38,16 @@ The registered scenarios:
                   D = 10⁴ … 10⁷ (compute- vs memory-bound crossover);
                   reference engines + the mandatory pallas_fused kernel
                   check (see benchmarks/roofline.py)
+  mesh8_smoke     the multi-device CI gate: client-sharded fused scan on an
+                  8-device host mesh (gather exchange, pallas_fused parity
+                  check on the side) — run under
+                  XLA_FLAGS=--xla_force_host_platform_device_count=8
+  mesh8_ring_churn
+                  the sharded acceptance scenario: block-ring ppermute
+                  exchange under rotating-cohort churn + correlated
+                  shadowing, 8 devices
+  mesh2_dshard    D-axis GSPMD mode: the (n, D) relay contraction
+                  partitioned over a 2-device "model" axis
 """
 from __future__ import annotations
 
@@ -54,7 +64,7 @@ from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition
 from repro.data.synthetic import cifar_like, gaussian_classification
 from repro.fl.simulator import FLSimulator
-from repro.kernels.ops import RELAY_BACKENDS
+from repro.kernels.ops import RELAY_BACKENDS, validate_sharded_backend
 from repro.models.resnet import init_resnet20, resnet20_loss
 from repro.optim.sgd import ClientOpt
 
@@ -116,16 +126,27 @@ class ScenarioSpec:
     blockage_threshold: float = 1.0
     uplink_gain: float = 2.0
     # execution path: FLSimulator/EpochScanEngine vs the production mesh
-    # round step (build_round_step / build_scan_round_step).  The mesh scan
-    # dispatches one whole segment per call, so `chunk` applies to the sim
-    # path only.
-    step: str = "sim"  # sim | mesh
+    # round step (build_round_step / build_scan_round_step) vs the
+    # multi-device sharded step (build_sharded_scan_round_step).  The mesh
+    # and shard scans dispatch one whole segment per call, so `chunk`
+    # applies to the sim path only.
+    step: str = "sim"  # sim | mesh | shard
+    # sharded execution (step = "shard"): the scan/pipelined engines run the
+    # shard_map round step across a host mesh of `devices` devices (CI forces
+    # them with XLA_FLAGS=--xla_force_host_platform_device_count=N; the spec
+    # itself never touches device state, so the registry imports anywhere).
+    # `shard` picks the partitioned axis (clients | d), `exchange` the relay
+    # collective in clients mode (gather = bitwise einsum order, ring =
+    # O(1)-buffer block-ring at f32 tolerance) — see docs/distributed.md.
+    devices: int = 1
+    shard: str = "clients"  # clients | d
+    exchange: str = "gather"  # gather | ring
     # scan engine (sim path)
     chunk: int = 32
 
     def __post_init__(self):
         # fail at construction, not mid-benchmark after batches are generated
-        if self.step not in ("sim", "mesh"):
+        if self.step not in ("sim", "mesh", "shard"):
             raise ValueError(f"unknown step: {self.step!r}")
         if self.step == "mesh" and self.churn != "none":
             raise ValueError("mesh scenarios do not drive churn masks")
@@ -136,6 +157,30 @@ class ScenarioSpec:
             # mesh analogue of colrel_fused; any other strategy would be
             # recorded in the report but not what was measured
             raise ValueError("mesh scenarios bench the fused relay only")
+        if self.step == "shard":
+            if self.policy == "none":
+                raise ValueError("the sharded round step needs a relay policy")
+            if self.strategy != "colrel_fused":
+                raise ValueError("shard scenarios bench the fused relay only")
+            if self.devices < 2:
+                raise ValueError("shard scenarios need devices >= 2")
+            if self.shard not in ("clients", "d"):
+                raise ValueError(f"unknown shard mode: {self.shard!r}")
+            if self.exchange not in ("gather", "ring"):
+                raise ValueError(f"unknown exchange: {self.exchange!r}")
+            if self.shard == "clients" and self.n_clients % self.devices:
+                raise ValueError(
+                    f"n_clients={self.n_clients} must divide evenly over "
+                    f"the {self.devices}-device client axis"
+                )
+            # backend dispatch under sharding: ring/d refuse kernel backends
+            validate_sharded_backend(
+                self.relay_backend, shard=self.shard, exchange=self.exchange
+            )
+            if self.check_backend != "none":
+                validate_sharded_backend(
+                    self.check_backend, shard=self.shard, exchange=self.exchange
+                )
         if self.fading == "corr_uplink" and self.drift != "static":
             raise ValueError("corr_uplink couples p to the fade; set drift='static'")
         if self.model not in ("mlp", "resnet20"):
@@ -588,6 +633,88 @@ register(
         drift="static",
         chunk=8,
         check_backend="pallas_fused",
+    )
+)
+
+# --------------------------------------------------------- multi-device mesh
+# CPU hosts present a single device unless XLA is told otherwise, so the
+# mesh8_* / mesh2_* scenarios run under
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 (CI's bench-smoke mesh
+# leg does; docs/distributed.md shows the invocation).  Registration is pure
+# data — the device-count check happens at make_client_mesh time, never at
+# import.  The shard gate replaces the bitwise gate: sharded engines must
+# agree bitwise *among themselves* and match the single-device loop to the
+# documented f32 tolerance (report.shard_check).
+
+register(
+    ScenarioSpec(
+        name="mesh8_smoke",
+        description=(
+            "8-device CI gate: client-sharded fused scan over a host mesh, "
+            "gather exchange, pallas_fused parity check"
+        ),
+        n_clients=8,
+        rounds=32,
+        local_steps=2,
+        local_batch=4,
+        dim=32,
+        width=16,
+        n_train=256,
+        adj_every=8,
+        p_every=8,
+        drift_hold=1,
+        step="shard",
+        devices=8,
+        check_backend="pallas_fused",
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="mesh8_ring_churn",
+        description=(
+            "sharded acceptance: block-ring ppermute exchange under "
+            "rotating-cohort churn + correlated shadowing, 8 devices"
+        ),
+        n_clients=8,
+        rounds=64,
+        local_steps=2,
+        local_batch=4,
+        dim=32,
+        width=16,
+        n_train=256,
+        fading="corr_shadow",
+        drift="static",
+        adj_every=8,
+        p_every=8,
+        churn="rotating",
+        n_cohorts=4,
+        churn_hold=8,
+        step="shard",
+        devices=8,
+        exchange="ring",
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="mesh2_dshard",
+        description=(
+            "D-axis GSPMD mode: the (n, D) relay contraction partitioned "
+            "over a 2-device model axis, static channel"
+        ),
+        n_clients=8,
+        rounds=32,
+        local_steps=2,
+        local_batch=4,
+        dim=32,
+        width=16,
+        n_train=256,
+        fading="static",
+        drift="static",
+        step="shard",
+        devices=2,
+        shard="d",
     )
 )
 

@@ -351,7 +351,9 @@ def _worker_loop(gen, stats: PrefetchStats, q: queue.Queue, stop: threading.Even
         put(_Failure(exc))
 
 
-def _staged_items(stats, schedule, rounds, chunk, next_batch, policy, pad_to_chunk, tracer):
+def _staged_items(
+    stats, schedule, rounds, chunk, next_batch, policy, pad_to_chunk, tracer, place
+):
     """The staging stream both modes share (module-level: the generator's
     frame must not pin the prefetcher — see :func:`_worker_loop`).
 
@@ -361,7 +363,13 @@ def _staged_items(stats, schedule, rounds, chunk, next_batch, policy, pad_to_chu
     thread's real timeline, in inline mode it is the staging work
     interleaved on the consumer, either way its own Perfetto row.  The
     policy's ``solve`` spans fire from inside ``relay_matrix``.
+
+    ``place`` overrides the plain device transfer: the sharded engine
+    passes a ``device_put``-with-``NamedSharding`` closure so each chunk
+    lands directly in its mesh layout (every device receives exactly its
+    clients' bytes) — still billed to the ``h2d`` span.
     """
+    to_device = _to_device if place is None else place
     for seg in schedule.segments(rounds):
         A = policy.relay_matrix(seg.state) if policy is not None else None
         stats.segments += 1
@@ -380,10 +388,10 @@ def _staged_items(stats, schedule, rounds, chunk, next_batch, policy, pad_to_chu
                 with tracer.span(
                     "prefetch.h2d", cat="h2d", track="prefetcher", epoch=seg.epoch_id
                 ):
-                    staged = _to_device(host)
+                    staged = to_device(host)
             else:
                 host = _stack_host([next_batch() for _ in range(window)], pad)
-                staged = _to_device(host)
+                staged = to_device(host)
             stats.chunks_staged += 1
             yield StagedChunk(
                 segment=seg,
@@ -443,7 +451,13 @@ class SegmentPrefetcher:
         pad_to_chunk: bool = False,
         threaded: bool = False,
         tracer=None,
+        place: Callable[[Any], Any] | None = None,
     ):
+        """``place`` replaces the default H2D transfer (``jnp.asarray`` per
+        leaf) with a caller-supplied placement — e.g. ``jax.device_put``
+        under a ``NamedSharding`` so staged chunks arrive already laid out
+        across a mesh.  It runs on the staging side (the worker thread in
+        threaded mode) and must not block on in-flight device work."""
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
         if depth < 1:
@@ -462,6 +476,7 @@ class SegmentPrefetcher:
             policy,
             bool(pad_to_chunk),
             self._tracer,
+            place,
         )
         self._thread = None
         self._finalizer = None

@@ -19,6 +19,16 @@ deterministic and identity-blind (OAC-compatible).  The exception is
 it takes the RNG key instead and draws the epoch's τ stream inside the scan
 body (key chain in the carry), so a whole epoch — τ draws included — is one
 device dispatch.
+
+:func:`build_sharded_scan_round_step` is the **multi-device** production
+path (same τ-fused signature): under ``shard="clients"`` the step runs in
+`shard_map` over the mesh's client axis — each device owns m = n/k client
+slots, runs their local SGD, and the relay exchange is either an
+``all_gather`` of the raveled delta blocks (bitwise-identical math to the
+single-device step) or the block-ring collective from `repro.fl.ring`
+(O(1) live buffers, f32-tolerance-identical).  Under ``shard="d"`` the step
+stays GSPMD: a sharding constraint from `repro.sharding.rules` partitions
+the (n, D) relay contraction over the model axis.  See docs/distributed.md.
 """
 from __future__ import annotations
 
@@ -45,6 +55,7 @@ def build_round_step(
     interpret=None,
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
+    constrain_buffer: Callable | None = None,
 ):
     """Returns round(params, server_state, batch, tau, lr, A=None, active=None)
     -> (params', state', loss).
@@ -68,6 +79,11 @@ def build_round_step(
     per-client deltas are materialized — every path except T = 1 fused, whose
     weighted-loss trick never forms an (n, D) tensor to stream (there is
     nothing for a kernel to read, so that path stays pure XLA).
+
+    ``constrain_buffer`` (D-axis sharding) is applied to the raveled (n, D)
+    buffer right after the ravel — `build_sharded_scan_round_step(shard="d")`
+    passes a `with_sharding_constraint` over the mesh's model axis here, so
+    GSPMD partitions the relay contraction over parameters.
     """
     T = local_steps
     A_static = A
@@ -90,6 +106,8 @@ def build_round_step(
             # ravel → kernel-dispatched increment → structured f32 view;
             # churn masking (A, τ, 1/n_active) happens inside the flat fn
             buf, spec = stacked_ravel(deltas)
+            if constrain_buffer is not None:
+                buf = constrain_buffer(buf)
             flat = aggregation.colrel_increment_flat(
                 A, tau, buf, n=n_clients, fused=(relay_mode == "fused"),
                 active=active, **aggregation_kw,
@@ -228,6 +246,7 @@ def build_fused_scan_round_step(
     interpret=None,
     client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
     server_opt: ServerOpt = ServerOpt(),
+    constrain_buffer: Callable | None = None,
 ):
     """τ-in-body variant of :func:`build_scan_round_step` (the pipelined
     engine's mesh analogue): returns ``scan_rounds(key, params,
@@ -253,6 +272,7 @@ def build_fused_scan_round_step(
         interpret=interpret,
         client_opt=client_opt,
         server_opt=server_opt,
+        constrain_buffer=constrain_buffer,
     )
 
     def scan_rounds(key, params, server_state, batches, p, lr, A=None, active=None):
@@ -267,5 +287,206 @@ def build_fused_scan_round_step(
             body, (key, params, server_state), batches
         )
         return key, params, server_state, losses
+
+    return scan_rounds
+
+
+def build_sharded_scan_round_step(
+    loss_fn: Callable[[Any, dict], jax.Array],
+    *,
+    n_clients: int,
+    local_steps: int,
+    mesh,
+    shard: str = "clients",
+    exchange: str = "gather",
+    relay_mode: str = "fused",
+    relay_backend: str = "einsum",
+    block_d: int | None = None,
+    interpret=None,
+    client_opt: ClientOpt = ClientOpt(kind="sgd", weight_decay=1e-4),
+    server_opt: ServerOpt = ServerOpt(),
+):
+    """Multi-device variant of :func:`build_fused_scan_round_step`: same
+    signature ``scan_rounds(key, params, server_state, batches, p, lr,
+    A=None, active=None) -> (key', params', state', losses)``, executed
+    across ``mesh``.
+
+    ``shard="clients"`` runs the scan body in `shard_map` over the mesh's
+    client axis: each of the k devices owns ``m = n_clients / k`` client
+    slots (``batches`` leaves (R, n_clients, T, b, ...) sharded on dim 1),
+    runs their local SGD steps, and exchanges raveled delta blocks —
+
+    * ``exchange="gather"``: ``all_gather`` the (m, D) blocks to the full
+      (n, D) buffer and reuse ``aggregation.colrel_increment_flat``
+      verbatim.  Same contraction, same order ⇒ the trajectory is
+      *bitwise-identical* to the single-device step.
+    * ``exchange="ring"``: the block-ring collective
+      (`repro.fl.ring.ring_colrel_increment_flat`): k−1 ``ppermute``
+      rotations, each contributing an (m, m) block-matmul, then a τ-weighted
+      ``psum``.  O(1) live buffers, but ring accumulation order ≠ einsum
+      contraction order ⇒ identical only to f32 accumulation accuracy
+      (documented tolerance; see docs/distributed.md).
+
+    Model parameters, the RNG key, A, p and the churn mask stay replicated;
+    every device draws the *same* τ from the same key chain, so the realized
+    randomness — and the returned advanced key — match the single-device
+    fused step exactly.  Churn masking composes unchanged: A and τ are
+    masked before the exchange, so a departed client's block contributes
+    exactly zero on either exchange.
+
+    ``shard="d"`` keeps the single-program GSPMD formulation and shards the
+    *parameter* axis instead: a `sharding.rules.flat_buffer_specs`
+    constraint on the raveled (n, D) buffer partitions the relay
+    contraction over the mesh's "model" axis (for models too large to
+    replicate).  einsum backend only (`kernels.ops.validate_sharded_backend`).
+    """
+    from repro.fl import ring as ring_lib
+    from repro.kernels import ops as kernel_ops
+    from repro.sharding import rules as sharding_rules
+
+    kernel_ops.validate_sharded_backend(
+        relay_backend, shard=shard, exchange=exchange
+    )
+    if shard == "d":
+        from jax.sharding import NamedSharding
+
+        def constrain(buf):
+            spec = sharding_rules.flat_buffer_specs(
+                mesh, n=buf.shape[0], d=buf.shape[1]
+            )
+            return jax.lax.with_sharding_constraint(
+                buf, NamedSharding(mesh, spec)
+            )
+
+        return build_fused_scan_round_step(
+            loss_fn,
+            n_clients=n_clients,
+            local_steps=local_steps,
+            relay_mode=relay_mode,
+            relay_backend=relay_backend,
+            block_d=block_d,
+            interpret=interpret,
+            client_opt=client_opt,
+            server_opt=server_opt,
+            constrain_buffer=constrain,
+        )
+    if shard != "clients":
+        raise ValueError(f"unknown shard mode: {shard!r} (clients | d)")
+    if exchange not in ("gather", "ring"):
+        raise ValueError(f"unknown exchange: {exchange!r} (gather | ring)")
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = sharding_rules.shard_axis(mesh)
+    k_shards = mesh.shape[axis]
+    if n_clients % k_shards != 0:
+        raise ValueError(
+            f"n_clients={n_clients} not divisible by the {k_shards}-device "
+            f"client axis {axis!r}"
+        )
+    T = local_steps
+
+    def _mean_loss(losses, active):
+        if active is None:
+            return jnp.mean(losses)
+        a_ = jnp.asarray(active, jnp.float32)
+        return jnp.sum(losses * a_) / jnp.maximum(a_.sum(), 1.0)
+
+    def _local_scan(key, params, server_state, batches, p, lr, A, active):
+        # inside shard_map: batches leaves are this device's (R, m, T, b, ...)
+        # client shard; everything else is replicated.
+        def body(carry, batch):
+            kcur, pr, s = carry
+            kcur, sub = jax.random.split(kcur)
+            tau = jax.random.bernoulli(sub, p).astype(jnp.float32)
+
+            if T == 1:
+                def one(client_batch):
+                    sq = jax.tree.map(lambda x: x[0], client_batch)
+                    loss, g = jax.value_and_grad(loss_fn)(pr, sq)
+
+                    def _decayed(ge, pe):
+                        wd = client_opt.weight_decay
+                        return ge.astype(jnp.float32) + wd * pe.astype(
+                            jnp.float32
+                        )
+
+                    return jax.tree.map(_decayed, g, pr), loss
+
+                deltas_g, losses = jax.vmap(one)(batch)
+                deltas = tree_scale(-lr, deltas_g)
+            else:
+                def client_update(client_batch):
+                    opt_state = client_opt.init(pr)
+
+                    def step(c, minibatch):
+                        p_, s_ = c
+                        loss, g = jax.value_and_grad(loss_fn)(p_, minibatch)
+                        p_, s_ = client_opt.step(p_, g, s_, lr)
+                        return (p_, s_), loss
+
+                    (new_p, _), losses = jax.lax.scan(
+                        step, (pr, opt_state), client_batch
+                    )
+                    return tree_sub(new_p, pr), losses[0]
+
+                deltas, losses = jax.vmap(client_update)(batch)
+
+            buf_local, spec = stacked_ravel(deltas)  # (m, D)
+            if exchange == "gather":
+                buf = jax.lax.all_gather(buf_local, axis, axis=0, tiled=True)
+                flat = aggregation.colrel_increment_flat(
+                    A, tau, buf, n=n_clients, fused=(relay_mode == "fused"),
+                    active=active, backend=relay_backend, block_d=block_d,
+                    interpret=interpret,
+                )
+            else:
+                w = active_weight(active, n=n_clients)
+                A_eff, tau_eff = A, tau
+                if active is not None:
+                    a = jnp.asarray(active, jnp.float32)
+                    A_eff = relay_lib.mask_relay_matrix(A, a)
+                    tau_eff = tau * a
+                flat = ring_lib.ring_colrel_increment_flat(
+                    A_eff, tau_eff, buf_local, w=w, axis_name=axis,
+                    n_shards=k_shards,
+                )
+            inc = tree_unravel(spec, flat, cast=False)
+            losses_all = jax.lax.all_gather(losses, axis, axis=0, tiled=True)
+            mean_loss = _mean_loss(losses_all, active)
+            pr, s = server_opt.apply(pr, s, inc)
+            return (kcur, pr, s), mean_loss
+
+        (key, params, server_state), losses = jax.lax.scan(
+            body, (key, params, server_state), batches
+        )
+        return key, params, server_state, losses
+
+    def scan_rounds(key, params, server_state, batches, p, lr, A=None, active=None):
+        if A is None:
+            raise ValueError("no relay matrix: pass A per call")
+        batch_specs = jax.tree.map(
+            lambda x: P(None, axis, *([None] * (x.ndim - 2))), batches
+        )
+        rep = lambda tree: jax.tree.map(lambda x: P(), tree)  # noqa: E731
+        in_specs = (
+            P(),            # key chain (replicated: every device draws the same τ)
+            rep(params),
+            rep(server_state),
+            batch_specs,
+            P(),            # p
+            P(),            # lr
+            P(),            # A
+            P() if active is not None else rep(active),
+        )
+        out_specs = (P(), rep(params), rep(server_state), P())
+        return shard_map(
+            _local_scan,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_rep=False,
+        )(key, params, server_state, batches, p, lr, A, active)
 
     return scan_rounds

@@ -44,6 +44,18 @@ executes the current chunk — JAX's async dispatch returns control to the
 host immediately, so the consumer thread keeps feeding the device without
 ever blocking on results.  Still bit-identical to the loop driver (same
 gated key chain, same batch order, same policy call order — tested).
+
+Sharded path
+------------
+:class:`ShardedScanEngine` is the top rung: the same schedule walk drives a
+**multi-device** round step
+(:func:`repro.fl.distributed.build_sharded_scan_round_step`) — each device
+of a mesh owns a block of clients (or, in D mode, a slice of the parameter
+axis), the relay exchange runs as a collective (all-gather or block-ring
+``ppermute``), and staged batches are ``device_put`` straight into their
+sharded layout (`repro.sharding.rules.round_batch_specs`) so no device ever
+receives another device's client bytes.  One dispatch per channel epoch,
+prefetched staging optional.  See docs/distributed.md for the dataflow.
 """
 from __future__ import annotations
 
@@ -551,6 +563,207 @@ class PipelinedScanEngine:
         if self.tracer.enabled:
             self.tracer.count("pipelined.dispatches", self.dispatches)
         return params, server_state, _trim_concat(all_parts, C), key
+
+
+class ShardedScanEngine:
+    """Schedule driver for the multi-device sharded round step.
+
+    Wraps a ``scan_rounds`` built by
+    :func:`repro.fl.distributed.build_sharded_scan_round_step` and drives a
+    ``ChannelSchedule`` one **whole epoch per compiled dispatch** — the
+    channel tuple (A, p, active) is constant within an epoch, so the epoch
+    is the natural scan unit and no valid-mask padding is needed (a scan's
+    length is static, so schedules should keep epoch lengths uniform —
+    coherence dividing the horizon — to hold ``trace_count`` at 1, or 2
+    when both churned and churn-free epochs occur).
+
+    The host side differs from the single-device engines in one way:
+    staged batches are *placed*, not copied — each chunk is ``device_put``
+    under the `NamedSharding` that
+    :func:`repro.sharding.rules.round_batch_specs` resolves for the mesh,
+    so the transfer scatters every device exactly its clients' bytes and
+    the dispatch never reshards its input.  (In ``shard="d"`` mode batches
+    stay replicated — GSPMD shards the delta buffer instead — so placement
+    falls back to the plain transfer.)
+
+    ``prefetch`` picks the staging mode: ``"serial"`` stages each epoch
+    inline before its dispatch (the scan-engine analogue); ``"inline"`` /
+    ``"thread"`` stage through a
+    :class:`~repro.channels.scheduler.SegmentPrefetcher` (its ``place``
+    hook carries the sharded placement), overlapping epoch k+1's OPT-α
+    re-solve + stacking + scatter with epoch k's device execution —
+    measured in ``prefetch_stats``.
+
+    The trajectory matches the single-device fused engines to the exchange
+    mode's guarantee: bitwise for ``exchange="gather"`` on the same local
+    math, f32-accumulation tolerance for ``exchange="ring"`` (see
+    `repro.fl.ring`).  Key chain, batch order and policy call order are the
+    serial driver's exactly.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable,
+        *,
+        mesh,
+        shard: str = "clients",
+        prefetch: str = "inline",
+        prefetch_depth: int = 2,
+        tracer=None,
+    ):
+        """``step_fn`` is the ``scan_rounds(key, params, server_state,
+        batches, p, lr, A=..., active=...)`` callable from
+        ``build_sharded_scan_round_step`` (built on the same ``mesh`` and
+        ``shard`` mode).  ``tracer`` adds per-epoch dispatch + device-fence
+        spans and the prefetcher's stage/h2d spans."""
+        if prefetch not in ("serial", "inline", "thread"):
+            raise ValueError(f"unknown prefetch mode: {prefetch!r}")
+        if shard not in ("clients", "d"):
+            raise ValueError(f"unknown shard mode: {shard!r} (clients | d)")
+        self.mesh = mesh
+        self.shard = shard
+        self.prefetch = prefetch
+        self.prefetch_depth = int(prefetch_depth)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self._step_fn = step_fn
+        self._scan_traces = 0
+        self.dispatches = 0
+        self.prefetch_stats = None
+        self._fn = jax.jit(self._epoch_impl)
+
+    @property
+    def trace_count(self) -> int:
+        return self._scan_traces
+
+    def _epoch_impl(self, key, params, server_state, batches, p, lr, A, active):
+        self._scan_traces += 1  # python-side: runs only when jit retraces
+        return self._step_fn(
+            key, params, server_state, batches, p, lr, A=A, active=active
+        )
+
+    def _place(self, host):
+        """Staging-side placement: host-stacked chunk → mesh layout.  In
+        clients mode, ``device_put`` under ``round_batch_specs`` scatters
+        dim 1 over the client axis; in D mode batches are replicated and
+        the plain per-leaf transfer suffices."""
+        from repro.sharding import rules
+
+        if self.shard != "clients":
+            return jax.tree.map(jnp.asarray, host)
+        specs = rules.round_batch_specs(host, self.mesh)
+        return jax.device_put(host, rules.to_shardings(specs, self.mesh))
+
+    def _dispatch(self, key, params, server_state, batches, seg, lr, A):
+        active = None if seg.active is None else jnp.asarray(seg.active, jnp.float32)
+        p = jnp.asarray(seg.p, jnp.float32)
+        if self.tracer.enabled:
+            with self.tracer.span(
+                "shard.epoch",
+                cat="dispatch",
+                epoch=seg.epoch_id,
+                rounds=seg.n_rounds,
+            ):
+                out = self._fn(key, params, server_state, batches, p, lr, A, active)
+        else:
+            out = self._fn(key, params, server_state, batches, p, lr, A, active)
+        self.dispatches += 1
+        return out
+
+    def run_schedule(
+        self,
+        key,
+        params,
+        server_state,
+        *,
+        schedule,
+        rounds,
+        next_batch: Callable[[], Any],
+        lr,
+        policy=None,
+        on_segment: Callable | None = None,
+    ):
+        """Drive a ``ChannelSchedule`` for ``rounds`` rounds across the
+        mesh — same contract as :meth:`EpochScanEngine.run_schedule`.  A
+        relay policy is required (the sharded step is colrel-only).
+        Returns ``(params, server_state, metrics, key)``; ``metrics`` is
+        ``{"loss": (rounds,)}`` — the active-masked mean client loss per
+        round, identical across devices by construction."""
+        if policy is None:
+            raise ValueError("the sharded engine needs a relay policy")
+        self.dispatches = 0
+        self.prefetch_stats = None
+        losses: list = []
+        if self.prefetch == "serial":
+            for seg in schedule.segments(rounds):
+                A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
+                if self.tracer.enabled:
+                    with self.tracer.span(
+                        "shard.stage", cat="stage", epoch=seg.epoch_id
+                    ):
+                        host = [next_batch() for _ in range(seg.n_rounds)]
+                        stacked = self._place(
+                            jax.tree.map(lambda *xs: np.stack(xs), *host)
+                        )
+                else:
+                    host = [next_batch() for _ in range(seg.n_rounds)]
+                    stacked = self._place(
+                        jax.tree.map(lambda *xs: np.stack(xs), *host)
+                    )
+                key, params, server_state, seg_losses = self._dispatch(
+                    key, params, server_state, stacked, seg, lr, A
+                )
+                if self.tracer.enabled:
+                    with self.tracer.span(
+                        "shard.device", cat="device", track="device",
+                        epoch=seg.epoch_id,
+                    ):
+                        jax.block_until_ready(seg_losses)
+                losses.append(seg_losses)
+                if on_segment is not None:
+                    on_segment(seg, params, {"loss": seg_losses})
+        else:
+            from repro.channels.scheduler import SegmentPrefetcher
+
+            # chunk = the full horizon ⇒ exactly one staged item per
+            # segment (a segment never exceeds the horizon): the sharded
+            # step scans whole epochs, so staging must hand it whole epochs
+            prefetcher = SegmentPrefetcher(
+                schedule,
+                rounds,
+                chunk=rounds,
+                next_batch=next_batch,
+                policy=policy,
+                depth=self.prefetch_depth,
+                threaded=self.prefetch == "thread",
+                tracer=self.tracer,
+                place=self._place,
+            )
+            try:
+                for item in prefetcher:
+                    seg = item.segment
+                    A = jnp.asarray(item.A, jnp.float32)
+                    key, params, server_state, seg_losses = self._dispatch(
+                        key, params, server_state, item.batches, seg, lr, A
+                    )
+                    prefetcher.note_inflight(seg_losses)
+                    if self.tracer.enabled:
+                        with self.tracer.span(
+                            "shard.device", cat="device", track="device",
+                            epoch=seg.epoch_id,
+                        ):
+                            jax.block_until_ready(seg_losses)
+                    losses.append(seg_losses)
+                    if on_segment is not None:
+                        on_segment(seg, params, {"loss": seg_losses})
+            finally:
+                prefetcher.close()
+            self.prefetch_stats = prefetcher.stats
+        if self.tracer.enabled:
+            self.tracer.count("shard.dispatches", self.dispatches)
+        metrics = {
+            "loss": losses[0] if len(losses) == 1 else jnp.concatenate(losses)
+        }
+        return params, server_state, metrics, key
 
 
 def run_rounds_loop(

@@ -29,6 +29,33 @@ def validate_backend(backend: str) -> str:
     return backend
 
 
+def validate_sharded_backend(backend: str, *, shard: str, exchange: str = "gather") -> str:
+    """Backend dispatch under sharding (``build_sharded_scan_round_step``):
+
+    * ``shard="d"``: the contraction is partitioned over D by GSPMD, which
+      has no partitioning rules for the Pallas kernels — einsum only.
+    * ``exchange="ring"``: the ring collective *replaces* the relay
+      contraction (k−1 ppermutes + psum), so a kernel backend would be
+      silently ignored — einsum only, by refusal rather than surprise.
+    * ``exchange="gather"``: the gathered (n, D) buffer is replicated
+      per-device, so any backend runs unchanged inside shard_map.
+    """
+    validate_backend(backend)
+    if shard == "d" and backend != "einsum":
+        raise ValueError(
+            "D-axis sharding partitions the relay contraction via GSPMD; "
+            "the Pallas kernels have no partitioning rules — use "
+            "relay_backend='einsum'"
+        )
+    if shard == "clients" and exchange == "ring" and backend != "einsum":
+        raise ValueError(
+            "exchange='ring' replaces the relay contraction with ppermute "
+            "rotations; relay_backend must be 'einsum' (the kernel would "
+            "never run)"
+        )
+    return backend
+
+
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 

@@ -1,8 +1,51 @@
-"""Production meshes.  Functions, not module constants — importing this module
-never touches jax device state (the dry-run must set XLA_FLAGS first)."""
+"""Device meshes: the physical axes every sharded component agrees on.
+
+Everything distributed in this repo is phrased against a named
+:class:`jax.sharding.Mesh`; this module is the single place meshes are
+constructed, so the axis-name vocabulary stays consistent across
+`sharding/rules.py` (PartitionSpecs), `fl/ring.py` (ring collectives) and
+`fl/distributed.py` (the sharded round step).  Three shapes:
+
+* :func:`make_client_mesh` — the federated production mesh: a 1-D
+  ``("clients",)`` mesh where each device owns a contiguous block of
+  client slots.  This is what `build_sharded_scan_round_step` and the
+  ``mesh8_*`` bench scenarios run on; on a CPU host, force the device
+  count first (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+* :func:`make_production_mesh` — the serving/TP mesh from the model zoo:
+  ``(16 data, 16 model)`` per pod, optionally ``(2 pod, 16 data,
+  16 model)``.  The client axes are ``("data",)`` or ``("pod", "data")``
+  (see :func:`repro.sharding.rules.client_axes`).
+* :func:`make_local_mesh` — a small ``(data, model)`` mesh over whatever
+  local devices exist (tests, dry-runs).
+
+Functions, not module constants — importing this module never touches jax
+device state (``XLA_FLAGS`` must be set before the *first* device query,
+so eager ``jax.devices()`` at import time would lock the topology too
+early; ``launch/dryrun.py`` and the subprocess tests rely on this).
+"""
 from __future__ import annotations
 
 import jax
+
+
+def make_client_mesh(n_devices: int | None = None, *, axis: str = "clients"):
+    """1-D mesh over ``n_devices`` (default: all local devices), axis named
+    ``"clients"`` — each device owns one shard of the padded client dim.
+
+    The sharded round step requires ``n_clients % n_devices == 0`` (it is
+    validated at build time, not here: a mesh is just topology).
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else int(n_devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for a client mesh, have {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count={n} before any "
+            "jax import"
+        )
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,14 +1,33 @@
-"""Logical sharding hints: model code annotates tensors with *logical* axis
-names; launchers activate a mapping from logical names to mesh axes.  With no
-mapping active the hints are no-ops, so model code stays mesh-agnostic and
-single-device tests are unaffected.
+"""Logical sharding hints: the *annotation* half of the sharding subsystem.
 
-Motivation (EXPERIMENTS.md §Perf iteration 2): without pinned layouts, GSPMD
-resharded the blockwise-attention inner loop every iteration — a
+The subsystem splits three ways.  `launch/mesh.py` builds the meshes (the
+physical axis vocabulary: ``clients`` / ``data`` / ``model`` / ``pod``);
+`sharding/rules.py` is the *table* — given a pytree family and a mesh it
+resolves PartitionSpecs centrally, which works when the caller knows which
+family it holds (round batches, the flat delta buffer, a parameter tree).
+This module covers the remaining case: tensors born *inside* model code
+(attention intermediates, KV blocks) whose layout only the model author
+can name.  Model code annotates them with **logical** axis names via
+:func:`hint`; a launcher activates a logical→mesh mapping with
+:func:`axis_rules`.  With no mapping active every hint is a no-op, so
+model code stays mesh-agnostic and single-device tests (and the federated
+engines, which never activate a mapping) are untouched.
+
+Motivation (EXPERIMENTS.md §Perf iteration 2): without pinned layouts,
+GSPMD resharded the blockwise-attention inner loop every iteration — a
 collective-permute storm of ~29 TB/device on grok-1 32k prefill.  Pinning
-(batch → client axes, q-chunk → "model") keeps every per-iteration tensor in
-one layout: attention parallelizes over query chunks on the model axis and
-K/V blocks stay batch-sharded.
+(batch → client axes, q-chunk → "model") keeps every per-iteration tensor
+in one layout: attention parallelizes over query chunks on the model axis
+and K/V blocks stay batch-sharded.
+
+Contract details worth knowing (pinned by `tests/test_hints.py`): unknown
+or ``None`` logical names mean "no constraint on this dim"; under an
+active mapping a rank mismatch between tensor and annotation is an error,
+not a silent skip;
+mappings nest (inner :func:`axis_rules` wins, restored on exit) because
+they ride a `contextvars.ContextVar` — thread- and async-safe for the
+prefetcher's worker thread.  See `docs/distributed.md` for where hints sit
+relative to the sharded engine's spec-table path.
 """
 from __future__ import annotations
 

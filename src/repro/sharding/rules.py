@@ -1,15 +1,40 @@
-"""Sharding rules: map parameter/batch/cache pytrees to PartitionSpecs.
+"""Sharding rules: the one place pytree structure meets mesh axes.
 
-Scheme (DESIGN.md §4):
-  * weights: largest divisible dim → "model"; in ``fsdp_tp`` mode a second
-    divisible dim → "data" (ZeRO-3-style storage sharding, gathered by GSPMD
-    at use).  Stacked-layer leading dims (under blocks/groups/rem/enc_blocks)
-    are never sharded.
-  * train batches (n_clients, T, b, ...): client dim → client axes
-    ("data" or ("pod","data")).
-  * serve batches (B, ...): batch dim → client axes; KV caches shard batch →
-    client axes and the cache-sequence dim → "model" (avoids every head-count
-    divisibility issue; GQA kv ∈ {1,2,8} never divides 16).
+Every distributed entry point — the GSPMD mesh step, the `shard_map`
+client-sharded engine (`repro.fl.distributed.build_sharded_scan_round_step`),
+the serving path — resolves its PartitionSpecs here, so "which dim lives on
+which axis" is a table, not a convention scattered across call sites.  The
+rules, by pytree family:
+
+* **weights** (:func:`param_specs`): largest divisible dim → ``"model"``;
+  in ``fsdp_tp`` mode a second divisible dim → ``"data"`` (ZeRO-3-style
+  storage sharding, gathered by GSPMD at use).  Stacked-layer leading dims
+  (under ``blocks``/``groups``/``rem``/``enc_blocks``/``selfs``) are never
+  sharded.  In the federated engines the *parameters stay replicated* —
+  every client starts each round from the same global model — so these
+  specs serve the model-zoo serving path and the D-axis increment mode.
+* **train batches** (:func:`train_batch_specs`): leaves
+  ``(n_clients, T, b, ...)`` — the client dim → client axes (``"data"`` or
+  ``("pod","data")`` on the production mesh, :func:`client_axes`).
+* **round-stacked train batches** (:func:`round_batch_specs`): the scan
+  engines stack a whole epoch, leaves ``(R, n_clients, T, b, ...)`` — dim 1
+  (clients) → the mesh's client axis, everything else replicated.  This is
+  the spec the sharded engine's prefetcher uses to ``device_put`` each
+  staged chunk directly into its sharded layout (no gather-then-scatter).
+* **the raveled (n, D) delta buffer** (:func:`flat_buffer_specs`): the
+  relay hot spot.  Clients-axis mode shards dim 0 (handled by `shard_map`,
+  not a spec); D-axis mode constrains dim 1 → ``"model"`` so GSPMD
+  partitions the ``(n,n)·(n,D)`` contraction over parameters — the mode for
+  models too large to replicate (ROADMAP item 1's D = 10⁷ sweep).
+* **serve batches / KV caches** (:func:`serve_batch_specs`,
+  :func:`cache_specs`): batch dim → client axes; caches additionally shard
+  the cache-sequence dim → ``"model"`` (avoids every head-count
+  divisibility issue; GQA kv ∈ {1,2,8} never divides 16).
+
+:func:`to_shardings` turns any spec tree into `NamedSharding`s for a
+concrete mesh.  Rule resolution is pure shape arithmetic — no device state
+is touched, so the rules are unit-testable on any host
+(`tests/test_sharding_rules.py`).
 """
 from __future__ import annotations
 
@@ -66,6 +91,39 @@ def train_batch_specs(batch, mesh):
     """Round batches: leaves (n_clients, T, b, ...) — client dim sharded."""
     ca = client_axes(mesh)
     return jax.tree.map(lambda leaf: P(ca, *([None] * (leaf.ndim - 1))), batch)
+
+
+def shard_axis(mesh) -> str:
+    """The client-shard axis of a mesh: ``"clients"`` on a client mesh
+    (`launch.mesh.make_client_mesh`), else the first client axis of the
+    production mesh layout."""
+    return "clients" if "clients" in mesh.axis_names else client_axes(mesh)[0]
+
+
+def round_batch_specs(batch, mesh):
+    """Epoch-stacked round batches: leaves (R, n_clients, T, b, ...) —
+    dim 1 (the client dim) sharded over the mesh's client axis, the round
+    dim and everything per-client replicated.  This is the staging layout
+    of the sharded engine: `SegmentPrefetcher` device_puts each chunk with
+    these specs so every device receives exactly its clients' bytes."""
+    ax = shard_axis(mesh)
+    return jax.tree.map(
+        lambda leaf: P(None, ax, *([None] * (leaf.ndim - 2))), batch
+    )
+
+
+def flat_buffer_specs(mesh, *, n: int | None = None, d: int | None = None):
+    """PartitionSpec of the raveled (n, D) delta buffer in D-axis mode:
+    dim 1 → "model" when D divides the model-axis size (else fully
+    replicated — a constraint that does not divide is worse than none).
+    ``n``/``d`` are the buffer dims when known; d=None defers the
+    divisibility check to GSPMD (the constraint is still well-formed)."""
+    model_n = mesh.shape.get("model", 1)
+    if model_n <= 1:
+        return P(None, None)
+    if d is not None and (d % model_n != 0 or d < model_n):
+        return P(None, None)
+    return P(None, "model")
 
 
 def serve_batch_specs(batch, mesh):

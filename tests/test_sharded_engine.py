@@ -1,0 +1,299 @@
+"""ShardedScanEngine: the multi-device schedule driver.
+
+In-process (single local device): constructor/spec validation, the backend
+dispatch rules under sharding, and the prefetcher ``place`` hook that
+carries the sharded batch placement.  Subprocess (forced 8-device host
+mesh, same pattern as `test_ring_relay.py`): the engine regression — both
+exchange modes × both staging modes against the single-device fused scan
+reference under rotating-cohort churn + correlated shadowing, at the shard
+gate's tolerance (gather additionally bitwise across staging modes)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import channels
+from repro.bench.scenarios import ScenarioSpec
+from repro.channels.scheduler import SegmentPrefetcher
+from repro.core import topology
+from repro.fl.engine import ShardedScanEngine
+from repro.kernels.ops import validate_sharded_backend
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code, devices=8):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ------------------------------------------------- backend dispatch rules
+
+
+def test_sharded_backend_gather_allows_kernels():
+    assert validate_sharded_backend(
+        "pallas_fused", shard="clients", exchange="gather"
+    ) == "pallas_fused"
+    assert validate_sharded_backend("einsum", shard="d") == "einsum"
+    assert validate_sharded_backend(
+        "einsum", shard="clients", exchange="ring"
+    ) == "einsum"
+
+
+def test_sharded_backend_ring_refuses_kernels():
+    with pytest.raises(ValueError, match="ppermute"):
+        validate_sharded_backend("pallas", shard="clients", exchange="ring")
+
+
+def test_sharded_backend_dshard_refuses_kernels():
+    with pytest.raises(ValueError, match="GSPMD"):
+        validate_sharded_backend("pallas_fused", shard="d")
+
+
+# ------------------------------------------------------- spec validation
+
+
+def _shard_spec(**kw):
+    base = dict(name="t", n_clients=8, rounds=8, step="shard", devices=8)
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+def test_shard_spec_valid_cases():
+    assert _shard_spec().devices == 8
+    assert _shard_spec(exchange="ring").exchange == "ring"
+    assert _shard_spec(check_backend="pallas_fused").check_backend == "pallas_fused"
+    assert _shard_spec(devices=2, shard="d").shard == "d"
+
+
+def test_shard_spec_rejects_bad_configs():
+    with pytest.raises(ValueError, match="devices >= 2"):
+        _shard_spec(devices=1)
+    with pytest.raises(ValueError, match="divide"):
+        _shard_spec(n_clients=10)
+    with pytest.raises(ValueError, match="relay policy"):
+        _shard_spec(policy="none")
+    with pytest.raises(ValueError, match="fused"):
+        _shard_spec(strategy="colrel")
+    with pytest.raises(ValueError, match="unknown exchange"):
+        _shard_spec(exchange="butterfly")
+    with pytest.raises(ValueError, match="ppermute"):
+        _shard_spec(exchange="ring", relay_backend="pallas_fused")
+    with pytest.raises(ValueError, match="ppermute"):
+        _shard_spec(exchange="ring", check_backend="pallas_fused")
+    with pytest.raises(ValueError, match="GSPMD"):
+        _shard_spec(devices=2, shard="d", relay_backend="pallas")
+
+
+def test_engine_rejects_bad_modes():
+    with pytest.raises(ValueError, match="prefetch"):
+        ShardedScanEngine(lambda *a, **k: None, mesh=None, prefetch="eager")
+    with pytest.raises(ValueError, match="shard"):
+        ShardedScanEngine(lambda *a, **k: None, mesh=None, shard="rows")
+
+
+def test_engine_requires_policy():
+    eng = ShardedScanEngine(lambda *a, **k: None, mesh=None, prefetch="serial")
+    schedule = channels.StaticChannel(topology.ring(4, 1), np.full(4, 0.9))
+    with pytest.raises(ValueError, match="policy"):
+        eng.run_schedule(
+            jax.random.key(0), {}, None, schedule=schedule, rounds=4,
+            next_batch=lambda: {}, lr=0.1,
+        )
+
+
+# -------------------------------------------------- prefetcher place hook
+
+
+def test_prefetcher_place_hook_replaces_default_transfer():
+    """`place` substitutes the H2D transfer: the staged chunks must carry
+    exactly its output (this is how the sharded engine device_puts each
+    chunk under the mesh's NamedSharding)."""
+    n, rounds, chunk = 4, 6, 3
+    schedule = channels.StaticChannel(
+        topology.ring(n, 1), np.full(n, 0.9, np.float32)
+    )
+    counter = iter(range(rounds))
+
+    placed = []
+
+    def place(host):
+        placed.append(host)
+        return jax.tree.map(lambda x: jnp.asarray(x) + 100.0, host)
+
+    pf = SegmentPrefetcher(
+        schedule, rounds, chunk=chunk,
+        next_batch=lambda: {"c": np.full((n, 1), float(next(counter)), np.float32)},
+        place=place,
+    )
+    items = list(pf)
+    assert len(items) == rounds // chunk
+    assert len(placed) == len(items)
+    got = np.concatenate(
+        [np.asarray(it.batches["c"])[: it.n_rounds] for it in items]
+    )
+    assert np.array_equal(got[:, 0, 0], 100.0 + np.arange(rounds))
+
+
+# ------------------------------- in-process run on a single-device mesh
+
+
+def test_engine_single_device_mesh_matches_reference():
+    """The sharded step and engine are well-defined at k = 1 (shard_map
+    over a 1-device clients mesh: the gather is an identity, the ring has
+    no rotations) — and must match the single-device fused scan walk.
+    This is the in-process leg of the regression; the real 8-device run is
+    the subprocess test below."""
+    from repro.bench.scenarios import build
+    from repro.fl.distributed import (
+        build_fused_scan_round_step,
+        build_sharded_scan_round_step,
+    )
+    from repro.launch.mesh import make_client_mesh
+
+    spec = ScenarioSpec(
+        name="t", n_clients=4, rounds=8, local_steps=2, local_batch=2,
+        dim=8, width=8, n_train=64, adj_every=4, p_every=4, drift_hold=4,
+        churn="rotating", n_cohorts=2, churn_hold=4,
+    )
+    bundle = build(spec)
+    loader = bundle.make_loader()
+    batches = [loader.round_batch(spec.local_steps, spec.local_batch)
+               for _ in range(spec.rounds)]
+    mesh = make_client_mesh(1)
+    kw = dict(n_clients=spec.n_clients, local_steps=spec.local_steps)
+    ref_fn = jax.jit(build_fused_scan_round_step(bundle.loss_fn, **kw))
+
+    schedule, policy = bundle.make_schedule(), bundle.make_policy()
+    p_ref = bundle.init_fn(jax.random.key(spec.seed))
+    ss, k_ref, stream = None, jax.random.key(spec.seed + 1), iter(batches)
+    n_segments = 0
+    for seg in schedule.segments(spec.rounds):
+        n_segments += 1
+        A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
+        act = None if seg.active is None else jnp.asarray(seg.active, jnp.float32)
+        stacked = jax.tree.map(
+            lambda *xs: jnp.asarray(np.stack(xs)),
+            *[next(stream) for _ in range(seg.n_rounds)],
+        )
+        k_ref, p_ref, ss, _ = ref_fn(
+            k_ref, p_ref, ss, stacked, jnp.asarray(seg.p, jnp.float32),
+            spec.lr, A, act,
+        )
+
+    for exchange in ("gather", "ring"):
+        for prefetch in ("serial", "inline"):
+            step = build_sharded_scan_round_step(
+                bundle.loss_fn, mesh=mesh, exchange=exchange, **kw)
+            eng = ShardedScanEngine(step, mesh=mesh, prefetch=prefetch)
+            stream = iter(batches)
+            p_s, _, metrics, k_s = eng.run_schedule(
+                jax.random.key(spec.seed + 1),
+                bundle.init_fn(jax.random.key(spec.seed)), None,
+                schedule=bundle.make_schedule(), rounds=spec.rounds,
+                next_batch=lambda: next(stream), lr=spec.lr,
+                policy=bundle.make_policy(),
+            )
+            for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_s)):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5,
+                    err_msg=f"{exchange}/{prefetch}",
+                )
+            assert metrics["loss"].shape == (spec.rounds,)
+            assert bool(jnp.all(
+                jax.random.key_data(k_ref) == jax.random.key_data(k_s)))
+            assert eng.trace_count == 1, (exchange, prefetch)
+            assert eng.dispatches == n_segments, (exchange, prefetch)
+
+
+# -------------------------------------- 8-device engine regression (slow)
+
+
+@pytest.mark.slow
+def test_sharded_engine_matches_single_device_reference():
+    """Both exchanges × both staging modes vs the single-device fused scan
+    walk, under rotating churn + correlated shadowing: params within the
+    shard gate's 1e-5, identical key chain, one trace, one dispatch per
+    epoch; gather staging modes bitwise-identical to each other."""
+    out = _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.bench.scenarios import ScenarioSpec, build
+from repro.fl.distributed import (
+    build_fused_scan_round_step, build_sharded_scan_round_step)
+from repro.fl.engine import ShardedScanEngine
+from repro.launch.mesh import make_client_mesh
+
+spec = ScenarioSpec(
+    name="t", n_clients=8, rounds=16, local_steps=2, local_batch=4,
+    dim=16, width=8, n_train=128, fading="corr_shadow", drift="static",
+    adj_every=8, p_every=8, churn="rotating", n_cohorts=4, churn_hold=8,
+)
+bundle = build(spec)
+loader = bundle.make_loader()
+batches = [loader.round_batch(spec.local_steps, spec.local_batch)
+           for _ in range(spec.rounds)]
+mesh = make_client_mesh(8)
+kw = dict(n_clients=spec.n_clients, local_steps=spec.local_steps)
+ref_fn = jax.jit(build_fused_scan_round_step(bundle.loss_fn, **kw))
+
+def run_ref():
+    schedule, policy = bundle.make_schedule(), bundle.make_policy()
+    params = bundle.init_fn(jax.random.key(spec.seed))
+    ss, key, stream, losses = None, jax.random.key(spec.seed + 1), iter(batches), []
+    n_segments = 0
+    for seg in schedule.segments(spec.rounds):
+        n_segments += 1
+        A = jnp.asarray(policy.relay_matrix(seg.state), jnp.float32)
+        act = None if seg.active is None else jnp.asarray(seg.active, jnp.float32)
+        stacked = jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)),
+                               *[next(stream) for _ in range(seg.n_rounds)])
+        key, params, ss, ls = ref_fn(
+            key, params, ss, stacked, jnp.asarray(seg.p, jnp.float32),
+            spec.lr, A, act)
+        losses.append(ls)
+    return params, jnp.concatenate(losses), key, n_segments
+
+def run_sharded(exchange, prefetch):
+    step = build_sharded_scan_round_step(
+        bundle.loss_fn, mesh=mesh, exchange=exchange, **kw)
+    eng = ShardedScanEngine(step, mesh=mesh, prefetch=prefetch)
+    stream = iter(batches)
+    params, ss, metrics, key = eng.run_schedule(
+        jax.random.key(spec.seed + 1), bundle.init_fn(jax.random.key(spec.seed)),
+        None, schedule=bundle.make_schedule(), rounds=spec.rounds,
+        next_batch=lambda: next(stream), lr=spec.lr,
+        policy=bundle.make_policy())
+    return params, metrics["loss"], key, eng
+
+p_ref, l_ref, k_ref, n_segments = run_ref()
+finals = {}
+for exchange in ("gather", "ring"):
+    for prefetch in ("serial", "inline"):
+        p_s, l_s, k_s, eng = run_sharded(exchange, prefetch)
+        finals[exchange, prefetch] = p_s
+        mad = max(float(np.max(np.abs(np.asarray(a, np.float64) - np.asarray(b, np.float64))))
+                  for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_s)))
+        assert mad < 1e-5, (exchange, prefetch, mad)
+        lmad = float(np.max(np.abs(np.asarray(l_ref) - np.asarray(l_s))))
+        assert lmad < 1e-4, (exchange, prefetch, lmad)
+        assert bool(jnp.all(jax.random.key_data(k_ref) == jax.random.key_data(k_s))), (
+            exchange, prefetch)
+        assert eng.trace_count == 1, (exchange, prefetch, eng.trace_count)
+        assert eng.dispatches == n_segments, (exchange, prefetch, eng.dispatches)
+
+for exchange in ("gather", "ring"):
+    pa, pb = finals[exchange, "serial"], finals[exchange, "inline"]
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb))), exchange
+print("OK")
+""")
+    assert "OK" in out
