@@ -19,12 +19,14 @@ test-fast:
 # single-device-mesh engine regression, the rules units, the spec
 # validation net) that cover most of the new code, but the genuinely
 # multi-device legs run as subprocess tests (XLA_FLAGS must precede jax
-# init) and subprocess execution records no coverage — so the floor holds
-# rather than ratcheting to measured−5 on a number the harness-side shard
-# path would drag (previous floors: 80 → 81).
+# init) and subprocess execution records no coverage.  A settrace/AST
+# proxy (pytest-cov absent locally) measures ≈83.6% on the fast suite;
+# measured−5 would sit *below* the standing floor, and the ratchet never
+# moves down, so the floor advances by the measured growth instead
+# (previous floors: 80 → 81 → 82).
 test-cov:
 	$(PYTEST) -x -q -m "not slow" --cov --cov-config=.coveragerc \
-	  --cov-report=term --cov-fail-under=81
+	  --cov-report=term --cov-fail-under=82
 
 # full suite without -x: runs past the known-failing slow convergence
 # bounds so regressions in later files stay visible
@@ -52,6 +54,8 @@ bench-smoke:
 	  $(PY) -m repro.bench.run --scenario mesh8_smoke --out-dir . --trace \
 	  --baseline benchmarks/baselines/BENCH_mesh8_smoke.json \
 	  --max-regression 2.0
+	PYTHONPATH=src $(PY) -m repro.bench.run --scenario sample_sweep_smoke \
+	  --out-dir .
 
 # telemetry demo: traced bench_smoke run (writes TRACE_*.json — load them in
 # https://ui.perfetto.dev) + the per-phase attribution summary for the
@@ -63,13 +67,14 @@ trace-smoke:
 
 lint:
 	ruff check .
-	ruff format --check src/repro/bench src/repro/channels src/repro/fl \
-	  src/repro/kernels src/repro/obs src/repro/utils tests/test_bench.py \
-	  tests/test_pipelined_engine.py tests/test_obs.py
+	ruff format --check src/repro/bench src/repro/channels src/repro/core \
+	  src/repro/fl src/repro/kernels src/repro/obs src/repro/utils \
+	  tests/test_bench.py tests/test_pipelined_engine.py tests/test_obs.py
 
 # spot-check the docs against the live code: runs the --list snippets
 # embedded in the listed docs and verifies every scenario the docs
 # reference still exists in the registry
 docs-check:
 	PYTHONPATH=src $(PY) tools/check_docs.py docs/benchmarks.md \
-	  docs/architecture.md docs/observability.md docs/distributed.md
+	  docs/architecture.md docs/observability.md docs/distributed.md \
+	  docs/paper_map.md

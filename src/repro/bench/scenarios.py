@@ -38,6 +38,13 @@ The registered scenarios:
                   D = 10⁴ … 10⁷ (compute- vs memory-bound crossover);
                   reference engines + the mandatory pallas_fused kernel
                   check (see benchmarks/roofline.py)
+  sample_sweep_n1e3 / _n1e4 / _smoke
+                  the n ≫ 10³ client-scale regime: sparse geometric graph,
+                  per-round fixed-k cohorts (CohortSampler), the
+                  neighborhood-blocked OPT-α solver (policy="sparse") and
+                  segment-sum aggregation over EdgeRelay operands — the
+                  n=10³/10⁴ pair proves rounds/sec holds as n grows (the
+                  smoke point is the CI gate, einsum parity check on)
   mesh8_smoke     the multi-device CI gate: client-sharded fused scan on an
                   8-device host mesh (gather exchange, pallas_fused parity
                   check on the side) — run under
@@ -55,6 +62,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import channels
 from repro.configs.resnet20_cifar import CONFIG as _RESNET20_CONFIG
@@ -82,7 +90,7 @@ class ScenarioSpec:
     local_steps: int = 2
     local_batch: int = 8
     strategy: str = "colrel_fused"
-    policy: str = "adaptive"  # adaptive | stale | none
+    policy: str = "adaptive"  # adaptive | sparse | stale | none
     opt_method: str = "exact"  # OPT-α column solver (exact | bisect)
     opt_sweeps: int = 40
     warm_sweeps: int = 12
@@ -106,8 +114,11 @@ class ScenarioSpec:
     block_d: int | None = None
     check_backend: str = "none"
     # channel composition
-    topology: str = "ring"  # ring | full
+    topology: str = "ring"  # ring | full | geometric
     ring_k: int = 2
+    # geometric: expected node degree of the random geometric graph on the
+    # unit square (sets the radius: r = sqrt(deg / (π n)))
+    geo_degree: float = 8.0
     fading: str = "markov"  # markov | corr_shadow | corr_uplink | static
     p_up_to_down: float = 0.3
     p_down_to_up: float = 0.5
@@ -118,6 +129,14 @@ class ScenarioSpec:
     churn: str = "none"  # none | rotating
     n_cohorts: int = 5
     churn_hold: int = 4
+    # per-round cohort sampling (the n ≫ 10³ regime): the active mask becomes
+    # membership ∧ sampled, with the sampler wrapping the churn process as
+    # its eligibility base.  fixed_k / expander use sample_k, uniform uses
+    # sample_rate; sample_every throttles the redraw cadence.
+    sampling: str = "none"  # none | uniform | fixed_k | expander
+    sample_k: int = 0
+    sample_rate: float = 0.5
+    sample_every: int = 1
     # correlated shadowing (fading = corr_shadow | corr_uplink; the field
     # refreshes every adj_every rounds — the coherence time)
     corr_length: float = 0.4
@@ -183,6 +202,38 @@ class ScenarioSpec:
                 )
         if self.fading == "corr_uplink" and self.drift != "static":
             raise ValueError("corr_uplink couples p to the fade; set drift='static'")
+        if self.topology == "geometric" and self.geo_degree <= 0:
+            raise ValueError("geometric topology needs geo_degree > 0")
+        if self.sampling not in ("none", "uniform", "fixed_k", "expander"):
+            raise ValueError(f"unknown sampling: {self.sampling!r}")
+        if self.sampling in ("fixed_k", "expander") and self.sample_k < 1:
+            raise ValueError(f"sampling={self.sampling!r} needs sample_k >= 1")
+        if self.sampling == "uniform" and not (0.0 < self.sample_rate <= 1.0):
+            raise ValueError("uniform sampling needs sample_rate in (0, 1]")
+        if self.sample_every < 1:
+            raise ValueError("sample_every must be >= 1")
+        if self.sampling != "none" and self.step != "sim":
+            raise ValueError("cohort sampling drives churn masks: sim path only")
+        # the segment backend consumes EdgeRelay operands — single-host sim
+        # path only (the mesh/shard steps are dense), and the colrel
+        # strategies need a policy that actually emits EdgeRelays
+        for be, what in (
+            (self.relay_backend, "relay_backend"),
+            (self.check_backend, "check_backend"),
+        ):
+            if be == "segment" and self.step != "sim":
+                raise ValueError(
+                    f"{what}='segment' runs on the single-host sim path only"
+                )
+        if (
+            self.relay_backend == "segment"
+            and self.strategy in ("colrel", "colrel_fused")
+            and self.policy != "sparse"
+        ):
+            raise ValueError(
+                "relay_backend='segment' needs policy='sparse' (the other "
+                "policies emit dense relay matrices, not EdgeRelays)"
+            )
         if self.model not in ("mlp", "resnet20"):
             raise ValueError(f"unknown model: {self.model!r}")
         if self.relay_backend not in RELAY_BACKENDS:
@@ -244,14 +295,25 @@ class ScenarioBundle:
     spec: ScenarioSpec
     init_fn: object
     loss_fn: object
+    # memoized base graph: every engine run builds a fresh schedule from the
+    # same spec, and a 10⁴-node geometric graph is too expensive to resample
+    # per run (the schedules copy it on construction, so sharing is safe)
+    _adj: object = dataclasses.field(default=None, repr=False)
 
     def base_adjacency(self):
-        spec = self.spec
-        if spec.topology == "ring":
-            return topology.ring(spec.n_clients, spec.ring_k)
-        if spec.topology == "full":
-            return topology.fully_connected(spec.n_clients)
-        raise ValueError(f"unknown topology: {spec.topology!r}")
+        if self._adj is None:
+            spec = self.spec
+            if spec.topology == "ring":
+                self._adj = topology.ring(spec.n_clients, spec.ring_k)
+            elif spec.topology == "full":
+                self._adj = topology.fully_connected(spec.n_clients)
+            elif spec.topology == "geometric":
+                n = spec.n_clients
+                radius = float(np.sqrt(spec.geo_degree / (np.pi * n)))
+                self._adj = topology.random_geometric(n, radius, seed=spec.seed)
+            else:
+                raise ValueError(f"unknown topology: {spec.topology!r}")
+        return self._adj
 
     def base_p(self):
         return connectivity.heterogeneous_profile(self.spec.n_clients).p
@@ -309,13 +371,27 @@ class ScenarioBundle:
             kw["p"] = p0
         else:
             kw["p_process"] = p_process
+        member = None
         if spec.churn == "rotating":
             member = channels.RotatingCohorts(
                 spec.n_clients, n_cohorts=spec.n_cohorts, hold=spec.churn_hold
             )
-            return channels.ChurnSchedule(membership=member, **kw)
-        if spec.churn != "none":
+        elif spec.churn != "none":
             raise ValueError(f"unknown churn: {spec.churn!r}")
+        if spec.sampling != "none":
+            # cohort sampling composes on top of churn: the sampler's base
+            # is the membership process (active = membership ∧ sampled)
+            member = channels.CohortSampler(
+                spec.n_clients,
+                strategy=spec.sampling,
+                k=spec.sample_k if spec.sampling != "uniform" else None,
+                rate=spec.sample_rate if spec.sampling == "uniform" else None,
+                base=member,
+                resample_every=spec.sample_every,
+                seed=seed + 2,
+            )
+        if member is not None:
+            return channels.ChurnSchedule(membership=member, **kw)
         if link is None and p_process is None:
             return channels.StaticChannel(adj, p0)
         return channels.TimeVaryingChannel(**kw)
@@ -324,6 +400,13 @@ class ScenarioBundle:
         spec = self.spec
         if spec.policy == "adaptive":
             return channels.AdaptiveOptAlpha(
+                sweeps=spec.opt_sweeps,
+                warm_sweeps=spec.warm_sweeps,
+                method=spec.opt_method,
+                tracer=tracer,
+            )
+        if spec.policy == "sparse":
+            return channels.SparseOptAlpha(
                 sweeps=spec.opt_sweeps,
                 warm_sweeps=spec.warm_sweeps,
                 method=spec.opt_method,
@@ -614,6 +697,80 @@ for _suffix, (_dim, _width, _rounds, _block) in _RELAY_SWEEP.items():
             check_backend="pallas_fused",
         )
     )
+
+# ------------------------------------------------------------ client n-sweep
+# The cohort-sampling scale regime: the padded client dimension grows
+# 10³ → 10⁴ while the per-round cohort stays fixed at k=128, the graph stays
+# sparse (geometric, expected degree 8) and the relay operand stays O(edges)
+# (EdgeRelay + segment backend, policy="sparse").  Every round redraws the
+# cohort, so each round is its own channel epoch — the measured regime is
+# warm-started sparse re-solves plus segment-sum aggregation.  The n1e3
+# point carries the mandatory einsum parity check (the dense reference
+# densifies the same EdgeRelays); at n1e4 the dense check matrix would be
+# 10⁸ entries, so that point relies on the loop/scan/pipelined bitwise gate.
+
+_SAMPLE_SWEEP = {
+    # name suffix -> (n_clients, n_train, rounds, check_backend)
+    "n1e3": (1_000, 4_000, 16, "einsum"),
+    "n1e4": (10_000, 20_000, 16, "none"),
+}
+
+for _suffix, (_n, _train, _rounds, _check) in _SAMPLE_SWEEP.items():
+    register(
+        ScenarioSpec(
+            name=f"sample_sweep_{_suffix}",
+            description=(
+                f"client n-sweep @ n={_n}: fixed-k cohorts (k=128) on a "
+                "sparse geometric graph, sparse OPT-α + segment aggregation"
+            ),
+            n_clients=_n,
+            rounds=_rounds,
+            local_steps=1,
+            local_batch=2,
+            dim=32,
+            width=16,
+            n_train=_train,
+            policy="sparse",
+            opt_method="bisect",
+            relay_backend="segment",
+            check_backend=_check,
+            topology="geometric",
+            geo_degree=8.0,
+            fading="static",
+            drift="static",
+            sampling="fixed_k",
+            sample_k=128,
+            chunk=1,
+        )
+    )
+
+register(
+    ScenarioSpec(
+        name="sample_sweep_smoke",
+        description=(
+            "CI-sized cohort-sampling point (n=256, k=32): sparse OPT-α, "
+            "segment aggregation and the einsum parity check in seconds"
+        ),
+        n_clients=256,
+        rounds=10,
+        local_steps=1,
+        local_batch=2,
+        dim=32,
+        width=16,
+        n_train=512,
+        policy="sparse",
+        opt_method="bisect",
+        relay_backend="segment",
+        check_backend="einsum",
+        topology="geometric",
+        geo_degree=8.0,
+        fading="static",
+        drift="static",
+        sampling="fixed_k",
+        sample_k=32,
+        chunk=1,
+    )
+)
 
 register(
     ScenarioSpec(

@@ -25,6 +25,11 @@ subsystem is three layers, consumed in order every round:
      (:class:`MarkovChurn`), deterministic shift rotation
      (:class:`RotatingCohorts`), or a fixed mask
      (:class:`StaticMembership`).
+   * cohort sampling (`sampling`): :class:`CohortSampler`, a membership
+     process emitting ``membership ∧ sampled`` — per-round client cohorts
+     (uniform / fixed-k / expander-stride draws), optionally wrapping any
+     of the processes above as the eligibility base.  The n ≫ 10³ scale
+     regime: per-round cost follows the cohort and its live edges.
 
 2. **Schedules** (`schedule`, `churn`) — compose processes into one stream of
    :class:`ChannelState` per federated round: the realized adjacency, the
@@ -44,7 +49,11 @@ subsystem is three layers, consumed in order every round:
    mask, since the optimum over a different active set is a different matrix
    — plus Gauss–Seidel warm starts from the previous optimum.  Under churn
    it solves the masked problem (`opt_alpha.optimize_masked`), so departed
-   clients carry exactly zero weight.  :class:`StaleOptAlpha` is the
+   clients carry exactly zero weight.  :class:`SparseOptAlpha` is the same
+   policy on the neighborhood-blocked solver: it emits sparse
+   :class:`~repro.core.relay.EdgeRelay` operands for
+   ``relay_backend="segment"`` and keeps solves, cache entries and relay
+   cost O(edges).  :class:`StaleOptAlpha` is the
    channel-oblivious ablation (round-0 A forever, projected onto the live
    topology and membership).
 
@@ -94,6 +103,7 @@ from repro.channels.drift import (
 )
 from repro.channels.link_state import MarkovLinkProcess, gilbert_elliott
 from repro.channels.mobility import RandomWaypointMobility, geometric_adjacency
+from repro.channels.sampling import CohortSampler
 from repro.channels.schedule import (
     ChannelSchedule,
     ChannelSegment,
@@ -106,6 +116,7 @@ from repro.channels.scheduler import (
     PrefetchStats,
     SchedulerStats,
     SegmentPrefetcher,
+    SparseOptAlpha,
     StagedChunk,
     StaleOptAlpha,
     project_to_support,
@@ -117,6 +128,7 @@ __all__ = [
     "ChannelSegment",
     "ChannelState",
     "ChurnSchedule",
+    "CohortSampler",
     "CorrelatedChannel",
     "CoupledUplinkDrift",
     "MarkovChurn",
@@ -130,6 +142,7 @@ __all__ = [
     "SegmentPrefetcher",
     "ShadowedLinkProcess",
     "ShadowingField",
+    "SparseOptAlpha",
     "StagedChunk",
     "StaleOptAlpha",
     "StaticChannel",

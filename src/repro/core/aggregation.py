@@ -30,9 +30,12 @@ buffer (``repro.utils.stacked_ravel``) instead of the stacked pytree, with a
 ``backend`` knob dispatching the (n,n)·(n,D) contraction to the Pallas
 kernels (``repro.kernels``): ``einsum`` is the pure-XLA reference, ``pallas``
 materializes Δ̃ = A·Δ through the mix kernel, ``pallas_fused`` runs the
-relay∘aggregate composition u = (w·τᵀA)·Δ as one kernel pass.  The pytree
-``Aggregator.fn`` is now a thin ravel → flat → unravel wrapper, so all
-callers share one math definition.
+relay∘aggregate composition u = (w·τᵀA)·Δ as one kernel pass, and
+``segment`` consumes a sparse ``relay.EdgeRelay`` operand and contracts via
+``jax.ops.segment_sum`` — O(E) in the edge count, the n ≫ 10³ regime of
+cohort sampling over sparse geometric graphs.  The pytree ``Aggregator.fn``
+is now a thin ravel → flat → unravel wrapper, so all callers share one math
+definition.
 """
 from __future__ import annotations
 
@@ -44,7 +47,13 @@ import jax.numpy as jnp
 
 from repro.core import relay as relay_lib
 from repro.kernels import ops as kernel_ops
-from repro.utils import stacked_ravel, tree_axpy, tree_scale, tree_unravel, tree_zeros_like
+from repro.utils import (
+    stacked_ravel,
+    tree_axpy,
+    tree_scale,
+    tree_unravel,
+    tree_zeros_like,
+)
 
 
 def active_weight(active, *, n: int):
@@ -120,7 +129,21 @@ def colrel_increment_flat(A, tau, buf, *, n: int, fused: bool = True,
     materializes Δ̃ = A·Δ (paper-faithful protocol shape) then runs the blind
     masked sum w·Σ τ_r Δ̃_r.  Churn: inactive rows/cols of A are zeroed and
     τ intersected with the mask, so inactive slots contribute exactly zero.
+
+    ``backend="segment"`` takes A as an :class:`~repro.core.relay.EdgeRelay`
+    (dense matrices are refused — the point is never materializing (n, n));
+    the coefficient contraction τᵀA becomes an O(E) segment-sum and the rest
+    of the pipeline is unchanged.  Conversely the dense backends accept an
+    EdgeRelay by densifying it — a small-n parity convenience.
     """
+    if backend == "segment" and not isinstance(A, relay_lib.EdgeRelay):
+        raise ValueError(
+            "relay_backend='segment' needs an EdgeRelay operand (e.g. a "
+            "sparse OPT-α policy / SparseOptAlphaResult.edge_relay()); "
+            "got a dense relay matrix"
+        )
+    if backend != "segment" and isinstance(A, relay_lib.EdgeRelay):
+        A = A.todense(buf.shape[0])
     w = active_weight(active, n=n)
     tau = jnp.asarray(tau, jnp.float32)
     if active is not None:
@@ -128,8 +151,10 @@ def colrel_increment_flat(A, tau, buf, *, n: int, fused: bool = True,
         A = relay_lib.mask_relay_matrix(A, a)
         tau = tau * a
     if fused or backend == "pallas_fused":
-        coeffs = w * (tau @ jnp.asarray(A, jnp.float32))
-        reduce_backend = "einsum" if backend == "einsum" else "pallas_fused"
+        coeffs = w * relay_lib.fused_coefficients(A, tau)
+        reduce_backend = (
+            "einsum" if backend in ("einsum", "segment") else "pallas_fused"
+        )
         return kernel_ops.reduce_flat(
             coeffs, buf, backend=reduce_backend,
             block_d=block_d, interpret=interpret,
@@ -172,9 +197,14 @@ def no_dropout_increment_flat(buf, *, n: int, active=None,
 
 
 def _coeff_reduce(coeffs, buf, backend, block_d, interpret):
-    # non-colrel strategies are already a single weighted reduce, so both
-    # kernel backends collapse to the fused-reduction kernel
-    reduce_backend = "einsum" if backend == "einsum" else "pallas_fused"
+    # non-colrel strategies are already a single weighted reduce with dense
+    # (n,) coefficients: both kernel backends collapse to the fused-reduction
+    # kernel, and "segment" (nothing sparse left to exploit) to the einsum —
+    # so an all-inactive cohort stays the exact-zero coefficient vector on
+    # every backend rather than tripping a sparse path with no edges.
+    reduce_backend = (
+        "einsum" if backend in ("einsum", "segment") else "pallas_fused"
+    )
     return kernel_ops.reduce_flat(
         coeffs, buf, backend=reduce_backend, block_d=block_d,
         interpret=interpret,

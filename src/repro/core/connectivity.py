@@ -47,7 +47,9 @@ def paper_heterogeneous() -> ConnectivityModel:
     )
 
 
-def heterogeneous_profile(n: int, low: float = 0.1, high: float = 0.9, seed: int = 0) -> ConnectivityModel:
+def heterogeneous_profile(
+    n: int, low: float = 0.1, high: float = 0.9, seed: int = 0
+) -> ConnectivityModel:
     """A deliberately skewed profile in the paper's spirit: some clients with
     very low, some moderate, some very high connectivity."""
     rng = np.random.default_rng(seed)

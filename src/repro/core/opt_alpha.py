@@ -80,21 +80,27 @@ def initial_weights(p: np.ndarray, adj: np.ndarray) -> np.ndarray:
     """
     p = np.asarray(p, dtype=np.float64)
     m = topology.closed_mask(adj)  # [j, i]
-    n = p.shape[0]
-    A = np.zeros((n, n), dtype=np.float64)
-    deg_plus_1 = m.sum(axis=0)  # |N_i| + 1 per column i
-    for i in range(n):
-        sup = np.nonzero(m[:, i] & (p > 0))[0]
-        if sup.size == 0:
-            continue  # infeasible column: no relay can reach the PS
-        A[sup, i] = 1.0 / (deg_plus_1[i] * p[sup])
-        col = float(p[sup] @ A[sup, i])
-        if col > 0 and not np.isclose(col, 1.0):
-            A[sup, i] /= col
+    sup = m & (p > 0)[:, None]  # empty column ⇒ infeasible, left all-zero
+    denom = m.sum(axis=0)[None, :] * np.where(p > 0, p, 1.0)[:, None]
+    A = np.where(sup, 1.0 / denom, 0.0)
+    col = np.einsum("j,ji->i", p, A)
+    fix = (col > 0) & ~np.isclose(col, 1.0)
+    A *= np.where(fix, 1.0 / np.where(fix, col, 1.0), 1.0)[None, :]
     return A
 
 
-def warm_start_weights(p: np.ndarray, adj: np.ndarray, A_prev: np.ndarray) -> np.ndarray:
+# Fallback threshold for warm starts: a carried column is reused only when
+# its mass p @ col clears this *relative* fraction of the column's largest
+# carried entry (plus the absolute 1e-12 floor).  An absolute-only cutoff let
+# columns with tiny-but-positive mass — e.g. every surviving relay of origin
+# i is a near-departed client with p_j ≈ ε — be rescaled by ~1/mass into
+# enormous α entries, poisoning the Gauss–Seidel seed.
+WARM_START_RTOL = 1e-6
+
+
+def warm_start_weights(
+    p: np.ndarray, adj: np.ndarray, A_prev: np.ndarray
+) -> np.ndarray:
     """Project a previous epoch's relay matrix onto a new channel ``(p, adj)``.
 
     Used by the adaptive OPT-α scheduler (``repro.channels.scheduler``): after
@@ -103,7 +109,9 @@ def warm_start_weights(p: np.ndarray, adj: np.ndarray, A_prev: np.ndarray) -> np
     scratch.  Per column i: keep only entries on the new closed neighborhood
     with p_j > 0, rescale so Lemma 1 (Σ_j p_j α_ji = 1) holds under the new p,
     and fall back to the Alg. 3 initial weights for any column whose carried
-    mass vanished (e.g. every old relay of i dropped out of N_i ∪ {i}).
+    mass (nearly) vanished — every old relay of i dropped out of N_i ∪ {i},
+    or the survivors' uplinks are so weak that rescaling by 1/mass would blow
+    the column up (see :data:`WARM_START_RTOL`).
     """
     p = np.asarray(p, dtype=np.float64)
     adj = np.asarray(adj, dtype=bool)
@@ -114,7 +122,8 @@ def warm_start_weights(p: np.ndarray, adj: np.ndarray, A_prev: np.ndarray) -> np
         sup = m[:, i] & (p > 0)
         col = np.where(sup, A[:, i], 0.0)
         mass = float(p @ col)
-        if mass > 1e-12:
+        col_max = float(col.max(initial=0.0))
+        if mass > max(1e-12, WARM_START_RTOL * col_max):
             A[:, i] = col / mass
         else:
             if A_init is None:
@@ -315,6 +324,14 @@ def optimize_masked(
 
     The sweep loop visits only active columns, so a mostly-empty mask costs
     O(n_active) column solves per sweep, not O(n_max).
+
+    ``feasible_columns`` reports **False for every inactive column**: a
+    padded/departed slot has no constraint to satisfy, and reporting it True
+    (the historical behavior — the vector was initialized all-True and only
+    updated for active columns) made ``feasible_columns.all()`` and any
+    reduction over the padded dim read success off columns that were never
+    solved.  Mask with ``active & feasible_columns`` for "live and solvable",
+    ``active & ~feasible_columns`` for "live but cut off from the PS".
     """
     p = np.asarray(p, dtype=np.float64)
     adj = np.asarray(adj, dtype=bool)
@@ -334,7 +351,8 @@ def optimize_masked(
         A = np.where(m, np.asarray(A0, dtype=np.float64), 0.0)
     A[:, ~active] = 0.0
     A[~active, :] = 0.0
-    feasible = np.ones((n,), dtype=bool)
+    # Inactive columns are never solved — they must not read "feasible".
+    feasible = np.zeros((n,), dtype=bool)
     history = [variance_proxy(p_m, A)]
     bis_total = 0
     act_idx = np.nonzero(active)[0]
@@ -351,6 +369,199 @@ def optimize_masked(
             break
     return OptAlphaResult(
         A=A,
+        S_history=np.asarray(history),
+        feasible_columns=feasible,
+        sweeps=len(history) - 1,
+        bisection_iters_total=bis_total,
+    )
+
+
+# --------------------------------------------------------------------------
+# Neighborhood-blocked (sparse) OPT-α: everything O(E), nothing O(n²)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseOptAlphaResult:
+    """OPT-α solution on a :class:`~repro.core.topology.ClosedGraph`.
+
+    ``vals[k]`` is α at entry k of the (fixed) closed-neighborhood structure:
+    ``A[graph.rows[k], graph.cols[k]] = vals[k]``.  The structure covers the
+    *full* graph — entries whose row or column is inactive simply carry 0 —
+    so consecutive solves under per-round cohorts share one static edge
+    layout (no retraces downstream, no re-analysis of the graph).
+    """
+
+    graph: topology.ClosedGraph
+    vals: np.ndarray              # (nnz,) float64 α on the structure
+    S_history: np.ndarray
+    feasible_columns: np.ndarray  # bool (n,): False for inactive columns too
+    sweeps: int
+    bisection_iters_total: int
+
+    def todense(self) -> np.ndarray:
+        """Materialize the dense (n, n) matrix — small-n checks only."""
+        n = self.graph.n
+        A = np.zeros((n, n), dtype=np.float64)
+        A[self.graph.rows, self.graph.cols] = self.vals
+        return A
+
+    def edge_relay(self):
+        """The :class:`repro.core.relay.EdgeRelay` operand for the
+        ``segment`` aggregation backend (host numpy, f32/i32)."""
+        from repro.core import relay as relay_lib  # opt_alpha stays jax-free
+
+        return relay_lib.EdgeRelay(
+            rows=self.graph.rows.astype(np.int32),
+            cols=self.graph.cols.astype(np.int32),
+            vals=self.vals.astype(np.float32),
+        )
+
+
+def _initial_vals_sparse(
+    p_m: np.ndarray, graph: topology.ClosedGraph, entry_on: np.ndarray
+) -> np.ndarray:
+    """Alg. 3 line 1 on the CSC structure: the exact sparse counterpart of
+    ``initial_weights(p_m, adj_m)`` restricted to entries with both endpoints
+    active (``entry_on``).  ``p_m`` is already zeroed on inactive slots."""
+    rows, cols = graph.rows, graph.cols
+    n = graph.n
+    # |N_i ∪ {i}| in the masked graph = live entries per column
+    deg = np.bincount(cols[entry_on], minlength=n).astype(np.float64)
+    pj = p_m[rows]
+    sup = entry_on & (pj > 0)
+    vals = np.zeros(rows.size, dtype=np.float64)
+    vals[sup] = 1.0 / (deg[cols[sup]] * pj[sup])
+    mass = np.bincount(cols[sup], weights=pj[sup] * vals[sup], minlength=n)
+    fix = (mass > 0) & ~np.isclose(mass, 1.0)
+    scale = np.where(fix, 1.0 / np.where(fix, mass, 1.0), 1.0)
+    vals *= scale[cols]
+    return vals
+
+
+def warm_start_vals(
+    p: np.ndarray,
+    graph: topology.ClosedGraph,
+    vals_prev: np.ndarray,
+    active: np.ndarray | None = None,
+) -> np.ndarray:
+    """:func:`warm_start_weights` on the CSC structure, vectorized over
+    columns.  Projects a previous cohort's α onto the new ``(p, active)``:
+    entries off the live support are dropped, surviving columns are rescaled
+    to restore Lemma 1, and columns whose carried mass fails the
+    :data:`WARM_START_RTOL` relative test fall back to the Alg. 3 initial
+    values — per-round cohort sampling hits that fallback constantly, which
+    is exactly the regime the relative cutoff protects.
+    """
+    p = np.asarray(p, dtype=np.float64)
+    rows, cols = graph.rows, graph.cols
+    n = graph.n
+    if active is None:
+        entry_on = np.ones(rows.size, dtype=bool)
+        p_m = p
+    else:
+        active = np.asarray(active, dtype=bool)
+        entry_on = active[rows] & active[cols]
+        p_m = np.where(active, p, 0.0)
+    pj = p_m[rows]
+    keep = entry_on & (pj > 0)
+    kept = np.where(keep, np.asarray(vals_prev, dtype=np.float64), 0.0)
+    mass = np.bincount(cols, weights=pj * kept, minlength=n)
+    col_max = np.zeros(n, dtype=np.float64)
+    np.maximum.at(col_max, cols, kept)
+    good = mass > np.maximum(1e-12, WARM_START_RTOL * col_max)
+    init = _initial_vals_sparse(p_m, graph, entry_on)
+    scale = np.where(good, 1.0 / np.where(good, mass, 1.0), 1.0)
+    return np.where(good[cols], kept * scale[cols], init)
+
+
+def optimize_sparse(
+    p: np.ndarray,
+    adj: np.ndarray | None = None,
+    active: np.ndarray | None = None,
+    *,
+    graph: topology.ClosedGraph | None = None,
+    sweeps: int = 50,
+    tol: float = 1e-10,
+    vals0: np.ndarray | None = None,
+    method: str = "bisect",
+) -> SparseOptAlphaResult:
+    """Neighborhood-blocked OPT-α: Gauss–Seidel where each column solve
+    touches only the closed neighborhood N_i ∪ {i}.
+
+    Equivalent to :func:`optimize_masked` (same initial point, same column
+    visit order, same solver, same stall test) but with per-sweep cost
+    O(n_active · max_deg) instead of O(n_active · n²): β comes from an
+    incrementally-maintained row-mass vector rather than a fresh
+    ``A.sum(axis=1)`` per column.  The active block of ``todense()`` matches
+    the dense solve to fp-accumulation noise (≪ 1e-8, tested).
+
+    Pass ``graph`` (from :func:`topology.closed_csc`) to amortize structure
+    extraction across solves on the same adjacency — the per-round path of
+    cohort sampling; ``adj`` is then not needed.  ``vals0`` seeds the sweep
+    (see :func:`warm_start_vals`).
+    """
+    if graph is None:
+        if adj is None:
+            raise ValueError("optimize_sparse needs either adj or graph")
+        graph = topology.closed_csc(np.asarray(adj, dtype=bool))
+    p = np.asarray(p, dtype=np.float64)
+    n = graph.n
+    if p.shape != (n,):
+        raise ValueError(f"p shape {p.shape} != ({n},)")
+    rows, cols, indptr = graph.rows, graph.cols, graph.indptr
+    if active is None:
+        active = np.ones(n, dtype=bool)
+    else:
+        active = np.asarray(active, dtype=bool)
+        if active.shape != (n,):
+            raise ValueError(f"active mask shape {active.shape} != ({n},)")
+    entry_on = active[rows] & active[cols]
+    p_m = np.where(active, p, 0.0)
+    if vals0 is None:
+        vals = _initial_vals_sparse(p_m, graph, entry_on)
+    else:
+        vals = np.where(entry_on, np.asarray(vals0, dtype=np.float64), 0.0)
+    w_var = p_m * (1.0 - p_m)
+    row_mass = np.bincount(rows, weights=vals, minlength=n)
+    feasible = np.zeros((n,), dtype=bool)
+    history = [float(np.sum(w_var * row_mass**2))]
+    bis_total = 0
+    act_idx = np.nonzero(active)[0]
+    solver = _COLUMN_SOLVERS.get(method)
+    if solver is None:
+        known = ", ".join(sorted(_COLUMN_SOLVERS))
+        raise ValueError(f"unknown column solver {method!r} (known: {known})")
+    for _ in range(sweeps):
+        for i in act_idx:
+            lo, hi = indptr[i], indptr[i + 1]
+            r = rows[lo:hi]
+            on = entry_on[lo:hi]
+            old = vals[lo:hi]
+            pr = p_m[r]
+            new = np.zeros(r.size, dtype=np.float64)
+            ones = on & (pr >= 1.0)
+            if ones.any():
+                new[ones] = 1.0 / ones.sum()
+                feasible[i] = True
+            else:
+                sup = on & (pr > 0.0)
+                if not sup.any():
+                    feasible[i] = False
+                else:
+                    beta = row_mass[r[sup]] - old[sup]
+                    alpha, iters = solver(pr[sup], beta)
+                    new[sup] = alpha
+                    feasible[i] = True
+                    bis_total += iters
+            row_mass[r] += new - old
+            vals[lo:hi] = new
+        history.append(float(np.sum(w_var * row_mass**2)))
+        if abs(history[-2] - history[-1]) <= tol * max(1.0, history[-2]):
+            break
+    return SparseOptAlphaResult(
+        graph=graph,
+        vals=vals,
         S_history=np.asarray(history),
         feasible_columns=feasible,
         sweeps=len(history) - 1,

@@ -20,9 +20,81 @@ constant folded into the compiled step.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class EdgeRelay(NamedTuple):
+    """Edge-list relay operator: entry k stands for A[rows[k], cols[k]] =
+    vals[k], everything off the list identically zero.
+
+    The sparse counterpart of the dense (n, n) relay matrix, produced by
+    ``opt_alpha.SparseOptAlphaResult.edge_relay()`` and consumed by the
+    ``relay_backend="segment"`` aggregation path — relay∘aggregate cost
+    scales with the edge count E, not n².  A NamedTuple of three equal-length
+    1-D arrays, so it is automatically a JAX pytree and passes through jit
+    boundaries as three traced leaves; keep the edge count static across
+    rounds (carry the full graph's closed structure and zero the vals of
+    inactive entries) or every cohort change would retrace.
+
+    Orientation matches the dense convention: ``rows`` indexes the relay j,
+    ``cols`` the origin i whose update it forwards.
+    """
+
+    rows: jnp.ndarray  # (E,) int32 relay index j
+    cols: jnp.ndarray  # (E,) int32 origin index i
+    vals: jnp.ndarray  # (E,) float32 α_ji
+
+    def todense(self, n: int) -> jnp.ndarray:
+        """Scatter into the dense (n, n) matrix (small-n parity checks and
+        the dense backends; never on the segment hot path)."""
+        return (
+            jnp.zeros((n, n), dtype=jnp.float32)
+            .at[self.rows, self.cols]
+            .add(self.vals.astype(jnp.float32))
+        )
+
+
+def edge_relay_from_dense(A, *, tol: float = 0.0) -> EdgeRelay:
+    """Host-side helper: build an EdgeRelay from a dense matrix, keeping
+    entries with |A| > tol (tol=0 keeps explicit structural zeros out)."""
+    A = np.asarray(A)
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"relay matrix must be square, got {A.shape}")
+    rows, cols = np.nonzero(np.abs(A) > tol)
+    return EdgeRelay(
+        rows=np.asarray(rows, dtype=np.int32),
+        cols=np.asarray(cols, dtype=np.int32),
+        vals=np.asarray(A[rows, cols], dtype=np.float32),
+    )
+
+
+def as_relay_operand(A, *, n: int, backend: str = "einsum"):
+    """Normalize a relay operand for an aggregation backend.
+
+    Dense inputs go to a float32 (n, n) array; an :class:`EdgeRelay` stays
+    an EdgeRelay (int32/float32 leaves) for ``backend="segment"`` and is
+    densified otherwise — the dense backends (einsum / pallas kernels) have
+    no sparse lowering, and the densify keeps small-n parity checks able to
+    run any backend against a sparse policy's output.  The one refusal,
+    dense matrix + segment backend, lives in the aggregation layer where the
+    error can point at the policy knob.
+    """
+    if A is None:
+        return None
+    if isinstance(A, EdgeRelay):
+        er = EdgeRelay(
+            rows=jnp.asarray(A.rows, dtype=jnp.int32),
+            cols=jnp.asarray(A.cols, dtype=jnp.int32),
+            vals=jnp.asarray(A.vals, dtype=jnp.float32),
+        )
+        if backend == "segment":
+            return er
+        return er.todense(n)
+    return jnp.asarray(A, jnp.float32)
 
 
 def _check_square(A) -> jnp.ndarray:
@@ -58,18 +130,43 @@ def mask_relay_matrix(A, active):
     """Restrict A to the active block of a padded client dimension:
     zero every row and column of an inactive client (churn semantics — a
     departed client neither relays nor is relayed).  ``active`` is a traced
-    (n,) 0/1 vector, so membership can change per round without retracing."""
-    A = _check_square(A)
+    (n,) 0/1 vector, so membership can change per round without retracing.
+    On an :class:`EdgeRelay` the same mask folds into the edge values —
+    any entry touching an inactive endpoint goes exactly to zero."""
     active = jnp.asarray(active, dtype=jnp.float32)
+    if isinstance(A, EdgeRelay):
+        vals = A.vals.astype(jnp.float32) * active[A.rows] * active[A.cols]
+        return EdgeRelay(rows=A.rows, cols=A.cols, vals=vals)
+    A = _check_square(A)
     return active[:, None] * A.astype(jnp.float32) * active[None, :]
 
 
 def fused_coefficients(A, tau) -> jnp.ndarray:
     """c_o = Σ_r τ_r α_ro — the per-origin coefficient of the fused
-    relay+aggregate path (c = τᵀ A)."""
-    A = _check_square(A)
+    relay+aggregate path (c = τᵀ A).  For an :class:`EdgeRelay` the
+    contraction is a segment-sum over edges grouped by origin column:
+    O(E) instead of O(n²)."""
     tau = jnp.asarray(tau, dtype=jnp.float32)
+    if isinstance(A, EdgeRelay):
+        return jax.ops.segment_sum(
+            tau[A.rows] * A.vals.astype(jnp.float32),
+            A.cols,
+            num_segments=tau.shape[0],
+        )
+    A = _check_square(A)
     return tau @ A.astype(jnp.float32)
+
+
+def segment_mix(A: EdgeRelay, buf) -> jnp.ndarray:
+    """Δ̃ = A·Δ on the flat (n, D) buffer via per-edge gather + segment-sum
+    over the relay rows — the paper-faithful (unfused) consensus at O(E·D).
+    The E×D gathered intermediate makes the fused coefficient path the hot
+    choice at scale; this one exists for parity and the unfused strategies."""
+    if not isinstance(A, EdgeRelay):
+        raise TypeError("segment_mix needs an EdgeRelay operand")
+    buf = jnp.asarray(buf, jnp.float32)
+    contrib = A.vals.astype(jnp.float32)[:, None] * buf[A.cols]
+    return jax.ops.segment_sum(contrib, A.rows, num_segments=buf.shape[0])
 
 
 def fused_aggregate(A, tau, stacked_updates, *, w: float):

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import relay as relay_lib
 from repro.fl.simulator import FLSimulator
 from repro.obs import NULL_TRACER
 
@@ -210,7 +211,13 @@ class EpochScanEngine:
         masked.  Returns ``(params, server_state, metrics)`` with every
         metric stacked over the R real rounds (padding trimmed).
         """
-        A_seg = self.sim.A if A is None else jnp.asarray(A, jnp.float32)
+        A_seg = (
+            self.sim.A
+            if A is None
+            else relay_lib.as_relay_operand(
+                A, n=self.sim.n, backend=self.sim.relay_backend
+            )
+        )
         if A_seg is None and self.sim.strategy in ("colrel", "colrel_fused"):
             raise ValueError("colrel strategies need a relay matrix A")
         active_seg = None if active is None else jnp.asarray(active, jnp.float32)
@@ -485,7 +492,9 @@ class PipelinedScanEngine:
                     A_seg = (
                         self.sim.A
                         if item.A is None
-                        else jnp.asarray(item.A, jnp.float32)
+                        else relay_lib.as_relay_operand(
+                            item.A, n=self.sim.n, backend=self.sim.relay_backend
+                        )
                     )
                     if A_seg is None and self.sim.strategy in (
                         "colrel",

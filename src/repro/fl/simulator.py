@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation
+from repro.core import relay as relay_lib
 from repro.core.aggregation import ServerOpt
 from repro.optim.sgd import ClientOpt
 from repro.utils import stacked_ravel, tree_sub, tree_unravel
@@ -84,7 +85,7 @@ class FLSimulator:
         self.p = (
             jnp.asarray(p, jnp.float32) if p is not None else jnp.ones((n_clients,))
         )
-        self.A = jnp.asarray(A, jnp.float32) if A is not None else None
+        self.A = relay_lib.as_relay_operand(A, n=n_clients, backend=relay_backend)
         self.aggregator = aggregation.make_aggregator(
             strategy,
             n=n_clients,
@@ -153,7 +154,11 @@ class FLSimulator:
         class docstring) — also by value, so membership changes don't retrace.
         """
         tau = self.sample_tau(key, p)
-        A_round = self.A if A is None else jnp.asarray(A, jnp.float32)
+        A_round = (
+            self.A
+            if A is None
+            else relay_lib.as_relay_operand(A, n=self.n, backend=self.relay_backend)
+        )
         active_round = None if active is None else jnp.asarray(active, jnp.float32)
         return self._round(params, server_state, batch, tau, A_round, lr, active_round)
 

@@ -20,7 +20,10 @@ from repro.kernels import relay_mix as _k
 #   pallas        kernel mix Δ̃ = A·Δ; the PS reduction stays an einsum
 #   pallas_fused  kernel u = (w·τᵀA)·Δ — relay∘aggregate in one pass, the
 #                 n×-less-write-traffic hot path
-RELAY_BACKENDS = ("einsum", "pallas", "pallas_fused")
+#   segment       sparse edge-list path (core.relay.EdgeRelay +
+#                 jax.ops.segment_sum): relay∘aggregate cost scales with the
+#                 edge count E, not n² — the n ≫ 10³ cohort-sampling regime
+RELAY_BACKENDS = ("einsum", "pallas", "pallas_fused", "segment")
 
 
 def validate_backend(backend: str) -> str:
@@ -38,9 +41,20 @@ def validate_sharded_backend(backend: str, *, shard: str, exchange: str = "gathe
       contraction (k−1 ppermutes + psum), so a kernel backend would be
       silently ignored — einsum only, by refusal rather than surprise.
     * ``exchange="gather"``: the gathered (n, D) buffer is replicated
-      per-device, so any backend runs unchanged inside shard_map.
+      per-device, so any dense backend runs unchanged inside shard_map.
+    * ``segment`` is refused under every sharding mode: the sharded step
+      builders take a dense (n, n) operand (replicated or GSPMD-partitioned),
+      and an EdgeRelay's data-dependent gather/scatter has no sharding rule
+      worth writing before the hierarchical-relaying follow-on.
     """
     validate_backend(backend)
+    if backend == "segment":
+        raise ValueError(
+            "relay_backend='segment' is single-host only — the sharded "
+            "round-step builders need a dense relay operand; use "
+            "relay_backend='einsum' (or a pallas backend with "
+            "exchange='gather')"
+        )
     if shard == "d" and backend != "einsum":
         raise ValueError(
             "D-axis sharding partitions the relay contraction via GSPMD; "
@@ -62,9 +76,10 @@ def _default_interpret() -> bool:
 
 def _mask_A(A, active):
     """Restrict A to the active block of a padded client dim (client churn);
-    the mask folds into the kernel operand, the kernel itself is unchanged."""
+    the mask folds into the operand (dense matrix or EdgeRelay edge values),
+    the kernel itself is unchanged."""
     if active is None:
-        return jnp.asarray(A)
+        return A if isinstance(A, relay_lib.EdgeRelay) else jnp.asarray(A)
     return relay_lib.mask_relay_matrix(A, active)
 
 
@@ -148,10 +163,23 @@ def mix_flat(
     interpret=None,
 ):
     """Δ̃ = A·Δ on the contiguous (n, D) buffer.  ``backend`` picks the
-    einsum oracle or the Pallas kernel; ``active`` is the churn mask (zeroes
-    inactive rows/cols of A before dispatch, on either backend)."""
+    einsum oracle, the Pallas kernel, or the sparse segment-sum path
+    (``backend="segment"``, which needs an :class:`~repro.core.relay.EdgeRelay`
+    operand); ``active`` is the churn mask (zeroes inactive rows/cols of A —
+    or the touching edge values — before dispatch, on every backend)."""
     validate_backend(backend)
     A = _mask_A(A, active)
+    if backend == "segment":
+        if not isinstance(A, relay_lib.EdgeRelay):
+            raise ValueError(
+                "relay_backend='segment' needs an EdgeRelay operand "
+                "(a sparse OPT-α policy); got a dense relay matrix — "
+                "use relay_backend='einsum' or convert via "
+                "relay.edge_relay_from_dense"
+            )
+        return relay_lib.segment_mix(A, buf)
+    if isinstance(A, relay_lib.EdgeRelay):
+        A = A.todense(buf.shape[0])
     if backend == "einsum":
         return _ref.relay_mix_2d(A, buf)
     interpret = _default_interpret() if interpret is None else interpret
@@ -173,10 +201,13 @@ def reduce_flat(
 ):
     """u = coeffs·Δ on the (n, D) buffer → (D,).  ``coeffs`` already carries
     every weighting (w·τᵀA for the fused colrel path, w·τ for the blind
-    sum, ...), so churn masking happens in the caller's coefficients."""
+    sum, ...), so churn masking happens in the caller's coefficients.
+    ``backend="segment"`` lands here with an already-dense (n,) coefficient
+    vector — the sparsity was spent computing it — so it runs the einsum
+    reduction."""
     validate_backend(backend)
     coeffs = jnp.asarray(coeffs, jnp.float32)
-    if backend == "einsum":
+    if backend in ("einsum", "segment"):
         return _ref.fused_aggregate_2d(coeffs, buf)
     interpret = _default_interpret() if interpret is None else interpret
     return _k.fused_aggregate_2d(

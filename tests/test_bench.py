@@ -207,3 +207,56 @@ def test_cli_list_and_tiny_run(tmp_path, capsys):
     assert run_cli.main(["--list"]) == 0
     out = capsys.readouterr().out
     assert "bench_smoke" in out and "fig5_500" in out
+
+
+def test_sample_sweep_scenarios_registered():
+    for name, n in [("sample_sweep_smoke", 256), ("sample_sweep_n1e3", 1_000),
+                    ("sample_sweep_n1e4", 10_000)]:
+        spec = scenarios.get_scenario(name)
+        assert spec.n_clients == n
+        assert spec.relay_backend == "segment" and spec.policy == "sparse"
+        assert spec.topology == "geometric" and spec.sampling == "fixed_k"
+    smoke = scenarios.get_scenario("sample_sweep_smoke")
+    assert smoke.check_backend == "einsum"  # parity gate built in
+
+
+def test_spec_validation_for_sampling_and_segment():
+    base = scenarios.get_scenario("sample_sweep_smoke")
+    with pytest.raises(ValueError, match="sim path only"):
+        dataclasses.replace(base, step="mesh")  # sampling check fires first
+    with pytest.raises(ValueError, match="single-host"):
+        dataclasses.replace(base, sampling="none", step="mesh")
+    with pytest.raises(ValueError, match="sparse"):
+        dataclasses.replace(base, policy="adaptive")
+    with pytest.raises(ValueError, match="sampling"):
+        dataclasses.replace(base, sampling="importance")
+    with pytest.raises(ValueError, match="sample_k"):
+        dataclasses.replace(base, sample_k=0)
+    with pytest.raises(ValueError, match="geo_degree"):
+        dataclasses.replace(base, geo_degree=0.0)
+    # sampling requires the sim step path (mask handoff lives there)
+    dense = scenarios.get_scenario("bench_smoke")
+    with pytest.raises(ValueError, match="sim"):
+        dataclasses.replace(dense, sampling="uniform", sample_rate=0.5,
+                            step="mesh")
+
+
+def test_sample_sweep_smoke_bundle_builds_sparse_stack():
+    from repro import channels
+    from repro.core import relay as relay_lib
+
+    spec = dataclasses.replace(
+        scenarios.get_scenario("sample_sweep_smoke"),
+        n_clients=32, n_train=64, rounds=3, sample_k=8,
+    )
+    bundle = scenarios.build(spec)
+    adj = bundle.base_adjacency()
+    assert adj.shape == (32, 32)
+    assert bundle.base_adjacency() is adj  # memoized, built once
+    sched = bundle.make_schedule()
+    pol = bundle.make_policy()
+    assert isinstance(pol, channels.SparseOptAlpha)
+    states = list(sched.rounds(3))
+    assert all(s.active is not None and s.n_active <= 8 for s in states)
+    A = pol.relay_matrix(states[0])
+    assert isinstance(A, relay_lib.EdgeRelay)

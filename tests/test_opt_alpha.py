@@ -141,3 +141,89 @@ def test_unknown_column_solver_rejected_fast():
     p, adj = _setting()
     with pytest.raises(ValueError, match="unknown column solver"):
         opt_alpha.optimize(p, adj, sweeps=1, method="exat")
+
+
+def test_warm_start_near_departed_relay_falls_back():
+    """Regression (ISSUE 9 satellite): a column whose only surviving relays
+    are near-departed clients (p_j ≈ ε) used to clear the absolute 1e-12
+    mass floor and get rescaled by ~1/mass into enormous α entries.  The
+    relative rule must instead fall back to the Alg. 3 initial weights."""
+    n = 4
+    adj = topology.fully_connected(n)
+    p_old = np.array([0.5, 0.6, 0.7, 0.8])
+    A_prev = opt_alpha.optimize(p_old, adj, sweeps=40).A
+    # Client 0's relays all but vanish: every p_j carrying column 0's mass
+    # collapses to 1e-9 except client 0 itself, whose A_prev entry we zero.
+    p_new = np.array([0.5, 1e-9, 1e-9, 1e-9])
+    A_mod = A_prev.copy()
+    A_mod[0, 3] = 0.0  # column 3's carried mass now rides only on p ≈ 1e-9
+    A = opt_alpha.warm_start_weights(p_new, adj, A_mod)
+    A_init = opt_alpha.initial_weights(p_new, adj)
+    # The carried mass (≈1e-9) clears the old absolute 1e-12 floor but not
+    # the relative threshold (rtol · col_max ≈ 4e-7): column 3 must fall
+    # back to the init column, not the 1/mass rescale of the carried one —
+    # the rescale strands the healthy client 0 at weight zero.
+    np.testing.assert_allclose(A[:, 3], A_init[:, 3])
+    assert A[0, 3] > 0  # fallback re-engages the healthy relay
+    sup = p_new > 0
+    col = np.where(sup, A_mod[:, 3], 0.0)
+    rescaled = col / float(p_new @ col)
+    assert not np.allclose(A[:, 3], rescaled)
+    # ... and every column still satisfies Lemma 1.
+    assert np.abs(opt_alpha.unbiasedness_residual(p_new, A)).max() < 1e-9
+
+
+def test_warm_start_healthy_columns_are_rescaled_not_reset():
+    p_old = np.array([0.3, 0.5, 0.7, 0.9])
+    adj = topology.ring(4, 1)
+    A_prev = opt_alpha.optimize(p_old, adj, sweeps=40).A
+    p_new = p_old * np.array([1.1, 0.9, 1.05, 0.95])
+    A = opt_alpha.warm_start_weights(p_new, adj, A_prev)
+    A_init = opt_alpha.initial_weights(p_new, adj)
+    assert np.abs(opt_alpha.unbiasedness_residual(p_new, A)).max() < 1e-9
+    # structure carried over from A_prev, not replaced by the init
+    assert not np.allclose(A, A_init)
+    np.testing.assert_allclose(A > 0, A_prev > 0)
+
+
+def test_optimize_masked_inactive_columns_report_infeasible():
+    """Regression (ISSUE 9 satellite): ``feasible_columns`` was initialized
+    all-True, so padded/departed columns that were never solved read as
+    feasible and ``feasible_columns.all()`` lied under churn."""
+    rng = np.random.default_rng(2)
+    n = 10
+    p = rng.uniform(0.2, 0.9, n)
+    adj = topology.ring(n, 2)
+    active = np.ones(n, dtype=bool)
+    active[[2, 5, 6]] = False
+    res = opt_alpha.optimize_masked(p, adj, active, sweeps=30)
+    assert not res.feasible_columns[~active].any()
+    assert res.feasible_columns[active].all()
+    assert not res.feasible_columns.all()  # the historical lie
+    # all-inactive: nothing is feasible, nothing blows up
+    res0 = opt_alpha.optimize_masked(p, adj, np.zeros(n, dtype=bool), sweeps=5)
+    assert not res0.feasible_columns.any()
+    assert np.all(res0.A == 0.0)
+
+
+def test_initial_weights_vectorized_matches_loop_reference():
+    """The einsum/broadcast ``initial_weights`` equals the literal Alg. 3
+    double loop (with the documented p=0 renormalization) on random graphs."""
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        n = int(rng.integers(3, 14))
+        p = rng.uniform(0.0, 1.0, n)
+        p[rng.random(n) < 0.2] = 0.0  # hard-disconnected clients
+        adj = topology.erdos_renyi(n, 0.4, seed=int(rng.integers(1 << 30)))
+        m = topology.closed_mask(adj)
+        ref = np.zeros((n, n))
+        for i in range(n):
+            deg = int(m[:, i].sum())
+            for j in range(n):
+                if m[j, i] and p[j] > 0:
+                    ref[j, i] = 1.0 / (deg * p[j])
+            mass = float(p @ ref[:, i])
+            if mass > 0 and not np.isclose(mass, 1.0):
+                ref[:, i] /= mass
+        got = opt_alpha.initial_weights(p, adj)
+        np.testing.assert_allclose(got, ref, atol=1e-12)

@@ -1,0 +1,302 @@
+"""Cohort sampling (ISSUE 9): CohortSampler strategies, composition with
+churn and correlated shadowing, and the end-to-end contracts that make
+per-round cohorts safe — sampled-mask unbiasedness of the aggregate,
+trace_count ≤ 2 across cohort changes, and segment-vs-einsum parity under
+churn.  Plus the schedule's adjacency-snapshot reuse that makes n ≫ 10³
+emission O(1) when the graph is static.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.core import aggregation, opt_alpha, topology
+from repro.fl.simulator import FLSimulator
+from repro.optim.sgd import ClientOpt
+
+# ------------------------------------------------------------- strategies
+
+
+def test_uniform_strategy_rate_and_bounds():
+    s = channels.CohortSampler(64, strategy="uniform", rate=0.25, seed=0)
+    sizes = []
+    for _ in range(300):
+        a = s.step()
+        assert a.shape == (64,) and a.any()
+        sizes.append(a.sum())
+    assert np.mean(sizes) == pytest.approx(64 * 0.25, rel=0.15)
+
+
+def test_fixed_k_strategy_exact_cohort_size():
+    s = channels.CohortSampler(40, strategy="fixed_k", k=7, seed=1)
+    seen = set()
+    for _ in range(50):
+        a = s.step()
+        assert a.sum() == 7
+        seen.add(a.tobytes())
+    assert len(seen) > 10  # cohorts genuinely vary
+
+
+def test_fixed_k_clamps_to_member_count():
+    base = channels.StaticMembership(np.arange(10) < 3)
+    s = channels.CohortSampler(10, strategy="fixed_k", k=8, base=base, seed=2)
+    for _ in range(5):
+        a = s.step()
+        assert a.sum() == 3 and a[:3].all()
+
+
+def test_expander_strategy_is_deterministic_and_mixes():
+    mk = lambda: channels.CohortSampler(32, strategy="expander", k=4, seed=9)
+    s1, s2 = mk(), mk()
+    masks = []
+    for _ in range(12):
+        a1, a2 = s1.step(), s2.step()
+        np.testing.assert_array_equal(a1, a2)  # no RNG: reproducible
+        assert a1.sum() <= 4 and a1.any()
+        masks.append(a1)
+    # over a stride cycle the cohorts cover a spread of the index space
+    assert np.vstack(masks).any(axis=0).sum() > 16
+
+
+def test_sampler_never_emits_empty_cohort():
+    # rate low enough that raw Bernoulli draws frequently miss everyone
+    s = channels.CohortSampler(6, strategy="uniform", rate=0.02, seed=3)
+    for _ in range(100):
+        assert s.step().any()
+
+
+def test_resample_every_holds_cohort_between_redraws():
+    s = channels.CohortSampler(20, strategy="fixed_k", k=5, resample_every=3,
+                               seed=4)
+    masks = [s.value().copy()] + [s.step().copy() for _ in range(6)]
+    np.testing.assert_array_equal(masks[1], masks[2])
+    assert not np.array_equal(masks[2], masks[3])  # step 3: redraw
+    np.testing.assert_array_equal(masks[4], masks[5])
+
+
+def test_sampler_rejects_bad_arguments():
+    with pytest.raises(ValueError, match="strategy"):
+        channels.CohortSampler(8, strategy="stratified")
+    with pytest.raises(ValueError, match="rate"):
+        channels.CohortSampler(8, strategy="uniform")
+    with pytest.raises(ValueError, match="k <= n_max"):
+        channels.CohortSampler(8, strategy="fixed_k", k=9)
+
+
+# -------------------------------------------------- composition with churn
+
+
+def test_cohort_is_intersection_of_membership_and_sample():
+    base = channels.RotatingCohorts(12, n_cohorts=3, hold=1)
+    s = channels.CohortSampler(12, strategy="fixed_k", k=12, base=base, seed=5)
+    for _ in range(9):
+        a = s.step()
+        members = base.value()
+        assert not a[~members].any()  # sampled ∧ ¬member never active
+        assert a.sum() <= members.sum()
+
+
+def test_churn_schedule_with_sampler_epochs_track_cohorts():
+    n = 16
+    sched = channels.ChurnSchedule(
+        membership=channels.CohortSampler(
+            n, strategy="fixed_k", k=4,
+            base=channels.RotatingCohorts(n, n_cohorts=4, hold=2), seed=6,
+        ),
+        adj=topology.ring(n, 2),
+        p=np.full(n, 0.6),
+    )
+    states = list(sched.rounds(10))
+    # per-round cohorts: every round opens a new epoch (static adj and p,
+    # so the active mask alone drives the epoch id)
+    assert [s.epoch_id for s in states] == list(range(10))
+    for s in states:
+        assert s.active is not None and 1 <= s.n_active <= 4
+
+
+def test_sampler_composes_with_correlated_shadowing():
+    """The jointly-sampled (adj, p) stream from a shadowing field composes
+    with cohort sampling: masks stay consistent and every emitted state is a
+    valid channel."""
+    n = 12
+    field = channels.ShadowingField(
+        channels.circle_positions(n), corr_length=0.4, rho=0.9, sigma=1.0,
+        seed=7,
+    )
+    link = channels.ShadowedLinkProcess(
+        topology.ring(n, 2), field, threshold=1.0
+    )
+    sched = channels.ChurnSchedule(
+        membership=channels.CohortSampler(n, strategy="fixed_k", k=5, seed=8),
+        link_process=link,
+        p=np.full(n, 0.7),
+        adj_every=2,
+    )
+    prev = None
+    for s in sched.rounds(12):
+        topology._validate(s.adj.copy())
+        assert s.active.sum() == 5
+        if prev is not None:
+            assert (s.epoch_id == prev.epoch_id) == (s.key() == prev.key())
+        prev = s
+
+
+# --------------------------------------------- unbiasedness of the aggregate
+
+
+def test_fixed_k_aggregate_is_unbiased_over_cohorts():
+    """E over cohorts of the n/k-corrected blind sum recovers the full-
+    membership mean: inclusion probability is k/m for every member, so the
+    cohort-masked no_dropout increment, scaled by m_active/k... — here we
+    check the *measured* inclusion frequency and the masked-mean identity
+    directly, which is what the renormalized weight 1/n_active relies on."""
+    n, k, rounds = 24, 6, 4000
+    s = channels.CohortSampler(n, strategy="fixed_k", k=k, seed=10)
+    counts = np.zeros(n)
+    upd = jnp.asarray(np.random.default_rng(11).standard_normal((n, 3)),
+                      jnp.float32)
+    agg = aggregation.make_aggregator("no_dropout", n=n)
+    acc = np.zeros(3)
+    for _ in range(rounds):
+        a = s.step()
+        counts += a
+        inc = agg.fn(jnp.ones(n), upd, None, jnp.asarray(a, jnp.float32))
+        acc += np.asarray(inc)
+    # every client included with frequency k/n
+    np.testing.assert_allclose(counts / rounds, k / n, atol=0.02)
+    # the average cohort-mean converges to the full mean
+    np.testing.assert_allclose(
+        acc / rounds, np.asarray(upd).mean(axis=0), atol=0.05
+    )
+
+
+# ------------------------------------------------- trace-count + parity e2e
+
+
+def _quad_setting(n, dim=4, T=2, seed=0):
+    def loss_fn(params, batch):
+        diff = params["x"][None, :] - batch["c"]
+        return 0.5 * jnp.mean(jnp.sum(diff**2, axis=-1))
+
+    rng = np.random.default_rng(seed)
+    batch = {"c": jnp.asarray(rng.standard_normal((n, T, 4, dim)), jnp.float32)}
+    params = {"x": jnp.ones((dim,))}
+    return loss_fn, batch, params
+
+
+def test_trace_count_stays_one_across_cohort_changes():
+    """Per-round cohorts + per-round sparse re-solves: the compiled step
+    must not retrace — EdgeRelay structure and mask shapes are static."""
+    n, T = 18, 2
+    loss_fn, batch, params = _quad_setting(n, T=T)
+    rng = np.random.default_rng(12)
+    sched = channels.ChurnSchedule(
+        membership=channels.CohortSampler(
+            n, strategy="fixed_k", k=6,
+            base=channels.RotatingCohorts(n, n_cohorts=3, hold=2), seed=13,
+        ),
+        adj=topology.random_geometric(n, 0.5, seed=14),
+        p=rng.uniform(0.3, 0.9, n).astype(np.float32),
+    )
+    pol = channels.SparseOptAlpha(sweeps=30, warm_sweeps=10)
+    sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                      local_steps=T, relay_backend="segment",
+                      client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+    ss = sim.init_server_state(params)
+    key = jax.random.key(0)
+    cohorts = set()
+    for ch in sched.rounds(8):
+        cohorts.add(ch.active.tobytes())
+        key, sub = jax.random.split(key)
+        params, ss, m = sim.run_round(sub, params, ss, batch, 0.1,
+                                      A=pol.relay_matrix(ch), p=ch.p,
+                                      active=ch.active)
+        assert np.isfinite(float(m["loss"]))
+    assert len(cohorts) > 1
+    assert sim.trace_count == 1
+    assert pol.stats.solves == len(cohorts)
+
+
+def test_segment_vs_einsum_trajectory_parity_under_churn():
+    """The same cohort-sampled schedule driven through both backends lands
+    on (numerically) the same model: the SparseOptAlpha EdgeRelays feed the
+    segment path, their densified twins feed the einsum path."""
+    n, T = 14, 2
+    loss_fn, batch, params0 = _quad_setting(n, T=T, seed=15)
+    rng = np.random.default_rng(16)
+    p = rng.uniform(0.2, 0.9, n).astype(np.float32)
+    adj = topology.random_geometric(n, 0.55, seed=17)
+
+    def run(backend):
+        sched = channels.ChurnSchedule(
+            membership=channels.CohortSampler(n, strategy="fixed_k", k=5,
+                                              seed=18),
+            adj=adj, p=p,
+        )
+        pol = channels.SparseOptAlpha(sweeps=60, warm_sweeps=20)
+        sim = FLSimulator(loss_fn, n_clients=n, strategy="colrel_fused",
+                          local_steps=T, relay_backend=backend,
+                          client_opt=ClientOpt(kind="sgd", weight_decay=0.0))
+        params, ss = params0, sim.init_server_state(params0)
+        key = jax.random.key(1)
+        for ch in sched.rounds(6):
+            key, sub = jax.random.split(key)
+            A = pol.relay_matrix(ch)
+            params, ss, _ = sim.run_round(sub, params, ss, batch, 0.1,
+                                          A=A, p=ch.p, active=ch.active)
+        return np.asarray(params["x"])
+
+    np.testing.assert_allclose(run("segment"), run("einsum"),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_policy_caches_and_warm_starts_across_cohorts():
+    n = 16
+    rng = np.random.default_rng(19)
+    p = rng.uniform(0.2, 0.9, n).astype(np.float32)
+    adj = topology.ring(n, 2)
+    m1 = np.arange(n) < 8
+    m2 = np.arange(n) >= 8
+    pol = channels.SparseOptAlpha(sweeps=40, warm_sweeps=10)
+    A1 = pol.relay_matrix(channels.ChannelState(0, 0, adj, p, m1))
+    A2 = pol.relay_matrix(channels.ChannelState(1, 1, adj, p, m2))
+    A1_again = pol.relay_matrix(channels.ChannelState(2, 0, adj, p, m1))
+    assert pol.stats.solves == 2 and pol.stats.cache_hits == 1
+    np.testing.assert_array_equal(np.asarray(A1.vals), np.asarray(A1_again.vals))
+    # inactive endpoints carry exactly zero on the shared structure
+    rows, cols = np.asarray(A1.rows), np.asarray(A1.cols)
+    vals = np.asarray(A1.vals)
+    dead = ~m1[rows] | ~m1[cols]
+    assert np.all(vals[dead] == 0.0)
+    assert not np.array_equal(vals, np.asarray(A2.vals))
+
+
+# ------------------------------------------------ schedule snapshot reuse
+
+
+def test_static_adjacency_snapshot_is_reused_across_rounds():
+    """The O(n²) copy + serialization of an unchanged adjacency happens once
+    per run, not once per round — the emitted states share one read-only
+    snapshot (value-equal keys, identical buffers)."""
+    n = 32
+    sched = channels.ChurnSchedule(
+        membership=channels.CohortSampler(n, strategy="fixed_k", k=8, seed=20),
+        adj=topology.ring(n, 2),
+        p=np.full(n, 0.5),
+    )
+    states = list(sched.rounds(5))
+    first = states[0].adj
+    assert not first.flags.writeable  # snapshots are frozen
+    for s in states[1:]:
+        assert s.adj is first  # same buffer object, no per-round copy
+        assert s.key()[0] is states[0].key()[0]  # interned bytes too
+    # ... but a *changing* adjacency still gets fresh snapshots
+    link = channels.MarkovLinkProcess(
+        topology.fully_connected(8), p_up_to_down=0.4, p_down_to_up=0.4,
+        seed=21,
+    )
+    sched2 = channels.TimeVaryingChannel(link_process=link, p=np.full(8, 0.5))
+    s0, s1 = sched2.next_round(), sched2.next_round()
+    if not np.array_equal(s0.adj, s1.adj):
+        assert s0.adj is not s1.adj

@@ -1,0 +1,314 @@
+"""Sparse aggregation (ISSUE 9): EdgeRelay operands + the segment backend,
+and the neighborhood-blocked OPT-α solver behind them.
+
+Contracts held here:
+
+  * **EdgeRelay == dense** — ``fused_coefficients`` / ``segment_mix`` /
+    ``colrel_increment_flat`` on an EdgeRelay match the dense einsum math on
+    ``todense()`` of the same structure;
+  * **churn stays exact** — inactive-slot garbage contributes *exactly zero*
+    through the segment backend, and an all-inactive cohort yields the exact
+    zero increment (never NaN) on every backend;
+  * **optimize_sparse == optimize_masked** — the sparse solver's active
+    block matches the dense masked solve to 1e-8 on random sparse graphs
+    (converged solves: unconverged Gauss–Seidel trajectories amplify fp
+    noise in degenerate columns, so the comparison fixes sweeps=200 and
+    keeps p off the {0, 1} endpoints).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, opt_alpha, relay as relay_lib, topology
+from repro.fl.simulator import FLSimulator
+from repro.kernels import ops as kops
+from repro.utils import stacked_ravel
+
+ALL_BACKENDS = ("einsum", "pallas", "pallas_fused", "segment")
+
+
+def _sparse_setting(seed=0, n=12):
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.05, 0.95, n)
+    adj = topology.random_geometric(n, 0.5, seed=seed)
+    res = opt_alpha.optimize_sparse(p, adj, sweeps=200)
+    er = res.edge_relay()
+    A = res.todense().astype(np.float32)
+    tau = jnp.asarray(rng.random(n) < p, jnp.float32)
+    act = rng.random(n) < 0.6
+    act[0] = True
+    active = jnp.asarray(act, jnp.float32)
+    buf = jnp.asarray(rng.standard_normal((n, 37)), jnp.float32)
+    return er, A, p, tau, active, buf
+
+
+# ------------------------------------------------------- EdgeRelay operand
+
+
+def test_edge_relay_dense_roundtrip():
+    er, A, *_ = _sparse_setting(1)
+    np.testing.assert_allclose(np.asarray(er.todense(A.shape[0])), A, atol=1e-7)
+    er2 = relay_lib.edge_relay_from_dense(A)
+    np.testing.assert_allclose(
+        np.asarray(er2.todense(A.shape[0])), A, atol=1e-7
+    )
+
+
+def test_fused_coefficients_edge_relay_matches_dense():
+    er, A, _, tau, active, _ = _sparse_setting(2)
+    want = np.asarray(tau) @ A
+    got = relay_lib.fused_coefficients(er, tau)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+    # masked: the EdgeRelay branch zeros entries with either endpoint dead
+    er_m = relay_lib.mask_relay_matrix(er, active)
+    A_m = np.asarray(relay_lib.mask_relay_matrix(jnp.asarray(A), active))
+    got_m = relay_lib.fused_coefficients(er_m, tau)
+    np.testing.assert_allclose(
+        np.asarray(got_m), np.asarray(tau) @ A_m, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_segment_mix_matches_dense_relay():
+    er, A, _, _, _, buf = _sparse_setting(3)
+    got = relay_lib.segment_mix(er, buf)
+    np.testing.assert_allclose(
+        np.asarray(got), A @ np.asarray(buf), rtol=1e-5, atol=1e-5
+    )
+    with pytest.raises(TypeError):
+        relay_lib.segment_mix(jnp.asarray(A), buf)
+
+
+@pytest.mark.parametrize("strategy", ["colrel", "colrel_fused"])
+@pytest.mark.parametrize("churn", [False, True])
+def test_segment_backend_matches_einsum_reference(strategy, churn):
+    er, A, _, tau, active, buf = _sparse_setting(4)
+    n = A.shape[0]
+    active = active if churn else None
+    want = aggregation.make_aggregator(strategy, n=n, A=jnp.asarray(A)).flat_fn(
+        tau, buf, None, active
+    )
+    got = aggregation.make_aggregator(
+        strategy, n=n, A=er, relay_backend="segment"
+    ).flat_fn(tau, buf, None, active)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_dense_backends_densify_edge_relay_operands():
+    """Small-n parity convenience: an EdgeRelay through a dense backend is
+    the same increment as its todense() matrix."""
+    er, A, _, tau, active, buf = _sparse_setting(5)
+    n = A.shape[0]
+    for backend in ("einsum", "pallas_fused"):
+        got = aggregation.colrel_increment_flat(
+            er, tau, buf, n=n, active=active, backend=backend,
+            block_d=256, interpret=True,
+        )
+        want = aggregation.colrel_increment_flat(
+            jnp.asarray(A), tau, buf, n=n, active=active, backend=backend,
+            block_d=256, interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+        )
+
+
+def test_segment_backend_refuses_dense_matrix():
+    er, A, _, tau, _, buf = _sparse_setting(6)
+    with pytest.raises(ValueError, match="EdgeRelay"):
+        aggregation.colrel_increment_flat(
+            jnp.asarray(A), tau, buf, n=A.shape[0], backend="segment"
+        )
+
+
+def test_validate_sharded_backend_refuses_segment():
+    for shard, exchange in (("clients", "gather"), ("clients", "ring"), ("d", "gather")):
+        with pytest.raises(ValueError, match="single-host"):
+            kops.validate_sharded_backend("segment", shard=shard, exchange=exchange)
+
+
+# ------------------------------------------------- exact-zero churn contract
+
+
+def test_segment_churn_contributes_exactly_zero():
+    """Poisoned inactive rows (large-but-finite) must cancel to exact zeros
+    through the segment backend — masking multiplies edge values, not the
+    buffer, so 0·1e30 never appears."""
+    er, A, _, tau, active, buf = _sparse_setting(7)
+    n = A.shape[0]
+    poisoned = jnp.where(active[:, None] > 0, buf, jnp.float32(1e30))
+    clean = buf * active[:, None]
+    for strategy in ("colrel", "colrel_fused"):
+        agg = aggregation.make_aggregator(
+            strategy, n=n, A=er, relay_backend="segment"
+        )
+        got_p = agg.flat_fn(tau, poisoned, None, active)
+        got_c = agg.flat_fn(tau, clean, None, active)
+        assert np.isfinite(np.asarray(got_p)).all(), strategy
+        assert np.array_equal(np.asarray(got_p), np.asarray(got_c)), strategy
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize(
+    "strategy",
+    ["colrel", "colrel_fused", "fedavg_blind", "fedavg_nonblind", "no_dropout"],
+)
+def test_all_inactive_cohort_yields_exact_zero_increment(backend, strategy):
+    """Satellite 3: an empty cohort must produce the exact-zero increment on
+    every backend and every flat path — the 1/max(n_active, 1) guard keeps
+    the weight finite, and the masked coefficients are exact zeros, so no
+    0/0 or 0·inf can surface as NaN."""
+    er, A, _, tau, _, buf = _sparse_setting(8)
+    n = A.shape[0]
+    # poison the buffer too: dead slots must not even be read into the sum
+    buf = jnp.where(jnp.ones((n, 1)) > 0, buf, buf)
+    none_active = jnp.zeros((n,), jnp.float32)
+    operand = er if backend == "segment" else jnp.asarray(A)
+    if strategy not in ("colrel", "colrel_fused"):
+        operand = None
+    agg = aggregation.make_aggregator(
+        strategy, n=n, A=operand, relay_backend=backend,
+        block_d=256, interpret=True,
+    )
+    got = np.asarray(agg.flat_fn(tau, buf, None, none_active))
+    assert np.all(got == 0.0), (backend, strategy, got)
+
+
+# ------------------------------------------- sparse solver == masked solver
+
+
+@pytest.mark.parametrize("method", ["bisect", "exact"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_optimize_sparse_matches_optimize_masked(method, seed):
+    """Acceptance: the neighborhood-blocked solver matches the dense masked
+    solve's active block to 1e-8 on random sparse graphs."""
+    n = 20
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.05, 0.95, n)
+    adj = topology.random_geometric(n, 0.35, seed=seed + 10)
+    active = rng.random(n) < 0.7
+    active[:2] = True
+    dense = opt_alpha.optimize_masked(p, adj, active, sweeps=200, method=method)
+    sparse = opt_alpha.optimize_sparse(
+        p, adj, active, sweeps=200, method=method
+    )
+    np.testing.assert_allclose(sparse.todense(), dense.A, atol=1e-8)
+    np.testing.assert_array_equal(
+        sparse.feasible_columns, dense.feasible_columns
+    )
+    assert sparse.S_history[-1] == pytest.approx(dense.S_history[-1])
+
+
+def test_optimize_sparse_full_membership_matches_dense():
+    n = 16
+    rng = np.random.default_rng(3)
+    p = rng.uniform(0.05, 0.95, n)
+    adj = topology.ring(n, 2)
+    dense = opt_alpha.optimize(p, adj, sweeps=200)
+    sparse = opt_alpha.optimize_sparse(p, adj, sweeps=200)
+    np.testing.assert_allclose(sparse.todense(), dense.A, atol=1e-8)
+    # unbiasedness holds on the sparse solution directly
+    np.testing.assert_allclose(
+        opt_alpha.unbiasedness_residual(p, sparse.todense()), 0.0, atol=1e-9
+    )
+
+
+def test_optimize_sparse_feasible_columns_false_for_inactive():
+    """Satellite 2's contract on the sparse path: inactive and padded
+    columns report infeasible, never the all-True init."""
+    n = 10
+    rng = np.random.default_rng(4)
+    p = rng.uniform(0.1, 0.9, n)
+    adj = topology.ring(n, 1)
+    active = np.ones(n, bool)
+    active[[3, 7]] = False
+    res = opt_alpha.optimize_sparse(p, adj, active, sweeps=50)
+    assert not res.feasible_columns[3] and not res.feasible_columns[7]
+    assert res.feasible_columns[active].all()
+
+
+def test_warm_start_vals_matches_dense_warm_start():
+    """The CSC warm start is warm_start_weights on the shared structure."""
+    n = 14
+    rng = np.random.default_rng(5)
+    p_old = rng.uniform(0.1, 0.9, n)
+    p_new = np.clip(p_old + rng.normal(0, 0.1, n), 0.05, 0.95)
+    adj = topology.random_geometric(n, 0.45, seed=6)
+    g = topology.closed_csc(adj)
+    prev = opt_alpha.optimize_sparse(p_old, graph=g, sweeps=100)
+    vals = opt_alpha.warm_start_vals(p_new, g, prev.vals)
+    A_dense = opt_alpha.warm_start_weights(p_new, adj, prev.todense())
+    A_sparse = np.zeros((n, n))
+    A_sparse[g.rows, g.cols] = vals
+    np.testing.assert_allclose(A_sparse, A_dense, atol=1e-12)
+
+
+def test_optimize_sparse_accepts_prebuilt_graph_and_seed():
+    n = 12
+    rng = np.random.default_rng(6)
+    p = rng.uniform(0.1, 0.9, n)
+    adj = topology.ring(n, 2)
+    g = topology.closed_csc(adj)
+    cold = opt_alpha.optimize_sparse(p, graph=g, sweeps=200)
+    warm = opt_alpha.optimize_sparse(p, graph=g, sweeps=20, vals0=cold.vals)
+    # seeding from the converged optimum keeps the objective (the argmin has
+    # flat directions — row masses pin S, not individual entries — so the
+    # matrix itself may slide; S and feasibility must not move)
+    assert warm.S_history[-1] == pytest.approx(cold.S_history[-1], rel=1e-9)
+    np.testing.assert_array_equal(warm.feasible_columns, cold.feasible_columns)
+    np.testing.assert_allclose(
+        opt_alpha.unbiasedness_residual(p, warm.todense()), 0.0, atol=1e-9
+    )
+
+
+# --------------------------------------------------- full simulator parity
+
+
+def _quad_loss(params, batch):
+    diff = params["x"][None, :] - batch["c"]
+    return 0.5 * jnp.mean(jnp.sum(diff**2, axis=-1))
+
+
+def test_simulator_round_segment_matches_einsum():
+    """A full round on relay_backend='segment' (EdgeRelay operand) matches
+    the einsum reference fed the same matrix densely, under churn."""
+    n, dim, T, b = 12, 5, 2, 3
+    er, A, p, _, active, _ = _sparse_setting(9, n=n)
+    rng = np.random.default_rng(10)
+    batch = {"c": jnp.asarray(rng.standard_normal((n, T, b, dim)), jnp.float32)}
+    params = {"x": jnp.ones((dim,))}
+    outs = {}
+    for be, operand in (("einsum", jnp.asarray(A)), ("segment", er)):
+        sim = FLSimulator(
+            _quad_loss, n_clients=n, strategy="colrel_fused", A=operand,
+            p=p, local_steps=T, relay_backend=be,
+        )
+        outs[be] = sim.run_round(
+            jax.random.key(0), params, sim.init_server_state(params),
+            batch, 0.1, active=active,
+        )
+    (pe, _, me), (ps, _, ms) = outs["einsum"], outs["segment"]
+    np.testing.assert_allclose(
+        np.asarray(pe["x"]), np.asarray(ps["x"]), rtol=1e-6, atol=1e-6
+    )
+    np.testing.assert_allclose(float(me["loss"]), float(ms["loss"]), rtol=1e-6)
+
+
+def test_edge_relay_is_a_static_pytree_leaf_set():
+    """EdgeRelay flows through jit as a pytree whose *structure* is fixed by
+    the graph — swapping vals between rounds must not retrace."""
+    er, A, *_ = _sparse_setting(11)
+    calls = {"n": 0}
+
+    @jax.jit
+    def f(e, tau):
+        calls["n"] += 1
+        return relay_lib.fused_coefficients(e, tau)
+
+    tau = jnp.ones((A.shape[0],), jnp.float32)
+    f(er, tau)
+    er2 = relay_lib.EdgeRelay(er.rows, er.cols, er.vals * 0.5)
+    f(er2, tau)
+    assert calls["n"] == 1

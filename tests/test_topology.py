@@ -57,3 +57,48 @@ def test_asymmetric_rejected():
     bad[0, 1] = True
     with pytest.raises(ValueError):
         topology.neighborhoods(bad)
+
+
+def test_closed_csc_matches_dense_nonzero():
+    rng = np.random.default_rng(4)
+    for _ in range(6):
+        n = int(rng.integers(3, 20))
+        adj = topology.erdos_renyi(n, 0.3, seed=int(rng.integers(1 << 30)))
+        g = topology.closed_csc(adj)
+        m = topology.closed_mask(adj)
+        assert g.n == n and g.nnz == int(m.sum())
+        np.testing.assert_array_equal(g.todense_mask(), m)
+        np.testing.assert_array_equal(g.column_counts(), m.sum(axis=0))
+        for i in range(n):
+            col = g.column(i)
+            np.testing.assert_array_equal(col, np.nonzero(m[:, i])[0])
+            assert i in col  # diagonal always stored
+        # flat (rows, cols) walk is column-major and sorted within columns
+        np.testing.assert_array_equal(
+            g.cols, np.repeat(np.arange(n), np.diff(g.indptr))
+        )
+
+
+def test_random_geometric_matches_brute_force():
+    """The grid-binned neighbor search finds exactly the pairs within
+    ``radius`` — same positions recomputed from the seeded RNG stream."""
+    for n, radius, seed in [(40, 0.3, 0), (120, 0.17, 5), (25, 0.9, 2)]:
+        adj = topology.random_geometric(n, radius, seed=seed)
+        pos = np.random.default_rng(seed).random((n, 2))
+        d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+        want = d2 <= radius * radius
+        np.fill_diagonal(want, False)
+        np.testing.assert_array_equal(adj, want)
+
+
+def test_random_geometric_invariants_and_target_degree():
+    n, deg = 2000, 8.0
+    radius = float(np.sqrt(deg / (np.pi * n)))
+    adj = topology.random_geometric(n, radius, seed=7)
+    assert adj.dtype == bool and adj.shape == (n, n)
+    np.testing.assert_array_equal(adj, adj.T)
+    assert not np.diag(adj).any()
+    mean_deg = adj.sum() / n
+    assert deg * 0.6 < mean_deg < deg * 1.4  # boundary effects shave a bit
+    with pytest.raises(ValueError, match="radius"):
+        topology.random_geometric(4, 0.0)
