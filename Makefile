@@ -14,15 +14,14 @@ test-fast:
 # test-fast plus the coverage gate (CI's test-fast job): measured over
 # src/repro per .coveragerc, failing below the checked-in floor.  The floor
 # is a ratchet — raise it as coverage grows, never lower it to make CI pass.
-# 81 = held at the PR-7 level through the PR-8 mesh work: the sharded
-# engine / sharding rules / ring land with in-process tests (the
-# single-device-mesh engine regression, the rules units, the spec
-# validation net) that cover most of the new code, but the genuinely
-# multi-device legs run as subprocess tests (XLA_FLAGS must precede jax
-# init) and subprocess execution records no coverage.  A settrace/AST
-# proxy (pytest-cov absent locally) measures ≈83.6% on the fast suite;
-# measured−5 would sit *below* the standing floor, and the ratchet never
-# moves down, so the floor advances by the measured growth instead
+# 82 = held through the async/continuous-training work: the async engine,
+# delay processes, checkpoint layer, and launch services all land with
+# in-process tests (test_async_engine / test_resume / test_launch), and the
+# .coveragerc launch omits are gone, so the measured number covers the
+# whole tree now.  A settrace/AST proxy (pytest-cov absent locally)
+# measures ≈83.8% on the fast suite (was ≈83.6% pre-async); measured−5
+# would sit *below* the standing floor, and the ratchet never moves down,
+# so the floor holds until measured growth clears the next integer
 # (previous floors: 80 → 81 → 82).
 test-cov:
 	$(PYTEST) -x -q -m "not slow" --cov --cov-config=.coveragerc \
@@ -56,6 +55,10 @@ bench-smoke:
 	  --max-regression 2.0
 	PYTHONPATH=src $(PY) -m repro.bench.run --scenario sample_sweep_smoke \
 	  --out-dir .
+	PYTHONPATH=src $(PY) -m repro.bench.run --scenario async_smoke \
+	  --out-dir . \
+	  --baseline benchmarks/baselines/BENCH_async_smoke.json \
+	  --max-regression 2.0
 
 # telemetry demo: traced bench_smoke run (writes TRACE_*.json — load them in
 # https://ui.perfetto.dev) + the per-phase attribution summary for the
@@ -69,7 +72,9 @@ lint:
 	ruff check .
 	ruff format --check src/repro/bench src/repro/channels src/repro/core \
 	  src/repro/fl src/repro/kernels src/repro/obs src/repro/utils \
-	  tests/test_bench.py tests/test_pipelined_engine.py tests/test_obs.py
+	  src/repro/launch src/repro/checkpoint \
+	  tests/test_bench.py tests/test_pipelined_engine.py tests/test_obs.py \
+	  tests/test_async_engine.py tests/test_launch.py tests/test_resume.py
 
 # spot-check the docs against the live code: runs the --list snippets
 # embedded in the listed docs and verifies every scenario the docs

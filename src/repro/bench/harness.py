@@ -61,6 +61,7 @@ from repro.fl.distributed import (
     build_scan_round_step,
     build_sharded_scan_round_step,
 )
+from repro.fl.async_engine import AsyncRoundEngine
 from repro.fl.engine import (
     EpochScanEngine,
     PipelinedScanEngine,
@@ -118,12 +119,17 @@ class EngineRun:
     # the perf numbers above always come from the untraced warm run.
     trace_path: str | None = None
     telemetry: dict | None = None
+    # the warm run's per-round loss trajectory (host floats) — consumed by
+    # the time-to-accuracy block (run_scenario), not serialized per engine
+    losses: list | None = None
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         # the telemetry block is aggregated once at the report's top level
-        # (make_report), not duplicated per engine entry
+        # (make_report), not duplicated per engine entry; the loss
+        # trajectory is distilled into the ttac block
         d.pop("telemetry")
+        d.pop("losses")
         return d
 
 
@@ -148,7 +154,9 @@ def _run_once(bundle: ScenarioBundle, engine, batches: list, tracer=None):
     if tracer is not None:
         schedule.tracer = tracer
     params = bundle.init_fn(jax.random.key(spec.seed))
-    fused = isinstance(engine, (EpochScanEngine, PipelinedScanEngine))
+    fused = isinstance(
+        engine, (EpochScanEngine, PipelinedScanEngine, AsyncRoundEngine)
+    )
     sim = engine.sim if fused else engine
     server_state = sim.init_server_state(params)
     key = jax.random.key(spec.seed + 1)
@@ -411,6 +419,7 @@ def _run_mesh_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir
         trace_count=step.trace_count,
         dispatches=dispatches,
         final_loss=float(losses[-1]),
+        losses=np.asarray(losses, np.float64).tolist(),
         overlap_fraction=None if overlap is None else overlap.overlap_fraction,
         steady_overlap_fraction=(
             None if overlap is None else overlap.steady_overlap_fraction
@@ -591,6 +600,7 @@ def _run_shard_engine(bundle: ScenarioBundle, name: str, batches: list, trace_di
         trace_count=ex.trace_count,
         dispatches=dispatches,
         final_loss=float(losses[-1]),
+        losses=np.asarray(losses, np.float64).tolist(),
         overlap_fraction=None if overlap is None else overlap.overlap_fraction,
         steady_overlap_fraction=(
             None if overlap is None else overlap.steady_overlap_fraction
@@ -627,6 +637,19 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None)
             -(-seg.n_rounds // spec.chunk)
             for seg in bundle.make_schedule().segments(spec.rounds)
         )
+    elif name == "async":
+        # each engine run replays the same delay stream (fresh process,
+        # same seed); reset=True inside run_schedule makes cold and warm
+        # passes identical.  Like the loop, dispatch granularity is one
+        # aggregation per round.
+        engine = AsyncRoundEngine(
+            sim,
+            delays=bundle.make_delays(),
+            staleness_decay=spec.staleness_decay,
+            buffer_k=spec.buffer_k,
+            block_d=spec.block_d,
+        )
+        dispatches = spec.rounds
     elif name == "loop":
         engine = sim
         dispatches = spec.rounds
@@ -639,12 +662,12 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None)
     trace_path = telemetry = None
     if trace_dir is not None:
         tracer = Tracer()
-        if name in ("scan", "pipelined"):
+        if name in ("scan", "pipelined", "async"):
             engine.tracer = tracer
         try:
             _run_once(bundle, engine, batches, tracer=tracer)
         finally:
-            if name in ("scan", "pipelined"):
+            if name in ("scan", "pipelined", "async"):
                 engine.tracer = NULL_TRACER
         trace_path, telemetry = _finish_trace(tracer, trace_dir, spec.name, name)
     run = EngineRun(
@@ -655,6 +678,7 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None)
         trace_count=trace_count,
         dispatches=dispatches,
         final_loss=float(metrics["loss"][-1]),
+        losses=np.asarray(metrics["loss"], np.float64).tolist(),
         overlap_fraction=None if overlap is None else overlap.overlap_fraction,
         steady_overlap_fraction=(
             None if overlap is None else overlap.steady_overlap_fraction
@@ -671,15 +695,29 @@ def run_engine(bundle: ScenarioBundle, name: str, batches: list, trace_dir=None)
 def run_scenario(
     spec: ScenarioSpec | str,
     *,
-    engines=("loop", "scan", "pipelined"),
+    engines=None,
     check_bitwise: bool = True,
     trace_dir=None,
 ) -> dict:
-    """Run ``spec`` under every engine; returns
+    """Run ``spec`` under every engine (default: ``spec.engines``); returns
     ``{"runs": {name: EngineRun}, "speedup": float | None,
     "speedups": {name: float}, "bitwise_match": bool | None,
     "model_params": int, "kernel_check": dict | None,
-    "shard_check": dict | None}``.
+    "shard_check": dict | None, "async_check": dict | None,
+    "ttac": dict | None}``.
+
+    The ``async`` engine (``spec.engines`` includes it) joins the bitwise
+    gate only at ``spec.delay == "none"`` — a delayed run diverges from the
+    loop *by design*.  A delayed scenario instead gets the **async parity
+    gate** (``async_check``): the async engine re-runs with the delay
+    stripped and its final parameters must be bitwise-identical to the
+    loop's (the staleness-weighting unbiasedness regression; the re-run is
+    recorded in ``runs`` as ``async_delay0``).  A mismatch raises.
+
+    ``spec.ttac_target_loss > 0`` adds the ``ttac`` block: per engine, the
+    first round (and derived wall-clock second) at which the warm run's
+    training loss reaches the target — the async-vs-synchronous
+    time-to-accuracy comparison.
 
     On the shard path (``spec.step == "shard"``) the bitwise gate is
     replaced by the **shard gate** (``shard_check``): the sharded engines
@@ -706,6 +744,8 @@ def run_scenario(
         from repro.bench.scenarios import get_scenario
 
         spec = get_scenario(spec)
+    if engines is None:
+        engines = spec.engines
     bundle = build(spec)
     model_params = tree_size(bundle.init_fn(jax.random.key(spec.seed)))
     batches = _pregenerate_batches(bundle)
@@ -763,6 +803,51 @@ def run_scenario(
             "max_abs_diff": max_abs_diff,
             "rounds_per_sec": krun.rounds_per_sec,
         }
+    async_check = None
+    if "async" in finals and spec.delay != "none" and "loop" in finals:
+        # the mandatory async parity gate: strip the delay (and the buffer
+        # cap — freshest-k at k < n drops clients even when all arrive
+        # fresh) and the engine must reproduce the loop bit-for-bit (same
+        # batches, same τ chain) — proof the staleness weighting degrades
+        # to OPT-α exactly in the synchronous limit
+        dspec = dataclasses.replace(spec, delay="none", buffer_k=0)
+        arun, afinal = run_engine(build(dspec), "async", batches)
+        leaves_l = jax.tree.leaves(finals["loop"])
+        leaves_a = jax.tree.leaves(afinal)
+        same = len(leaves_l) == len(leaves_a) and all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(leaves_l, leaves_a)
+        )
+        if not same:
+            raise AssertionError(
+                f"{spec.name}: the async engine at delay=0 diverged bitwise "
+                "from the per-round loop — the staleness weighting broke "
+                "the synchronous-limit contract"
+            )
+        runs["async_delay0"] = dataclasses.replace(arun, engine="async_delay0")
+        async_check = {
+            "reference": "loop",
+            "bitwise": True,
+            "recorded_delay": spec.delay,
+            "rounds_per_sec": arun.rounds_per_sec,
+        }
+    ttac = None
+    if spec.ttac_target_loss > 0:
+        ttac = {"target_loss": spec.ttac_target_loss, "engines": {}}
+        for name, run in runs.items():
+            if run.losses is None:
+                continue
+            arr = np.asarray(run.losses)
+            hit = np.nonzero(arr <= spec.ttac_target_loss)[0]
+            reached = bool(hit.size)
+            rounds_to = int(hit[0]) + 1 if reached else None
+            ttac["engines"][name] = {
+                "reached": reached,
+                "rounds_to_target": rounds_to,
+                "seconds_to_target": (
+                    rounds_to / run.rounds_per_sec if reached else None
+                ),
+            }
     speedups = {}
     if "loop" in runs:
         speedups = {
@@ -839,6 +924,10 @@ def run_scenario(
             for name, final in finals.items():
                 if name == "loop":
                     continue
+                if name == "async" and spec.delay != "none":
+                    # a delayed async run diverges from the loop by design;
+                    # its gate is the delay-0 re-run above (async_check)
+                    continue
                 leaves_e = jax.tree.leaves(final)
                 bitwise = len(leaves_l) == len(leaves_e) and all(
                     np.array_equal(np.asarray(a), np.asarray(b))
@@ -857,4 +946,6 @@ def run_scenario(
         "model_params": model_params,
         "kernel_check": kernel_check,
         "shard_check": shard_check,
+        "async_check": async_check,
+        "ttac": ttac,
     }

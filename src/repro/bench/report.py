@@ -30,18 +30,23 @@ Report schema (``schema_version`` 1)::
     }
 
 The overlap metrics, ``speedups_vs_loop``, ``model_params``,
-``kernel_check``, ``shard_check`` and the ``telemetry`` block are additive
-v1 fields (older readers ignore them; older reports read back with them
-absent) — see ``docs/benchmarks.md`` for the field-by-field reading guide
-and ``docs/observability.md`` for the telemetry block.  ``model_params`` is
-the model's total parameter count D (the x-axis of the relay D-sweep);
-``kernel_check`` records the mandatory pallas-vs-reference parity pass
-(backend, tolerances, measured max |Δ|, kernel throughput) for scenarios
-with ``check_backend`` set.  ``shard_check`` (shard scenarios only, whose
-``spec.devices`` records the mesh size) is the multi-device gate: sharded
-engines bitwise-identical to each other, allclose to the single-device loop
-at the recorded tolerance (``max_abs_diff`` is the measured divergence —
-see docs/distributed.md).
+``kernel_check``, ``shard_check``, ``async_check``, ``ttac`` and the
+``telemetry`` block are additive v1 fields (older readers ignore them;
+older reports read back with them absent) — see ``docs/benchmarks.md`` for
+the field-by-field reading guide and ``docs/observability.md`` for the
+telemetry block.  ``model_params`` is the model's total parameter count D
+(the x-axis of the relay D-sweep); ``kernel_check`` records the mandatory
+pallas-vs-reference parity pass (backend, tolerances, measured max |Δ|,
+kernel throughput) for scenarios with ``check_backend`` set.
+``shard_check`` (shard scenarios only, whose ``spec.devices`` records the
+mesh size) is the multi-device gate: sharded engines bitwise-identical to
+each other, allclose to the single-device loop at the recorded tolerance
+(``max_abs_diff`` is the measured divergence — see docs/distributed.md).
+``async_check`` (delayed async scenarios) records the mandatory delay-0
+parity gate — the async engine with the delay stripped is bitwise-identical
+to the loop; ``ttac`` (scenarios with ``ttac_target_loss`` set) is the
+per-engine time-to-accuracy block: first round / derived second at which
+the training loss reached the target.
 
 The gate (:func:`check_regression`) compares per-engine ``rounds_per_sec``
 against a checked-in baseline report and fails when throughput regresses by
@@ -79,7 +84,12 @@ def make_report(spec: ScenarioSpec, result: dict) -> dict:
         "created_unix": int(time.time()),
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
-        "spec": dataclasses.asdict(spec),
+        # tuples (e.g. spec.engines) become lists so the payload is exactly
+        # what a JSON round trip reads back
+        "spec": {
+            k: list(v) if isinstance(v, tuple) else v
+            for k, v in dataclasses.asdict(spec).items()
+        },
         "engines": {name: run.as_dict() for name, run in runs.items()},
         "speedup_rounds_per_sec": result["speedup"],
         "speedups_vs_loop": result.get("speedups", {}),
@@ -87,6 +97,8 @@ def make_report(spec: ScenarioSpec, result: dict) -> dict:
         "model_params": result.get("model_params"),
         "kernel_check": result.get("kernel_check"),
         "shard_check": result.get("shard_check"),
+        "async_check": result.get("async_check"),
+        "ttac": result.get("ttac"),
         "telemetry": telemetry or None,
     }
 

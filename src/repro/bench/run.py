@@ -71,6 +71,24 @@ def format_summary(rep: dict) -> str:
             f"{scheck['atol']:g}/rtol {scheck['rtol']:g}), sharded engines "
             "bitwise-identical to each other"
         )
+    acheck = rep.get("async_check")
+    if acheck:
+        lines.append(
+            f"  async check: delay-0 re-run bitwise-identical to the loop "
+            f"(recorded delay {acheck['recorded_delay']!r}, "
+            f"{acheck['rounds_per_sec']:.1f} rounds/s at delay 0)"
+        )
+    ttac = rep.get("ttac")
+    if ttac:
+        lines.append(f"  time-to-accuracy (loss ≤ {ttac['target_loss']:g}):")
+        for name, t in sorted(ttac["engines"].items()):
+            if t["reached"]:
+                lines.append(
+                    f"    {name:>12}: round {t['rounds_to_target']} "
+                    f"(~{t['seconds_to_target']:.3f}s)"
+                )
+            else:
+                lines.append(f"    {name:>12}: target not reached")
     if rep.get("model_params"):
         lines.append(f"  model_params D = {rep['model_params']:,}")
     speedups = rep.get("speedups_vs_loop") or {}
@@ -105,8 +123,9 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--engines",
-        default="loop,scan,pipelined",
-        help="comma-separated engines to run (loop, scan, pipelined)",
+        default="",
+        help="comma-separated engines to run (loop, scan, pipelined, "
+        "async); default: the scenario's own engine list",
     )
     ap.add_argument(
         "--out-dir",
@@ -139,7 +158,7 @@ def main(argv=None) -> int:
         return 0
 
     names = args.scenario or ["bench_smoke"]
-    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip()) or None
     status = 0
     for name in names:
         spec = scenarios.get_scenario(name)

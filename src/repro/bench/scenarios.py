@@ -55,6 +55,12 @@ The registered scenarios:
                   shadowing, 8 devices
   mesh2_dshard    D-axis GSPMD mode: the (n, D) relay contraction
                   partitioned over a 2-device "model" axis
+  async_ttac_500  time-to-accuracy under Poisson arrival delays: the
+                  staleness-weighted async engine vs the synchronous
+                  loop/pipelined engines on the fig5 channel, with the
+                  mandatory delay-0 parity gate (async == loop bitwise)
+  async_smoke     CI-sized async point: geometric delays, buffer_k
+                  selection and the delay-0 parity gate in seconds
 """
 from __future__ import annotations
 
@@ -71,6 +77,7 @@ from repro.core.aggregation import ServerOpt
 from repro.data.loader import FederatedLoader
 from repro.data.partition import iid_partition
 from repro.data.synthetic import cifar_like, gaussian_classification
+from repro.fl.async_engine import SUPPORTED_STRATEGIES as _ASYNC_STRATEGIES
 from repro.fl.simulator import FLSimulator
 from repro.kernels.ops import RELAY_BACKENDS, validate_sharded_backend
 from repro.models.resnet import init_resnet20, resnet20_loss
@@ -162,6 +169,24 @@ class ScenarioSpec:
     exchange: str = "gather"  # gather | ring
     # scan engine (sim path)
     chunk: int = 32
+    # which engines the scenario benches by default (run.py --engines
+    # overrides).  "async" adds the staleness-weighted AsyncRoundEngine.
+    engines: tuple = ("loop", "scan", "pipelined")
+    # async arrival model (engines includes "async"): per-client upload
+    # delays drawn by repro.channels.delay; the PS aggregates the freshest
+    # buffer_k arrivals (0 = all) with staleness discount decay**s.  With
+    # delay="none" the async engine is bitwise-identical to the loop — the
+    # harness enforces exactly that as the async parity gate whenever the
+    # recorded run itself uses a nonzero delay.
+    delay: str = "none"  # none | poisson | geometric
+    delay_rate: float = 1.0
+    delay_max: int = 8
+    staleness_decay: float = 0.8
+    buffer_k: int = 0
+    # time-to-accuracy: when > 0, the report records the first round (and
+    # wall-clock second) at which each engine's training loss reaches the
+    # target — the async-vs-synchronous TTA comparison
+    ttac_target_loss: float = 0.0
 
     def __post_init__(self):
         # fail at construction, not mid-benchmark after batches are generated
@@ -234,6 +259,27 @@ class ScenarioSpec:
                 "relay_backend='segment' needs policy='sparse' (the other "
                 "policies emit dense relay matrices, not EdgeRelays)"
             )
+        unknown_engines = set(self.engines) - {"loop", "scan", "pipelined", "async"}
+        if unknown_engines:
+            raise ValueError(f"unknown engines: {sorted(unknown_engines)}")
+        if self.delay not in ("none", "poisson", "geometric"):
+            raise ValueError(f"unknown delay: {self.delay!r}")
+        if self.delay != "none" and "async" not in self.engines:
+            raise ValueError("a delay process only drives the async engine")
+        if "async" in self.engines:
+            if self.step != "sim":
+                raise ValueError("the async engine runs on the sim path only")
+            if self.strategy not in _ASYNC_STRATEGIES:
+                raise ValueError(
+                    f"the async engine supports {_ASYNC_STRATEGIES}, "
+                    f"not {self.strategy!r}"
+                )
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise ValueError("staleness_decay must be in (0, 1]")
+        if self.buffer_k < 0 or self.delay_max < 0:
+            raise ValueError("buffer_k and delay_max must be >= 0")
+        if self.ttac_target_loss < 0:
+            raise ValueError("ttac_target_loss must be >= 0 (0 = off)")
         if self.model not in ("mlp", "resnet20"):
             raise ValueError(f"unknown model: {self.model!r}")
         if self.relay_backend not in RELAY_BACKENDS:
@@ -432,6 +478,18 @@ class ScenarioBundle:
             server_opt=ServerOpt(),
             relay_backend=spec.relay_backend,
             block_d=spec.block_d,
+        )
+
+    def make_delays(self):
+        """Fresh delay process for one async-engine run (deterministic:
+        every run replays the same arrival stream)."""
+        spec = self.spec
+        return channels.make_delays(
+            spec.delay,
+            spec.n_clients,
+            rate=spec.delay_rate,
+            max_delay=spec.delay_max,
+            seed=spec.seed + 11,
         )
 
     def make_loader(self) -> FederatedLoader:
@@ -896,5 +954,72 @@ register(
         p_every=25,
         chunk=25,
         step="mesh",
+    )
+)
+
+# ------------------------------------------------------------ async arrivals
+# The staleness-weighted asynchronous engine (repro.fl.async_engine) under
+# sampled per-client upload delays.  The recorded quantity is
+# time-to-accuracy: rounds and wall-clock seconds to the target training
+# loss, async vs the synchronous engines.  Because a delayed run is *meant*
+# to diverge from the loop, the loop/scan/pipelined bitwise gate cannot
+# cover the async engine; instead the harness re-runs it with the delay
+# stripped (delay="none") and asserts bitwise equality with the loop — the
+# OPT-α-unbiasedness regression gate for the staleness-weighting math
+# (report.async_check; both gates are mandatory and raise on mismatch).
+
+register(
+    ScenarioSpec(
+        name="async_ttac_500",
+        description=(
+            "time-to-accuracy under Poisson(1.0) arrival delays: the "
+            "staleness-weighted async engine vs the synchronous loop / "
+            "pipelined engines on the fig5 channel, delay-0 parity gate on"
+        ),
+        n_clients=10,
+        rounds=500,
+        local_steps=2,
+        local_batch=8,
+        dim=64,
+        width=32,
+        n_train=1024,
+        adj_every=25,
+        p_every=25,
+        drift_hold=1,
+        chunk=25,
+        engines=("loop", "pipelined", "async"),
+        delay="poisson",
+        delay_rate=1.0,
+        delay_max=8,
+        staleness_decay=0.8,
+        ttac_target_loss=0.05,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="async_smoke",
+        description=(
+            "CI-sized async point: geometric delays, freshest-4 buffer, "
+            "staleness weighting and the delay-0 parity gate in seconds"
+        ),
+        n_clients=6,
+        rounds=24,
+        local_steps=2,
+        local_batch=8,
+        dim=32,
+        width=16,
+        n_train=256,
+        adj_every=8,
+        p_every=8,
+        drift_hold=1,
+        chunk=8,
+        engines=("loop", "async"),
+        delay="geometric",
+        delay_rate=1.0,
+        delay_max=4,
+        staleness_decay=0.8,
+        buffer_k=4,
+        ttac_target_loss=1.8,
     )
 )

@@ -30,6 +30,13 @@ subsystem is three layers, consumed in order every round:
      (uniform / fixed-k / expander-stride draws), optionally wrapping any
      of the processes above as the eligibility base.  The n ≫ 10³ scale
      regime: per-round cost follows the cohort and its live edges.
+   * arrival delays (`delay`): :class:`DelayProcess` streams — Poisson
+     (:class:`PoissonDelays`), geometric (:class:`GeometricDelays`) or the
+     synchronous :class:`ZeroDelays` — deciding *when* each client's
+     computed update reaches the PS.  Consumed by the asynchronous engine
+     (:class:`repro.fl.async_engine.AsyncRoundEngine`), not by the
+     schedules: delays compose on top of churn/sampling rather than
+     replacing them.
 
 2. **Schedules** (`schedule`, `churn`) — compose processes into one stream of
    :class:`ChannelState` per federated round: the realized adjacency, the
@@ -96,6 +103,13 @@ from repro.channels.correlated import (
     circle_positions,
     spatial_covariance,
 )
+from repro.channels.delay import (
+    DelayProcess,
+    GeometricDelays,
+    PoissonDelays,
+    ZeroDelays,
+    make_delays,
+)
 from repro.channels.drift import (
     PiecewiseConstantDrift,
     RandomWalkDrift,
@@ -131,9 +145,12 @@ __all__ = [
     "CohortSampler",
     "CorrelatedChannel",
     "CoupledUplinkDrift",
+    "DelayProcess",
+    "GeometricDelays",
     "MarkovChurn",
     "MarkovLinkProcess",
     "PiecewiseConstantDrift",
+    "PoissonDelays",
     "PrefetchStats",
     "RandomWalkDrift",
     "RandomWaypointMobility",
@@ -149,9 +166,11 @@ __all__ = [
     "StaticMembership",
     "StaticP",
     "TimeVaryingChannel",
+    "ZeroDelays",
     "circle_positions",
     "geometric_adjacency",
     "gilbert_elliott",
+    "make_delays",
     "project_to_support",
     "spatial_covariance",
 ]

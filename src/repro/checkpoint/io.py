@@ -2,6 +2,25 @@
 
 Saves the PS global model, server-optimizer state and round counter so FL
 training is resumable; restore round-trips exact dtypes/shapes.
+
+Two layers:
+
+* :func:`save` / :func:`restore` — one pytree ⇄ one atomic ``.npz``
+  (tmp-file + ``os.replace``, so a crash mid-write leaves the previous
+  snapshot intact) with an optional ``.meta.json`` sidecar.
+* The **training-state layer** — :func:`save_training_state` /
+  :func:`restore_training_state` bundle the full resumable state (params,
+  optional server-optimizer state, the RNG key via
+  ``jax.random.key_data``, and the round counter), and :func:`publish` /
+  :func:`latest_checkpoint` add the continuous-training rotation: numbered
+  ``ckpt_<round>.npz`` snapshots, an atomically-replaced ``LATEST``
+  pointer file, and keep-last-k pruning.  The serving loop
+  (``repro.launch.serve``) polls ``LATEST`` and reloads on change.
+
+Resuming mid-run is bitwise (tested in ``tests/test_resume.py``): restore
+the state, rebuild the schedule/policy/batch stream from their seeds and
+advance them to the saved round, and the continued trajectory equals the
+uninterrupted one — params, metrics, and final RNG key.
 """
 from __future__ import annotations
 
@@ -14,6 +33,7 @@ import numpy as np
 
 
 _BF16_PREFIX = "__bf16__:"  # npz cannot store ml_dtypes.bfloat16 natively
+_LATEST = "LATEST"
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -76,3 +96,121 @@ def restore(path: str, like):
 def load_metadata(path: str) -> dict:
     with open(path + ".meta.json") as f:
         return json.load(f)
+
+
+# --------------------------------------------------------------------------
+# Training-state layer: full resumable state + the latest-pointer rotation
+# --------------------------------------------------------------------------
+
+
+def _key_like():
+    """The array shape/dtype a typed PRNG key serializes to (impl-dependent;
+    (2,) uint32 for the default threefry)."""
+    return np.zeros_like(np.asarray(jax.random.key_data(jax.random.key(0))))
+
+
+def save_training_state(path: str, *, params, server_state, key, round: int,
+                        metadata: dict | None = None) -> None:
+    """Save the full resumable state as one atomic snapshot.
+
+    ``server_state`` may be None (momentum-free server optimizer) — recorded
+    in the metadata so restore knows the expected structure.  ``key`` is the
+    live typed PRNG key; it round-trips bit-exactly via
+    ``jax.random.key_data`` / ``wrap_key_data``.
+    """
+    tree = {"params": params, "rng_key": np.asarray(jax.random.key_data(key))}
+    if server_state is not None:
+        tree["server_state"] = server_state
+    meta = dict(metadata or {})
+    meta.update({
+        "round": int(round),
+        "has_server_state": server_state is not None,
+    })
+    save(path, tree, metadata=meta)
+
+
+def restore_training_state(path: str, *, params_like, server_state_like=None):
+    """Restore a :func:`save_training_state` snapshot.
+
+    Returns ``(params, server_state, key, round)``.  ``server_state_like``
+    is required exactly when the snapshot carries one (build it with
+    ``server_opt.init(params_like)``); a momentum-free snapshot returns
+    ``server_state=None``.
+    """
+    meta = load_metadata(path)
+    like = {"params": params_like, "rng_key": _key_like()}
+    if meta["has_server_state"]:
+        if server_state_like is None:
+            raise ValueError(
+                f"{path} carries a server-optimizer state: pass "
+                "server_state_like (e.g. server_opt.init(params_like))"
+            )
+        like["server_state"] = server_state_like
+    tree = restore(path, like)
+    key = jax.random.wrap_key_data(np.asarray(tree["rng_key"]))
+    return (
+        tree["params"],
+        tree.get("server_state"),
+        key,
+        int(meta["round"]),
+    )
+
+
+def _ckpt_name(round: int) -> str:
+    return f"ckpt_{int(round):08d}.npz"
+
+
+def publish(directory: str, *, params, server_state, key, round: int,
+            keep: int = 3, metadata: dict | None = None) -> str:
+    """Publish one training-state snapshot into ``directory`` and rotate the
+    ``LATEST`` pointer atomically (tmp + ``os.replace``): a reader polling
+    :func:`latest_checkpoint` sees either the previous snapshot or the new
+    one, never a torn state.  Keeps the newest ``keep`` snapshots (0 ⇒ keep
+    everything).  Returns the snapshot path."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, _ckpt_name(round))
+    save_training_state(
+        path, params=params, server_state=server_state, key=key,
+        round=round, metadata=metadata,
+    )
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(os.path.basename(path) + "\n")
+        os.replace(tmp, os.path.join(directory, _LATEST))  # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    if keep > 0:
+        _prune(directory, keep=keep, current=os.path.basename(path))
+    return path
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    """The snapshot the ``LATEST`` pointer names, or None when the directory
+    holds no published snapshot (missing pointer, or pointer to a snapshot
+    already pruned away)."""
+    pointer = os.path.join(directory, _LATEST)
+    try:
+        with open(pointer) as f:
+            name = f.read().strip()
+    except FileNotFoundError:
+        return None
+    path = os.path.join(directory, name)
+    return path if name and os.path.exists(path) else None
+
+
+def _prune(directory: str, *, keep: int, current: str) -> None:
+    """Drop all but the newest ``keep`` numbered snapshots (and their
+    sidecars).  The pointed-at snapshot is never pruned."""
+    snaps = sorted(
+        f for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    )
+    for name in snaps[:-keep]:
+        if name == current:
+            continue
+        for victim in (name, name + ".meta.json"):
+            full = os.path.join(directory, victim)
+            if os.path.exists(full):
+                os.unlink(full)

@@ -1,7 +1,9 @@
+from repro.fl.async_engine import AsyncRoundEngine
 from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
 from repro.fl.simulator import FLSimulator
 
 __all__ = [
+    "AsyncRoundEngine",
     "EpochScanEngine",
     "FLSimulator",
     "PipelinedScanEngine",

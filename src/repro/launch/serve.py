@@ -1,11 +1,23 @@
-"""Serving launcher: batched prefill + decode over the model zoo.
+"""Serving launcher: batched prefill + decode over the model zoo, plus a
+snapshot-watching eval loop for the continuous-training service.
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
         --batch 4 --prompt-len 64 --new-tokens 16
 
-Loads (or random-inits) a model, prefills the prompt batch, then greedy-
-decodes with the KV cache / SSM state machinery — the same serve_step the
-dry-run lowers at production shapes.
+    # live eval against a training run publishing into checkpoints/
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+        --watch checkpoints --max-polls 30
+
+One-shot mode loads (or random-inits) a model, prefills the prompt batch,
+then greedy-decodes with the KV cache / SSM state machinery — the same
+serve_step the dry-run lowers at production shapes.
+
+Watch mode (:class:`SnapshotEvalLoop`) polls the ``LATEST`` pointer the
+trainer rotates (``repro.checkpoint.publish``); whenever it names a new
+snapshot the loop reloads just the params (the server-optimizer state and
+RNG key in the snapshot are ignored — eval only needs the model) and runs
+the eval function against a fixed held-out batch, giving a live
+loss-vs-round readout of the run in progress.
 """
 from __future__ import annotations
 
@@ -17,36 +29,74 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
-from repro.configs import registry as creg
-from repro.models import registry as mreg
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="glm4-9b", choices=sorted(creg.ARCHS))
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--restore", default="")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+class SnapshotEvalLoop:
+    """Poll a checkpoint directory's ``LATEST`` pointer and evaluate each
+    new snapshot.
 
-    cfg = creg.get_config(args.arch, reduced=args.reduced)
-    if cfg.family == "resnet":
-        raise SystemExit("resnet20 is a classifier; nothing to decode")
-    md = mreg.get_model(cfg)
-    params = md.init(jax.random.key(args.seed))
-    if args.restore:
-        params = checkpoint.restore(args.restore, params)
+    ``params_like`` gives the pytree structure to restore into (eval-only:
+    extra snapshot entries like the server state are ignored).  ``eval_fn``
+    maps ``(params, batch) -> scalar loss``.  :meth:`poll` reloads iff the
+    pointer changed and returns True on reload; :meth:`eval_batch` scores a
+    batch against the currently-loaded params; :meth:`watch` packages the
+    poll/eval/sleep cycle.
+    """
 
+    def __init__(self, ckpt_dir: str, *, params_like, eval_fn=None):
+        self.ckpt_dir = ckpt_dir
+        self.params_like = params_like
+        self.eval_fn = eval_fn
+        self.params = None
+        self.round: int | None = None
+        self._seen: str | None = None
+
+    def poll(self) -> bool:
+        """Reload params iff the ``LATEST`` pointer names a new snapshot."""
+        path = checkpoint.latest_checkpoint(self.ckpt_dir)
+        if path is None or path == self._seen:
+            return False
+        self.params = checkpoint.restore(
+            path, {"params": self.params_like}
+        )["params"]
+        self.round = int(checkpoint.load_metadata(path).get("round", -1))
+        self._seen = path
+        return True
+
+    def eval_batch(self, batch) -> float:
+        if self.params is None:
+            raise RuntimeError("no snapshot loaded yet — poll() first")
+        if self.eval_fn is None:
+            raise RuntimeError("no eval_fn configured")
+        return float(self.eval_fn(self.params, batch))
+
+    def watch(self, batch, *, max_polls: int, interval: float = 2.0,
+              on_eval=None, sleep=time.sleep) -> list[tuple[int, float]]:
+        """Run up to ``max_polls`` poll cycles, evaluating on each new
+        snapshot.  Returns the ``(round, loss)`` history.  ``sleep`` is
+        injectable so tests can run the loop without waiting."""
+        history: list[tuple[int, float]] = []
+        for i in range(max_polls):
+            if self.poll():
+                loss = self.eval_batch(batch)
+                history.append((self.round, loss))
+                if on_eval is not None:
+                    on_eval(self.round, loss)
+            if i + 1 < max_polls:
+                sleep(interval)
+        return history
+
+
+def _decode_demo(md, cfg, params, args) -> None:  # pragma: no cover - CLI
     B, S = args.batch, args.prompt_len
     key = jax.random.key(args.seed + 1)
     batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
     if cfg.family == "audio":
         batch["frame_embeds"] = jax.random.normal(key, (B, cfg.enc_frames, cfg.d_model))
     if cfg.family == "vlm":
-        batch["img_embeds"] = jax.random.normal(key, (B, cfg.n_image_tokens, cfg.d_model))
+        batch["img_embeds"] = jax.random.normal(
+            key, (B, cfg.n_image_tokens, cfg.d_model)
+        )
 
     prefill = jax.jit(md.prefill)
     decode = jax.jit(md.decode)
@@ -68,6 +118,65 @@ def main() -> None:
           f"({B*args.new_tokens/(t2-t1):.1f} tok/s batch-aggregate)")
     for b in range(min(B, 4)):
         print(f"  request {b}: {gen[b].tolist()}")
+
+
+def main() -> None:  # pragma: no cover - CLI glue
+    from repro.configs import registry as creg
+    from repro.models import registry as mreg
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b", choices=sorted(creg.ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--restore", default="")
+    ap.add_argument("--watch", default="",
+                    help="checkpoint dir to poll for new snapshots")
+    ap.add_argument("--max-polls", type=int, default=30)
+    ap.add_argument("--poll-interval", type=float, default=2.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = creg.get_config(args.arch, reduced=args.reduced)
+    if cfg.family == "resnet":
+        raise SystemExit("resnet20 is a classifier; nothing to decode")
+    md = mreg.get_model(cfg)
+    params = md.init(jax.random.key(args.seed))
+
+    if args.watch:
+        key = jax.random.key(args.seed + 1)
+        # same split the training loader uses: draw seq+1 tokens, labels
+        # are the next-token shift (md.loss needs both keys)
+        toks = jax.random.randint(
+            key, (args.batch, args.prompt_len + 1), 0, cfg.vocab
+        )
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        loop = SnapshotEvalLoop(
+            args.watch, params_like=params, eval_fn=jax.jit(md.loss),
+        )
+        print(f"watching {args.watch} ({args.max_polls} polls, "
+              f"{args.poll_interval}s apart)")
+        loop.watch(
+            batch, max_polls=args.max_polls, interval=args.poll_interval,
+            on_eval=lambda rnd, loss: print(
+                f"round {rnd:4d} eval_loss={loss:.4f}"),
+        )
+        return
+
+    if args.restore:
+        with np.load(args.restore) as z:
+            # publish() snapshots namespace model leaves under params/
+            # (alongside rng_key + optional server state); bare trees
+            # from checkpoint.save() have no prefix
+            nested = any(k.startswith("params/") for k in z.keys())
+        if nested:
+            params = checkpoint.restore(
+                args.restore, {"params": params}
+            )["params"]
+        else:
+            params = checkpoint.restore(args.restore, params)
+    _decode_demo(md, cfg, params, args)
 
 
 if __name__ == "__main__":

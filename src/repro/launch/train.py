@@ -1,10 +1,27 @@
-"""FL training launcher (runs on the local devices; reduced configs on CPU).
+"""Continuous-training service: stream federated rounds, publish snapshots.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --reduced \
-        --rounds 50 --strategy colrel --topology ring --p-profile heterogeneous
+        --rounds 50 --engine async --delay poisson --publish-every 10 \
+        --ckpt-dir checkpoints
 
-Drives the ColRel protocol end-to-end: OPT-α weight optimization → federated
-rounds over the assigned architecture (LM-token synthetic data) → checkpoint.
+:class:`ContinuousTrainer` drives any of the round engines (per-round loop,
+epoch scan, pipelined scan, or the asynchronous staleness-weighted engine)
+over a :class:`~repro.channels.ChannelSchedule` in checkpoint-sized bursts:
+the schedule / policy / batch stream stay live across bursts (one continuous
+round stream, exactly as if a single ``run_*`` call had covered the whole
+horizon), and every ``publish_every`` rounds the full training state is
+published via :func:`repro.checkpoint.publish` with atomic latest-pointer
+rotation.  ``--rounds 0`` streams indefinitely; the serving loop
+(``repro.launch.serve --watch``) reloads the newest snapshot as it lands.
+
+Resume: :meth:`ContinuousTrainer.restore_latest` reloads params, server
+state, RNG key and round counter; :meth:`ContinuousTrainer.advance_stream`
+replays the (deterministic, seed-rebuilt) schedule / policy / batch stream
+to the restored round.  For the synchronous engines the resumed trajectory
+is bitwise-equal to the uninterrupted run (``tests/test_resume.py``); the
+async engine restarts with an empty arrival buffer (in-flight updates are
+lost on a crash — the production semantic), so its resumed stream is
+statistically, not bitwise, continuous.
 """
 from __future__ import annotations
 
@@ -12,22 +29,182 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint
-from repro.configs import registry as creg
-from repro.core import connectivity, opt_alpha, topology
-from repro.core.aggregation import ServerOpt
-from repro.data.loader import FederatedLoader
-from repro.data.partition import iid_partition, sort_and_partition
-from repro.data.synthetic import lm_tokens
-from repro.fl.simulator import FLSimulator
-from repro.models import registry as mreg
-from repro.optim.sgd import ClientOpt
+from repro.channels.delay import make_delays
+from repro.fl.async_engine import AsyncRoundEngine
+from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
+
+ENGINES = ("loop", "scan", "pipelined", "async")
+
+
+class ContinuousTrainer:
+    """Burst-wise driver of one engine over one live channel stream.
+
+    ``engine`` ∈ {loop, scan, pipelined, async}.  The trainer owns the
+    training state (params, server state, RNG key, round counter); the
+    caller owns the stream (``schedule``, ``policy``, ``next_batch``) —
+    they are stateful and advance only when rounds run, which is what makes
+    the burst sequence one continuous trajectory.
+
+    ``publish_every > 0`` + ``ckpt_dir`` publishes the full training state
+    every N rounds (and after the final burst) with atomic latest-pointer
+    rotation, keeping the newest ``keep`` snapshots.
+    """
+
+    def __init__(self, sim, *, schedule, next_batch, lr, policy=None,
+                 engine: str = "loop", chunk: int = 32, delays=None,
+                 staleness_decay: float = 0.8, buffer_k: int = 0,
+                 ckpt_dir: str | None = None, publish_every: int = 0,
+                 keep: int = 3, metadata: dict | None = None, tracer=None):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (known: {ENGINES})")
+        self.sim = sim
+        self.schedule = schedule
+        self.next_batch = next_batch
+        self.lr = lr
+        self.policy = policy
+        self.engine_name = engine
+        self.ckpt_dir = ckpt_dir
+        self.publish_every = publish_every
+        self.keep = keep
+        self.metadata = metadata or {}
+        if engine == "scan":
+            self._engine = EpochScanEngine(sim, chunk=chunk, tracer=tracer)
+        elif engine == "pipelined":
+            self._engine = PipelinedScanEngine(sim, chunk=chunk, tracer=tracer)
+        elif engine == "async":
+            self._engine = AsyncRoundEngine(
+                sim, delays=delays, staleness_decay=staleness_decay,
+                buffer_k=buffer_k, tracer=tracer,
+            )
+        else:
+            self._engine = None
+        self._started = False
+        self.params = None
+        self.server_state = None
+        self.key = None
+        self.round = 0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def init(self, params, key) -> None:
+        """Fresh training state at round 0."""
+        self.params = params
+        self.server_state = self.sim.init_server_state(params)
+        self.key = key
+        self.round = 0
+        self._started = False
+
+    def restore_latest(self) -> bool:
+        """Reload the newest published snapshot (params, server state, RNG
+        key, round counter).  Call :meth:`init` first — the restore
+        validates against the initialized structures.  Returns False when
+        no snapshot exists.  The stream is *not* rewound: follow up with
+        :meth:`advance_stream` to replay schedule/policy/batches."""
+        if self.params is None:
+            raise RuntimeError("call init() before restore_latest()")
+        if self.ckpt_dir is None:
+            return False
+        path = checkpoint.latest_checkpoint(self.ckpt_dir)
+        if path is None:
+            return False
+        params, server_state, key, rnd = checkpoint.restore_training_state(
+            path, params_like=self.params,
+            server_state_like=self.server_state,
+        )
+        self.params, self.server_state = params, server_state
+        self.key, self.round = key, rnd
+        self._started = False
+        return True
+
+    def advance_stream(self, rounds: int | None = None) -> None:
+        """Replay ``rounds`` (default: the restored round counter) through
+        the schedule, policy and batch stream without training — the
+        deterministic fast-forward that aligns a seed-rebuilt stream with a
+        restored state."""
+        for state in self.schedule.rounds(self.round if rounds is None else rounds):
+            if self.policy is not None:
+                self.policy.relay_matrix(state)
+            self.next_batch()
+
+    # -------------------------------------------------------------- running
+
+    def run(self, rounds: int, *, on_publish=None, stop=None) -> dict:
+        """Run ``rounds`` more rounds in publish-sized bursts.  Returns the
+        per-round metrics (host numpy, concatenated over bursts).
+        ``on_publish(path, round)`` fires after each snapshot;``stop()`` is
+        polled between bursts (True ⇒ return early, after a final
+        publish)."""
+        if self.params is None:
+            raise RuntimeError("call init() (and optionally restore) first")
+        burst = self.publish_every if self.publish_every > 0 else rounds
+        collected: list[dict] = []
+        remaining = rounds
+        while remaining > 0:
+            n = min(burst, remaining)
+            metrics = self._run_burst(n)
+            collected.append(
+                {k: np.asarray(v) for k, v in metrics.items()}
+            )
+            remaining -= n
+            self.round += n
+            if self.publish_every > 0:
+                self._publish(on_publish)
+            if stop is not None and stop():
+                break
+        if self.publish_every == 0 and self.ckpt_dir is not None:
+            self._publish(on_publish)
+        if not collected:
+            return {}
+        return {
+            k: np.concatenate([c[k] for c in collected])
+            for k in collected[0]
+        }
+
+    def _run_burst(self, rounds: int) -> dict:
+        if self.engine_name == "loop":
+            out = run_rounds_loop(
+                self.sim, self.key, self.params, self.server_state,
+                schedule=self.schedule, rounds=rounds,
+                next_batch=self.next_batch, lr=self.lr, policy=self.policy,
+            )
+        elif self.engine_name == "async":
+            out = self._engine.run_schedule(
+                self.key, self.params, self.server_state,
+                schedule=self.schedule, rounds=rounds,
+                next_batch=self.next_batch, lr=self.lr, policy=self.policy,
+                reset=not self._started,
+            )
+        else:
+            out = self._engine.run_schedule(
+                self.key, self.params, self.server_state,
+                schedule=self.schedule, rounds=rounds,
+                next_batch=self.next_batch, lr=self.lr, policy=self.policy,
+            )
+        self.params, self.server_state, metrics, self.key = out
+        self._started = True
+        return metrics
+
+    def _publish(self, on_publish) -> None:
+        if self.ckpt_dir is None:
+            return
+        path = checkpoint.publish(
+            self.ckpt_dir, params=self.params, server_state=self.server_state,
+            key=self.key, round=self.round, keep=self.keep,
+            metadata=dict(self.metadata, engine=self.engine_name),
+        )
+        if on_publish is not None:
+            on_publish(path, self.round)
+
+
+# ------------------------------------------------------------------ the CLI
 
 
 def build_topology(name: str, n: int, k: int):
+    from repro.core import topology
+
     if name == "ring":
         return topology.ring(n, k)
     if name == "fct":
@@ -40,6 +217,8 @@ def build_topology(name: str, n: int, k: int):
 
 
 def build_connectivity(profile: str, n: int, p_hom: float):
+    from repro.core import connectivity
+
     if profile == "homogeneous":
         return connectivity.homogeneous(n, p_hom)
     if profile == "paper" and n == 10:
@@ -47,19 +226,38 @@ def build_connectivity(profile: str, n: int, p_hom: float):
     return connectivity.heterogeneous_profile(n)
 
 
-def main() -> None:
+def main() -> None:  # pragma: no cover - CLI glue over ContinuousTrainer
+    from repro import channels
+    from repro.configs import registry as creg
+    from repro.core import opt_alpha
+    from repro.core.aggregation import ServerOpt
+    from repro.data.loader import FederatedLoader
+    from repro.data.partition import iid_partition, sort_and_partition
+    from repro.data.synthetic import lm_tokens
+    from repro.fl.simulator import FLSimulator
+    from repro.models import registry as mreg
+    from repro.optim.sgd import ClientOpt
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b", choices=sorted(creg.ARCHS))
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--rounds", type=int, default=50)
+    ap.add_argument("--rounds", type=int, default=50,
+                    help="0 = stream indefinitely (Ctrl-C to stop)")
     ap.add_argument("--clients", type=int, default=10)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--local-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=0.1)
-    ap.add_argument("--strategy", default="colrel",
-                    choices=["colrel", "colrel_fused", "fedavg_blind",
-                             "fedavg_nonblind", "no_dropout"])
+    ap.add_argument("--strategy", default="colrel_fused",
+                    choices=["colrel_fused", "fedavg_blind", "no_dropout"])
+    ap.add_argument("--engine", default="loop", choices=list(ENGINES))
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--delay", default="none",
+                    choices=["none", "poisson", "geometric"])
+    ap.add_argument("--delay-rate", type=float, default=1.0)
+    ap.add_argument("--delay-max", type=int, default=8)
+    ap.add_argument("--staleness-decay", type=float, default=0.8)
+    ap.add_argument("--buffer-k", type=int, default=0)
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--topology-k", type=int, default=1)
     ap.add_argument("--p-profile", default="heterogeneous",
@@ -68,7 +266,11 @@ def main() -> None:
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--server-momentum", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--publish-every", type=int, default=0)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest snapshot in --ckpt-dir")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()
 
@@ -95,25 +297,56 @@ def main() -> None:
         client_opt=ClientOpt(kind="sgd", weight_decay=1e-4),
         server_opt=ServerOpt(momentum=args.server_momentum),
     )
-    params = md.init(jax.random.key(args.seed))
-    state = sim.init_server_state(params)
-    key = jax.random.key(args.seed + 1)
+    trainer = ContinuousTrainer(
+        sim,
+        schedule=channels.StaticChannel(adj, conn.p),
+        next_batch=lambda: loader.round_batch(
+            args.local_steps, args.local_batch, lm=True
+        ),
+        lr=args.lr,
+        engine=args.engine,
+        chunk=args.chunk,
+        delays=make_delays(args.delay, n, rate=args.delay_rate,
+                           max_delay=args.delay_max, seed=args.seed + 11),
+        staleness_decay=args.staleness_decay,
+        buffer_k=args.buffer_k,
+        ckpt_dir=args.ckpt_dir or None,
+        publish_every=args.publish_every,
+        keep=args.keep,
+        metadata={"arch": args.arch, "strategy": args.strategy},
+    )
+    trainer.init(md.init(jax.random.key(args.seed)),
+                 jax.random.key(args.seed + 1))
+    if args.resume and trainer.restore_latest():
+        print(f"resumed from round {trainer.round}; replaying the stream")
+        trainer.advance_stream()
+
     t0 = time.time()
-    for r in range(args.rounds):
-        key, sub = jax.random.split(key)
-        batch = loader.round_batch(args.local_steps, args.local_batch, lm=True)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        params, state, m = sim.run_round(sub, params, state, batch, args.lr)
-        if r % args.log_every == 0 or r == args.rounds - 1:
-            print(f"round {r:4d} loss={float(m['loss']):.4f} "
-                  f"tau={np.asarray(m['tau']).astype(int)} "
-                  f"|Δ|={float(m['delta_norm']):.3f} "
-                  f"({time.time()-t0:.1f}s)")
-    if args.checkpoint:
-        checkpoint.save(args.checkpoint, params,
-                        metadata={"arch": args.arch, "rounds": args.rounds,
-                                  "strategy": args.strategy})
-        print(f"saved {args.checkpoint}")
+
+    def log_burst(metrics, base_round):
+        losses = np.asarray(metrics["loss"])
+        for i, loss in enumerate(losses):
+            r = base_round + i
+            if r % args.log_every == 0 or i == len(losses) - 1:
+                print(f"round {r:4d} loss={float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+
+    def on_publish(path, rnd):
+        print(f"published {path} @ round {rnd}")
+
+    try:
+        if args.rounds > 0:
+            base = trainer.round
+            metrics = trainer.run(args.rounds, on_publish=on_publish)
+            log_burst(metrics, base)
+        else:
+            burst = args.publish_every or args.log_every
+            while True:
+                base = trainer.round
+                metrics = trainer.run(burst, on_publish=on_publish)
+                log_burst(metrics, base)
+    except KeyboardInterrupt:
+        print(f"interrupted at round {trainer.round}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,311 @@
+"""Asynchronous round engine (staleness-weighted aggregation) + the delay
+processes feeding it.
+
+The acceptance invariant: at delay 0 the async engine is **bit-identical**
+to ``run_rounds_loop`` — params, server state, per-round metrics and the
+final RNG key — across a churned, correlated-shadowing schedule (the
+hardest synchronous setting the repo has).  On top of that: delay-stream
+determinism, freshest-k buffer selection, never-arrived rounds applying a
+zero increment, supersession of stale in-flight updates, strategy refusal,
+and burst continuation (``reset=False``) matching one uninterrupted run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels
+from repro.channels.delay import (
+    DelayProcess,
+    GeometricDelays,
+    PoissonDelays,
+    ZeroDelays,
+    make_delays,
+)
+from repro.core import topology
+from repro.core.aggregation import ServerOpt
+from repro.fl.async_engine import AsyncRoundEngine, select_freshest
+from repro.fl.engine import run_rounds_loop
+from repro.fl.simulator import FLSimulator
+
+N = 6
+DIM = 4
+
+
+def _loss_fn(params, batch):
+    diff = params["x"][None, :] - batch["c"]
+    return 0.5 * jnp.mean(jnp.sum(diff ** 2, axis=-1))
+
+
+def _params0():
+    return {"x": jnp.ones((DIM,))}
+
+
+def _batch_stream(seed=42):
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        return {"c": rng.standard_normal((N, 2, 4, DIM)).astype(np.float32)}
+
+    return next_batch
+
+
+def _churn_shadow_schedule(seed=3):
+    """Rotating-cohort churn over a correlated-shadowing D2D graph."""
+    field = channels.ShadowingField(
+        channels.circle_positions(N), corr_length=0.4, rho=0.9, sigma=1.0,
+        seed=seed)
+    link = channels.ShadowedLinkProcess(
+        topology.ring(N, 2), field, threshold=1.0)
+    member = channels.RotatingCohorts(N, n_cohorts=3, hold=5)
+    return channels.ChurnSchedule(
+        membership=member, link_process=link,
+        p=np.linspace(0.3, 0.9, N), adj_every=3, p_every=4)
+
+
+def _static_schedule():
+    return channels.StaticChannel(
+        topology.ring(N, 2), np.linspace(0.3, 0.9, N))
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _run(engine_kind, *, rounds=17, delays=None, schedule_fn=_churn_shadow_schedule,
+         strategy="colrel_fused", momentum=0.5, seed=42, **engine_kw):
+    next_batch = _batch_stream(seed)
+    sim = FLSimulator(
+        _loss_fn, n_clients=N, strategy=strategy,
+        server_opt=ServerOpt(momentum=momentum))
+    params = _params0()
+    ss = sim.init_server_state(params)
+    key = jax.random.key(7)
+    policy = (
+        channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+        if strategy == "colrel_fused" else None)
+    schedule = schedule_fn()
+    if engine_kind == "loop":
+        return run_rounds_loop(
+            sim, key, params, ss, schedule=schedule, rounds=rounds,
+            next_batch=next_batch, lr=0.1, policy=policy)
+    engine = AsyncRoundEngine(sim, delays=delays, **engine_kw)
+    return engine.run_schedule(
+        key, params, ss, schedule=schedule, rounds=rounds,
+        next_batch=next_batch, lr=0.1, policy=policy)
+
+
+# -------------------------------------------------------------- delay procs
+
+
+def test_delay_processes_deterministic_and_reset():
+    for proc in (PoissonDelays(8, rate=1.5, seed=4),
+                 GeometricDelays(8, mean=2.0, seed=4)):
+        first = [proc.sample() for _ in range(5)]
+        proc.reset()
+        replay = [proc.sample() for _ in range(5)]
+        for a, b in zip(first, replay):
+            assert np.array_equal(a, b)
+        assert any(d.max() > 0 for d in first)  # genuinely nonzero stream
+
+
+def test_delay_samples_clipped_and_typed():
+    proc = PoissonDelays(16, rate=50.0, max_delay=3, seed=0)
+    for _ in range(4):
+        d = proc.sample()
+        assert d.dtype == np.int64 and d.shape == (16,)
+        assert d.min() >= 0 and d.max() <= 3
+
+
+def test_zero_delays_and_factory():
+    assert np.array_equal(ZeroDelays(5).sample(), np.zeros(5, np.int64))
+    assert isinstance(make_delays("none", 5), ZeroDelays)
+    assert isinstance(make_delays("poisson", 5), PoissonDelays)
+    assert isinstance(make_delays("geometric", 5), GeometricDelays)
+    with pytest.raises(ValueError):
+        make_delays("uniform", 5)
+
+
+def test_geometric_delays_support_includes_zero():
+    d = np.concatenate(
+        [GeometricDelays(64, mean=0.5, seed=1).sample() for _ in range(8)])
+    assert d.min() == 0  # support {0, 1, ...}, not the raw geometric {1, ...}
+
+
+# ------------------------------------------------------- freshest-k buffer
+
+
+def test_select_freshest_caps_and_orders():
+    stale = np.array([3, 0, 2, 0, 5, 1])
+    elig = np.ones(6, bool)
+    sel = select_freshest(stale, elig, 3)
+    # two s=0 slots, then the s=1 slot; index breaks the s=0 tie
+    assert np.array_equal(sel, [False, True, False, True, False, True])
+    # k=0 and k >= eligible count select everything eligible
+    assert np.array_equal(select_freshest(stale, elig, 0), elig)
+    assert np.array_equal(select_freshest(stale, elig, 99), elig)
+    # ineligible slots never selected, even when fresh
+    elig2 = np.array([True, False, True, True, True, True])
+    assert not select_freshest(stale, elig2, 3)[1]
+
+
+# --------------------------------------------- delay-0 bitwise (acceptance)
+
+
+@pytest.mark.parametrize("strategy", ["colrel_fused", "fedavg_blind"])
+def test_delay0_bitwise_identical_to_loop_under_churn_shadowing(strategy):
+    """The tentpole contract: ZeroDelays ⇒ the async engine reproduces the
+    per-round loop bit-for-bit — params, server momentum, every per-round
+    metric and the final RNG key — under rotating churn + correlated
+    shadowing."""
+    lp, ls, lm, lk = _run("loop", strategy=strategy)
+    ap, as_, am, ak = _run("async", delays=ZeroDelays(N), strategy=strategy)
+    assert _tree_equal(lp, ap)
+    assert _tree_equal(ls, as_)
+    assert _tree_equal(lm, am)
+    assert np.array_equal(jax.random.key_data(lk), jax.random.key_data(ak))
+
+
+def test_delay0_bitwise_on_static_channel_full_sync_fast_path():
+    """No churn + delay 0 exercises the static-1/n fast path (the compiled
+    constant the synchronous active=None program uses)."""
+    lp, _, lm, _ = _run("loop", schedule_fn=_static_schedule)
+    ap, _, am, _ = _run(
+        "async", delays=ZeroDelays(N), schedule_fn=_static_schedule)
+    assert _tree_equal(lp, ap)
+    assert _tree_equal(lm, am)
+
+
+# ----------------------------------------------------------- delayed runs
+
+
+def test_nonzero_delay_diverges_but_stays_finite():
+    lp, _, _, _ = _run("loop", schedule_fn=_static_schedule)
+    ap, _, am, _ = _run(
+        "async", delays=PoissonDelays(N, rate=1.0, seed=5),
+        schedule_fn=_static_schedule)
+    assert not _tree_equal(lp, ap)  # buffered staleness really changes math
+    assert np.isfinite(np.asarray(am["loss"])).all()
+    assert np.isfinite(np.asarray(jax.tree.leaves(ap)[0])).all()
+
+
+def test_never_arrived_rounds_apply_zero_increment():
+    """Until the first arrival lands, the aggregate is exactly zero: params
+    stay bit-identical to the broadcast model."""
+
+    class FixedDelay(DelayProcess):
+        def _draw(self, rng):
+            return np.full(self.n, 3)
+
+    next_batch = _batch_stream()
+    sim = FLSimulator(_loss_fn, n_clients=N, strategy="fedavg_blind")
+    params = _params0()
+    engine = AsyncRoundEngine(sim, delays=FixedDelay(N, max_delay=8))
+    seen = []
+    engine.run_schedule(
+        jax.random.key(0), params, sim.init_server_state(params),
+        schedule=_static_schedule(), rounds=5, next_batch=next_batch,
+        lr=0.1, on_round=lambda r, p: seen.append(np.asarray(p["x"])))
+    # rounds 0..2 aggregate an empty buffer (first arrivals land at t=3)
+    for r in range(3):
+        assert np.array_equal(seen[r], np.asarray(params["x"]))
+    assert not np.array_equal(seen[3], np.asarray(params["x"]))
+
+
+def test_newest_arrival_supersedes_older_in_flight():
+    """Client updates from rounds 0 and 1 both landing at t=2 keep only the
+    round-1 row (newest source wins)."""
+
+    class TwoThenZero(DelayProcess):
+        def _draw(self, rng):
+            return np.full(self.n, 2 if self.round == 0 else 1)
+
+    sim = FLSimulator(_loss_fn, n_clients=N, strategy="fedavg_blind")
+    params = _params0()
+    engine = AsyncRoundEngine(sim, delays=TwoThenZero(N))
+    engine.run_schedule(
+        jax.random.key(0), params, sim.init_server_state(params),
+        schedule=_static_schedule(), rounds=3, next_batch=_batch_stream(),
+        lr=0.1)
+    assert np.array_equal(engine._held_round, np.full(N, 1))
+
+
+def test_buffer_k_truncates_even_at_delay0():
+    full = _run("async", delays=ZeroDelays(N), schedule_fn=_static_schedule)
+    capped = _run("async", delays=ZeroDelays(N),
+                  schedule_fn=_static_schedule, buffer_k=3)
+    assert not _tree_equal(full[0], capped[0])
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_unsupported_strategies_refused():
+    for strategy in ("colrel", "fedavg_nonblind"):
+        sim = FLSimulator(_loss_fn, n_clients=N, strategy=strategy)
+        with pytest.raises(ValueError, match="supports strategies"):
+            AsyncRoundEngine(sim)
+
+
+def test_constructor_validation():
+    sim = FLSimulator(_loss_fn, n_clients=N, strategy="colrel_fused")
+    with pytest.raises(ValueError, match="staleness_decay"):
+        AsyncRoundEngine(sim, staleness_decay=0.0)
+    with pytest.raises(ValueError, match="buffer_k"):
+        AsyncRoundEngine(sim, buffer_k=-1)
+    with pytest.raises(ValueError, match="delay process"):
+        AsyncRoundEngine(sim, delays=ZeroDelays(N + 1))
+
+
+# ------------------------------------------------------------ continuation
+
+
+def test_burst_continuation_matches_uninterrupted_run():
+    """Two reset=False bursts through one engine equal one uninterrupted
+    run bit-for-bit — delays, pending arrivals and the held buffer all
+    continue across the burst boundary (the ContinuousTrainer contract)."""
+    rounds = 12
+
+    def run_bursts(splits):
+        next_batch = _batch_stream()
+        sim = FLSimulator(_loss_fn, n_clients=N, strategy="colrel_fused",
+                          server_opt=ServerOpt(momentum=0.5))
+        params = _params0()
+        ss = sim.init_server_state(params)
+        key = jax.random.key(7)
+        policy = channels.AdaptiveOptAlpha(sweeps=20, warm_sweeps=8)
+        schedule = _churn_shadow_schedule()
+        engine = AsyncRoundEngine(
+            sim, delays=PoissonDelays(N, rate=1.0, seed=5))
+        first = True
+        for r in splits:
+            params, ss, _, key = engine.run_schedule(
+                key, params, ss, schedule=schedule, rounds=r,
+                next_batch=next_batch, lr=0.1, policy=policy,
+                reset=first)
+            first = False
+        return params, ss, key
+
+    p1, s1, k1 = run_bursts([rounds])
+    p2, s2, k2 = run_bursts([5, rounds - 5])
+    assert _tree_equal(p1, p2)
+    assert _tree_equal(s1, s2)
+    assert np.array_equal(jax.random.key_data(k1), jax.random.key_data(k2))
+
+
+def test_trace_count_stays_bounded_across_rounds():
+    """The per-round host loop reuses four compiled programs — no retrace
+    as the round index, buffer contents or staleness pattern change."""
+    next_batch = _batch_stream()
+    sim = FLSimulator(_loss_fn, n_clients=N, strategy="fedavg_blind")
+    params = _params0()
+    engine = AsyncRoundEngine(
+        sim, delays=GeometricDelays(N, mean=1.0, seed=2), buffer_k=4)
+    engine.run_schedule(
+        jax.random.key(0), params, sim.init_server_state(params),
+        schedule=_static_schedule(), rounds=20, next_batch=next_batch,
+        lr=0.1)
+    assert engine.trace_count <= 4

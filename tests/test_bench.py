@@ -150,7 +150,12 @@ def test_report_schema_and_roundtrip(tmp_path):
     rep = report_lib.make_report(TINY, _fake_result())
     assert rep["schema_version"] == report_lib.SCHEMA_VERSION
     assert rep["scenario"] == "tiny_test"
-    assert rep["spec"] == dataclasses.asdict(TINY)
+    # the spec lands verbatim, with tuples as JSON-round-trippable lists
+    assert rep["spec"] == {
+        k: list(v) if isinstance(v, tuple) else v
+        for k, v in dataclasses.asdict(TINY).items()
+    }
+    assert rep["spec"]["engines"] == list(TINY.engines)
     assert set(rep["engines"]) == {"loop", "scan"}
     path = report_lib.write_report(rep, tmp_path)
     assert path.name == "BENCH_tiny_test.json"

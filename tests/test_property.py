@@ -7,7 +7,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import opt_alpha, relay, topology
+from repro.core import aggregation, opt_alpha, relay, topology
+from repro.fl import async_engine
 from repro.utils import stacked_ravel, tree_dot, tree_norm, tree_ravel, tree_unravel
 
 MAX_N = 12
@@ -232,6 +233,142 @@ def test_stacked_ravel_rows_are_per_client_ravels(tree, n):
         assert client_spec == spec
         assert np.array_equal(np.asarray(buf[i]), np.asarray(row))
         assert _leaves_bit_equal(client, tree_unravel(spec, buf[i]))
+
+
+# ------------------------------------------------------------------------
+# Async staleness weighting (ISSUE 10): the pure weight math of
+# repro.fl.async_engine, over random channels, churn masks and delays
+# ------------------------------------------------------------------------
+
+
+@st.composite
+def staleness_setting(draw):
+    """A masked channel draw plus per-slot staleness, a decay and a seed."""
+    p, adj, active = draw(masked_setting())
+    n = p.shape[0]
+    staleness = np.asarray(draw(st.lists(
+        st.integers(0, 12), min_size=n, max_size=n)))
+    decay = draw(st.floats(0.05, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return p, adj, active, staleness, decay, seed
+
+
+@given(staleness_setting())
+@settings(max_examples=30, deadline=None)
+def test_staleness_discounts_bounded_monotone_and_exact_at_zero(setting):
+    """decay**s stays in (0, 1], never increases with staleness, and a fresh
+    slot (s=0) gets *exactly* the 1.0 identity weight — the bit the delay-0
+    parity contract rests on."""
+    _, _, _, staleness, decay, _ = setting
+    d = async_engine.staleness_discounts(staleness, decay=decay)
+    assert d.dtype == np.float32
+    assert (d > 0.0).all() and (d <= 1.0).all()
+    assert np.all(d[staleness == 0] == np.float32(1.0))
+    order = np.argsort(staleness, kind="stable")
+    assert np.all(np.diff(d[order]) <= 1e-7)
+
+
+@given(staleness_setting())
+@settings(max_examples=30, deadline=None)
+def test_staleness_weights_form_a_simplex_over_selected_slots(setting):
+    """The renormalized weights are nonnegative, exactly zero wherever the
+    discount-mask vector is zero, and sum to one whenever any slot is
+    selected (the all-zero vector maps to all-zero weights)."""
+    _, _, active, staleness, decay, seed = setting
+    rng = np.random.default_rng(seed)
+    selected = rng.random(active.shape[0]) < 0.7
+    m = async_engine.staleness_discounts(staleness, decay=decay)
+    m = m * (selected & active)
+    w = np.asarray(async_engine.staleness_weights(m))
+    assert (w >= 0.0).all()
+    assert np.all(w[m == 0.0] == 0.0)
+    if m.sum() > 0:
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    else:
+        assert np.all(w == 0.0)
+
+
+@given(masked_setting())
+@settings(max_examples=25, deadline=None)
+def test_staleness_weights_reduce_to_active_weight_at_delay0(setting):
+    """At delay 0 every live slot carries discount exactly 1.0, so the
+    renormalized weights are bit-equal to the synchronous blind weight
+    1/n_active of ``aggregation.active_weight`` on the live slots and
+    exactly zero on departed ones."""
+    _, _, active = setting
+    m = active.astype(np.float32)
+    w = np.asarray(async_engine.staleness_weights(m))
+    w_sync = np.float32(aggregation.active_weight(jnp.asarray(active), n=len(active)))
+    assert np.all(w[active] == w_sync)
+    assert np.all(w[~active] == 0.0)
+
+
+@given(masked_setting(), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_async_coefficients_match_sync_fused_at_delay0(setting, seed):
+    """With every slot fresh (m == active) the async coefficient vector is
+    bitwise the synchronous fused path's w·(τᵀA) under the same churn
+    masking — on the dense and the sparse edge-list operand alike."""
+    p, adj, active = setting
+    n = len(p)
+    rng = np.random.default_rng(seed)
+    tau = (rng.random(n) < p).astype(np.float32) * active
+    A = opt_alpha.optimize_masked(p, adj, active, sweeps=15).A
+    rows, cols = np.nonzero(A)
+    operands = {
+        "einsum": jnp.asarray(A, jnp.float32),
+        "segment": relay.EdgeRelay(
+            rows=jnp.asarray(rows, jnp.int32),
+            cols=jnp.asarray(cols, jnp.int32),
+            vals=jnp.asarray(A[rows, cols], jnp.float32),
+        ),
+    }
+    m = active.astype(np.float32)
+    a = jnp.asarray(active, jnp.float32)
+    for backend, op in operands.items():
+        got = async_engine.async_coefficients(
+            op, tau, m, n=n, active=a, backend=backend)
+        base = relay.fused_coefficients(
+            relay.mask_relay_matrix(op, a), jnp.asarray(tau) * a)
+        want = aggregation.active_weight(a, n=n) * base
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(staleness_setting())
+@settings(max_examples=10, deadline=None)
+def test_zero_mass_slots_contribute_exactly_zero_on_all_backends(setting):
+    """A departed or never-arrived slot (m == 0) must contribute *exactly*
+    zero to the aggregate: its buffer row is poisoned with huge finite
+    values, and the increment is bit-identical to the one computed with the
+    row zeroed — on all four relay backends."""
+    p, adj, active, staleness, decay, seed = setting
+    n = len(p)
+    rng = np.random.default_rng(seed)
+    arrived = rng.random(n) < 0.6
+    m = async_engine.staleness_discounts(staleness, decay=decay)
+    m = m * (arrived & active)
+    tau = (rng.random(n) < p).astype(np.float32)
+    A = opt_alpha.optimize_masked(p, adj, active, sweeps=10).A
+    rows, cols = np.nonzero(A)
+    edge = relay.EdgeRelay(
+        rows=jnp.asarray(rows, jnp.int32),
+        cols=jnp.asarray(cols, jnp.int32),
+        vals=jnp.asarray(A[rows, cols], jnp.float32),
+    )
+    buf = rng.standard_normal((n, 32)).astype(np.float32)
+    poisoned = buf.copy()
+    poisoned[m == 0.0] = 1e30
+    clean = buf.copy()
+    clean[m == 0.0] = 0.0
+    a = jnp.asarray(active, jnp.float32)
+    for backend in ("einsum", "segment", "pallas", "pallas_fused"):
+        op = edge if backend == "segment" else jnp.asarray(A, jnp.float32)
+        got = async_engine.async_increment_flat(
+            op, tau, m, jnp.asarray(poisoned), n=n, active=a, backend=backend)
+        want = async_engine.async_increment_flat(
+            op, tau, m, jnp.asarray(clean), n=n, active=a, backend=backend)
+        assert np.isfinite(np.asarray(got)).all(), backend
+        assert np.array_equal(np.asarray(got), np.asarray(want)), backend
 
 
 @given(random_pytree(), st.integers(0, 2**31 - 1))

@@ -1,0 +1,195 @@
+"""Engine-resume integration: checkpoint mid-run, restore, continue — the
+resumed trajectory must be **bitwise-equal** to the uninterrupted one.
+
+The recipe under test (documented in ``repro.checkpoint.io``): save the full
+training state (params, server momentum, RNG key, round counter) at round R,
+then in a "fresh process" rebuild the schedule / policy / batch stream from
+their seeds, advance them R rounds, restore, and continue.  Checked for the
+per-round loop and both scan engines, over a churned multi-epoch schedule
+with a momentum-carrying server optimizer.  Plus the torn-write test: a
+crash mid-``publish`` must leave the previous snapshot loadable and the
+``LATEST`` pointer untouched.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import channels, checkpoint
+from repro.core import topology
+from repro.core.aggregation import ServerOpt
+from repro.fl.engine import EpochScanEngine, PipelinedScanEngine, run_rounds_loop
+from repro.fl.simulator import FLSimulator
+
+N = 6
+DIM = 4
+HALF = 9  # rounds per half; 2*HALF spans several channel epochs
+
+
+def _loss_fn(params, batch):
+    diff = params["x"][None, :] - batch["c"]
+    return 0.5 * jnp.mean(jnp.sum(diff ** 2, axis=-1))
+
+
+def _stream(seed=42):
+    rng = np.random.default_rng(seed)
+
+    def next_batch():
+        return {"c": rng.standard_normal((N, 2, 4, DIM)).astype(np.float32)}
+
+    return next_batch
+
+
+def _schedule(seed=3):
+    link = channels.MarkovLinkProcess(
+        topology.ring(N, 2), p_up_to_down=0.4, p_down_to_up=0.6, seed=seed)
+    member = channels.RotatingCohorts(N, n_cohorts=3, hold=5)
+    return channels.ChurnSchedule(
+        membership=member, link_process=link,
+        p=np.linspace(0.3, 0.9, N), adj_every=3, p_every=3)
+
+
+def _sim():
+    return FLSimulator(
+        _loss_fn, n_clients=N, strategy="colrel_fused",
+        server_opt=ServerOpt(momentum=0.9))
+
+
+def _policy():
+    return channels.AdaptiveOptAlpha(sweeps=15, warm_sweeps=6)
+
+
+def _drive(engine_name, sim, key, params, ss, *, schedule, rounds,
+           next_batch, policy):
+    if engine_name == "loop":
+        return run_rounds_loop(
+            sim, key, params, ss, schedule=schedule, rounds=rounds,
+            next_batch=next_batch, lr=0.1, policy=policy)
+    cls = EpochScanEngine if engine_name == "scan" else PipelinedScanEngine
+    return cls(sim, chunk=4).run_schedule(
+        key, params, ss, schedule=schedule, rounds=rounds,
+        next_batch=next_batch, lr=0.1, policy=policy)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+@pytest.mark.parametrize("engine_name", ["loop", "scan", "pipelined"])
+def test_resumed_trajectory_bitwise_equals_uninterrupted(engine_name, tmp_path):
+    params0 = {"x": jnp.ones((DIM,))}
+
+    # --- reference: one uninterrupted run over both halves
+    sim = _sim()
+    ref = _drive(
+        engine_name, sim, jax.random.key(7), params0,
+        sim.init_server_state(params0), schedule=_schedule(),
+        rounds=2 * HALF, next_batch=_stream(), policy=_policy())
+    ref_params, ref_ss, ref_metrics, ref_key = ref
+
+    # --- first half + checkpoint
+    sim1 = _sim()
+    stream1 = _stream()
+    p1, s1, _, k1 = _drive(
+        engine_name, sim1, jax.random.key(7), params0,
+        sim1.init_server_state(params0), schedule=_schedule(),
+        rounds=HALF, next_batch=stream1, policy=_policy())
+    path = str(tmp_path / "mid.npz")
+    checkpoint.save_training_state(
+        path, params=p1, server_state=s1, key=k1, round=HALF)
+
+    # --- "fresh process": rebuild everything from seeds, advance to HALF
+    sim2 = _sim()
+    schedule2 = _schedule()
+    policy2 = _policy()
+    stream2 = _stream()
+    for state in schedule2.rounds(HALF):
+        policy2.relay_matrix(state)  # warm the policy exactly as the run did
+        stream2()  # replay the consumed batches
+    params_like = {"x": jnp.zeros((DIM,))}
+    rp, rs, rk, rnd = checkpoint.restore_training_state(
+        path, params_like=params_like,
+        server_state_like=sim2.server_opt.init(params_like))
+    assert rnd == HALF
+    got = _drive(
+        engine_name, sim2, rk, rp, rs, schedule=schedule2, rounds=HALF,
+        next_batch=stream2, policy=policy2)
+    got_params, got_ss, got_metrics, got_key = got
+
+    assert _tree_equal(ref_params, got_params)
+    assert _tree_equal(ref_ss, got_ss)  # server momentum included
+    # the resumed metrics are the reference's second half, bit for bit
+    second_half = jax.tree.map(lambda x: x[HALF:], ref_metrics)
+    assert _tree_equal(second_half, got_metrics)
+    assert np.array_equal(
+        jax.random.key_data(ref_key), jax.random.key_data(got_key))
+
+
+def test_momentum_free_snapshot_round_trips_none_server_state(tmp_path):
+    params = {"x": jnp.arange(4.0)}
+    path = str(tmp_path / "nomom.npz")
+    checkpoint.save_training_state(
+        path, params=params, server_state=None, key=jax.random.key(3), round=5)
+    rp, rs, rk, rnd = checkpoint.restore_training_state(
+        path, params_like={"x": jnp.zeros(4)})
+    assert rs is None and rnd == 5
+    assert _tree_equal(params, rp)
+    assert np.array_equal(
+        jax.random.key_data(jax.random.key(3)), jax.random.key_data(rk))
+    # a momentum-carrying snapshot refuses restore without the like tree
+    path2 = str(tmp_path / "mom.npz")
+    checkpoint.save_training_state(
+        path2, params=params, server_state={"x": jnp.zeros(4)},
+        key=jax.random.key(3), round=5)
+    with pytest.raises(ValueError, match="server-optimizer state"):
+        checkpoint.restore_training_state(path2, params_like={"x": jnp.zeros(4)})
+
+
+def test_publish_rotates_latest_and_prunes(tmp_path):
+    d = str(tmp_path / "ckpts")
+    key = jax.random.key(0)
+    for rnd in (10, 20, 30):
+        params = {"x": jnp.full((4,), float(rnd))}
+        checkpoint.publish(
+            d, params=params, server_state=None, key=key, round=rnd, keep=2)
+    latest = checkpoint.latest_checkpoint(d)
+    assert latest is not None and latest.endswith("ckpt_00000030.npz")
+    snaps = sorted(f for f in os.listdir(d)
+                   if f.startswith("ckpt_") and f.endswith(".npz"))
+    assert snaps == ["ckpt_00000020.npz", "ckpt_00000030.npz"]  # keep=2
+    rp, _, _, rnd = checkpoint.restore_training_state(
+        latest, params_like={"x": jnp.zeros(4)})
+    assert rnd == 30 and float(np.asarray(rp["x"])[0]) == 30.0
+
+
+def test_torn_write_leaves_previous_snapshot_loadable(tmp_path, monkeypatch):
+    """A crash mid-save (np.savez raising after the tmp file opened) must
+    leave the LATEST pointer and the previous snapshot fully intact — the
+    atomic tmp-rename contract the serving loop relies on."""
+    d = str(tmp_path / "ckpts")
+    params = {"x": jnp.ones((4,))}
+    checkpoint.publish(
+        d, params=params, server_state=None, key=jax.random.key(0), round=1)
+    before = checkpoint.latest_checkpoint(d)
+
+    def torn_savez(f, **arrs):
+        f.write(b"partial garbage")
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", torn_savez)
+    with pytest.raises(OSError, match="disk full"):
+        checkpoint.publish(
+            d, params=params, server_state=None, key=jax.random.key(0), round=2)
+    monkeypatch.undo()
+
+    assert checkpoint.latest_checkpoint(d) == before
+    rp, _, _, rnd = checkpoint.restore_training_state(
+        before, params_like={"x": jnp.zeros(4)})
+    assert rnd == 1 and _tree_equal(params, rp)
+    # no stray tmp files survive the failed publish
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
